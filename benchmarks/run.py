@@ -1,0 +1,51 @@
+"""Benchmark driver: ``python -m benchmarks.run [--only name]``.
+
+One benchmark per paper table/claim:
+  query_time   — §5 demo claim: seconds-vs-hours, index vs scan
+  accuracy     — §1/§4.1 claim: DBranch quality ~ DT/RF
+  index_build  — §4 preprocessing step (b)
+  extraction   — §3 preprocessing step (a), ViT-T throughput
+  kernel       — Pallas kernel micro-costs (search-step roofline inputs)
+  roofline     — deliverable (g): 3-term roofline per dry-run cell
+
+Output: CSV lines ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (accuracy, extraction, index_build, kernel_bench,
+                            query_time, roofline)
+    benches = {
+        "query_time": query_time.run,
+        "accuracy": accuracy.run,
+        "index_build": index_build.run,
+        "extraction": extraction.run,
+        "kernel": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        t0 = time.time()
+        try:
+            benches[name]()
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,62 @@
+"""Batched query serving demo (the paper's deployed "search application").
+
+    PYTHONPATH=src python examples/serve_search.py
+
+Builds the engine once (offline phase), starts the threaded QueryServer,
+submits a concurrent stream of user queries for different object classes
+(including the refinement round-trip), and prints latency statistics —
+the offline analogue of https://web.rapid.earth.
+"""
+import time
+
+import numpy as np
+
+from repro.core.engine import SearchEngine
+from repro.data.synthetic import (CLASS_IDS, CLASSES, PatchDatasetConfig,
+                                  generate_patches, handcrafted_features)
+from repro.serve.engine import QueryRequest, QueryServer
+
+
+def main():
+    data = generate_patches(PatchDatasetConfig(n_patches=30_000, seed=2))
+    feats = handcrafted_features(data["images"])
+    labels = data["labels"]
+    engine = SearchEngine(feats, n_subsets=24, subset_dim=6, seed=2)
+    print(f"[offline] {engine.index_stats()}")
+
+    server = QueryServer(engine, max_batch=4)
+    server.start()
+    rng = np.random.default_rng(0)
+
+    # a mixed stream: different users, classes and models
+    work = []
+    for i, (cls_name, model) in enumerate([
+            ("forest", "dbranch"), ("water", "dbranch"),
+            ("forest", "dbens"), ("solar_panel", "dbens"),
+            ("water", "knn"), ("forest", "dtree"),
+            ("water", "dbens"), ("solar_panel", "dbranch")]):
+        cls = CLASS_IDS[cls_name]
+        pos = rng.choice(np.nonzero(labels == cls)[0], 15, replace=False)
+        neg = rng.choice(np.nonzero(labels != cls)[0], 100, replace=False)
+        kw = dict(n_models=10) if model in ("dbens", "rforest") else {}
+        work.append((cls_name, model,
+                     server.submit(QueryRequest(i, pos, neg, model, kw))))
+
+    t0 = time.perf_counter()
+    for cls_name, model, pending in work:
+        resp = pending.get(timeout=600)
+        if not resp.ok:
+            print(f"  {cls_name:12s} {model:8s} ERROR {resp.error}")
+            continue
+        r = resp.result
+        cls = CLASS_IDS[cls_name]
+        prec = (labels[r.ids] == cls).mean() if r.n_found else 0.0
+        print(f"  {cls_name:12s} {model:8s} {r.n_found:6d} found  "
+              f"{1e3 * resp.latency_s:7.1f} ms  precision {prec:.2f}")
+    print(f"[serve] stream completed in {time.perf_counter() - t0:.2f}s; "
+          f"stats: {server.summary()}")
+    server.close()
+
+
+if __name__ == "__main__":
+    main()

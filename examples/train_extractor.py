@@ -1,0 +1,112 @@
+"""Train a feature extractor end to end, then plug it into the engine.
+
+    PYTHONPATH=src python examples/train_extractor.py [--steps 300]
+
+Two training modes, matching the paper's offline phase:
+  * ``--mode dino``  (default): self-supervised DINO on synthetic patches
+    with the paper's ViT-T (reduced size for CPU), then bulk-extract
+    features and run a search query against them.
+  * ``--mode lm``: train a ~100M-parameter causal LM (the internlm2
+    family config scaled to ~100M) for a few hundred steps on the
+    synthetic token stream — the "assigned architectures as extractor
+    backbones" path, with checkpoint/restart.
+"""
+import argparse
+import logging
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import DataConfig
+from repro.data.synthetic import (CLASS_IDS, PatchDatasetConfig,
+                                  generate_patches)
+from repro.models.common import ParallelCtx
+
+
+def run_dino(steps: int) -> None:
+    import jax.numpy as jnp
+    from repro.core.engine import SearchEngine
+    from repro.features.dino import init_dino, make_dino_step
+    from repro.features.extract import extract_catalog, vit_feature_fn
+
+    cfg = ModelConfig(name="vit-t-mini", family="vit", num_layers=4,
+                      d_model=96, num_heads=3, num_kv_heads=3, head_dim=32,
+                      d_ff=384, vocab_size=0, mlp_gated=False,
+                      mlp_activation="gelu")
+    image_size, patch_size = 32, 8
+    ctx = ParallelCtx()
+    data = generate_patches(PatchDatasetConfig(n_patches=2048,
+                                               patch_size=image_size, seed=1))
+    imgs = data["images"]
+
+    state = init_dino(jax.random.PRNGKey(0), cfg, image_size=image_size,
+                      patch_size=patch_size)
+    step = jax.jit(make_dino_step(cfg, image_size=image_size,
+                                  patch_size=patch_size, ctx=ctx))
+    print(f"[dino] training ViT ({sum(x.size for x in jax.tree.leaves(state.student)):,} params) "
+          f"for {steps} steps ...")
+    B = 64
+    t0 = time.perf_counter()
+    for i in range(steps):
+        batch = imgs[(i * B) % len(imgs):(i * B) % len(imgs) + B]
+        if len(batch) < B:
+            batch = imgs[:B]
+        state, m = step(state, jax.numpy.asarray(batch), jax.random.PRNGKey(i))
+        if i % max(steps // 10, 1) == 0:
+            print(f"  step {i:4d}  dino loss {float(m['loss']):.4f}")
+    print(f"[dino] {steps} steps in {time.perf_counter() - t0:.1f}s")
+
+    print("[extract] embedding the catalog with the trained student ...")
+    fn = vit_feature_fn(cfg, ctx, patch_size=patch_size)
+    feats = extract_catalog(state.student, imgs, fn, batch=128)
+    feats = (feats - feats.mean(0)) / (feats.std(0) + 1e-6)
+
+    engine = SearchEngine(feats, n_subsets=16, subset_dim=6, seed=0)
+    cls = CLASS_IDS["water"]
+    rng = np.random.default_rng(0)
+    pos = rng.choice(np.nonzero(data["labels"] == cls)[0], 15, replace=False)
+    neg = rng.choice(np.nonzero(data["labels"] != cls)[0], 80, replace=False)
+    res = engine.query(pos, neg, model="dbens", n_models=10)
+    prec = (data["labels"][res.ids] == cls).mean() if res.n_found else 0.0
+    print(f"[search] {res.summary()}  precision={prec:.2f} "
+          f"(base rate {(data['labels'] == cls).mean():.2f})")
+
+
+def run_lm(steps: int, checkpoint_dir: str) -> None:
+    from repro.train.trainer import Trainer
+
+    # ~100M params: 12L x 768d x 3072ff, vocab 8192
+    cfg = ModelConfig(name="lm-100m", family="dense", num_layers=12,
+                      d_model=768, num_heads=12, num_kv_heads=4, d_ff=3072,
+                      vocab_size=8192, param_dtype="float32",
+                      compute_dtype="float32")
+    print(f"[lm] {cfg.name}: {cfg.param_count() / 1e6:.0f}M params, "
+          f"{steps} steps")
+    tc = TrainConfig(learning_rate=3e-4, warmup_steps=20, total_steps=steps,
+                     z_loss=0.0, remat="none")
+    dc = DataConfig(seq_len=256, global_batch=8, vocab_size=cfg.vocab_size)
+    tr = Trainer(cfg, tc, dc, checkpoint_dir=checkpoint_dir,
+                 checkpoint_every=100, step_deadline_s=900)
+    state, report = tr.run(steps, log_every=max(steps // 10, 1))
+    print(f"[lm] loss {report.losses[0]:.3f} -> {report.final_loss:.3f}  "
+          f"({report.tokens_per_s:,.0f} tokens/s, "
+          f"resumed_from={report.resumed_from})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="dino", choices=["dino", "lm"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO)
+    if args.mode == "dino":
+        run_dino(args.steps)
+    else:
+        run_lm(args.steps, args.checkpoint_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""The paper's own feature extractor: ViT-T/16, DINO self-supervised.
+
+RapidEarth trains a ViT-T (12L, d=192, 3 heads, d_ff=768) with DINO on
+400k aerial patches and extracts 384 features per patch (the paper reports
+384-d vectors — CLS + mean-pooled patch token concatenation of the 192-d
+trunk). This config drives features/vit.py, not models/lm.py.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rapidearth-vit-t",
+    family="vit",
+    num_layers=12,
+    d_model=192,
+    num_heads=3,
+    num_kv_heads=3,
+    head_dim=64,
+    d_ff=768,
+    mlp_activation="gelu",
+    mlp_gated=False,
+    vocab_size=0,
+    input_mode="images",
+    source="paper §3 (ViT-T + DINO, 384 features/patch)",
+)
+
+# Feature dimensionality the search engine indexes (paper §3).
+FEATURE_DIM = 384
+PATCH_SIZE = 16
+IMAGE_SIZE = 64   # reduced stand-in for the 400x400 patches (see DESIGN.md)

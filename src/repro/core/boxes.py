@@ -1,0 +1,64 @@
+"""Multidimensional boxes — the common currency of the whole engine.
+
+A box is a conjunction of half-open interval predicates
+``lo[d] < x[d] <= hi[d]`` over a feature subset (unconstrained dims use
+(-inf, +inf)). DBranch models, decision-tree positive leaves and range
+queries are all expressed as (lo, hi) arrays, so one scan/index path
+serves every model (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class BoxSet:
+    """boxes on a feature subset: lo/hi [n_boxes, d'], dims [d'] global ids."""
+    lo: np.ndarray
+    hi: np.ndarray
+    dims: np.ndarray          # indices into the full feature space
+    subset_id: int = -1       # which pre-built index answers these boxes
+
+    @property
+    def n_boxes(self) -> int:
+        return int(self.lo.shape[0])
+
+    def to_full(self, n_features: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Expand to full-width (lo, hi) with open bounds elsewhere."""
+        lo = np.full((self.n_boxes, n_features), -np.inf, np.float32)
+        hi = np.full((self.n_boxes, n_features), np.inf, np.float32)
+        lo[:, self.dims] = self.lo
+        hi[:, self.dims] = self.hi
+        return lo, hi
+
+    def contains(self, x: np.ndarray) -> np.ndarray:
+        """x: [N, D_full] -> [N] membership counts."""
+        xs = x[:, self.dims]                                  # [N, d']
+        inside = (xs[:, None, :] > self.lo[None]) & (xs[:, None, :] <= self.hi[None])
+        return inside.all(-1).sum(-1)
+
+    def concatenate(self, other: "BoxSet") -> "BoxSet":
+        assert np.array_equal(self.dims, other.dims)
+        return BoxSet(np.concatenate([self.lo, other.lo]),
+                      np.concatenate([self.hi, other.hi]),
+                      self.dims, self.subset_id)
+
+
+def boxes_contain(x: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Full-width membership counts (numpy oracle used by tests)."""
+    inside = (x[:, None, :] > lo[None]) & (x[:, None, :] <= hi[None])
+    return inside.all(-1).sum(-1)
+
+
+def merge_boxsets(sets: Sequence[BoxSet], n_features: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Union of heterogeneous-subset box sets as full-width (lo, hi)."""
+    los, his = [], []
+    for s in sets:
+        lo, hi = s.to_full(n_features)
+        los.append(lo)
+        his.append(hi)
+    return np.concatenate(los), np.concatenate(his)

@@ -1,0 +1,384 @@
+"""Decision branches (DBranch / DBEns) — the paper's classifier.
+
+A decision branch model is a *union of boxes*: only root->positive-leaf
+paths of a CART-style tree are materialised, each path's conjunction of
+orthogonal splits being one box. Index-awareness restricts every box to
+the dims of ONE pre-built feature subset, so inference is a handful of
+range queries against that subset's index (paper §2 / VLDB'23 [8]).
+
+Two trainers, same algorithm:
+  * fit_dbranch      — numpy, recursive (reference; arbitrary sizes)
+  * fit_dbranch_jax  — fixed-shape JAX (jit + vmap for the 25-model
+    ensemble; trains on-device inside the serving path)
+
+Box expansion: positive-leaf boxes are tightened to the positive bounding
+box, then each face is pushed halfway toward the nearest excluded
+negative (or to the node region / feature range). This recovers the
+recall-friendly behaviour the engine needs to *discover* new objects.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.boxes import BoxSet
+
+# ======================================================================
+# numpy reference trainer
+# ======================================================================
+
+
+def _gini_gain(y_left: np.ndarray, y_right: np.ndarray) -> float:
+    def gini(y):
+        if len(y) == 0:
+            return 0.0
+        p = y.mean()
+        return 2.0 * p * (1.0 - p)
+    n = len(y_left) + len(y_right)
+    return gini(np.concatenate([y_left, y_right])) - (
+        len(y_left) / n * gini(y_left) + len(y_right) / n * gini(y_right))
+
+
+def _best_split(x: np.ndarray, y: np.ndarray) -> Tuple[int, float, float]:
+    """x: [n, d'] node samples; y: [n] 0/1. Returns (dim, thresh, gain)."""
+    best = (-1, 0.0, 0.0)
+    for d in range(x.shape[1]):
+        order = np.argsort(x[:, d], kind="stable")
+        xv, yv = x[order, d], y[order]
+        distinct = np.nonzero(np.diff(xv) > 0)[0]
+        for i in distinct:
+            t = 0.5 * (xv[i] + xv[i + 1])
+            gain = _gini_gain(yv[: i + 1], yv[i + 1:])
+            if gain > best[2]:
+                best = (d, float(t), float(gain))
+    return best
+
+
+def _expand_box(plo, phi, neg, rlo, rhi, frange):
+    """Push each face halfway toward the nearest excluded negative.
+
+    plo/phi: positive bbox [d']; neg: [m, d'] node negatives; rlo/rhi:
+    node region; frange: (lo, hi) global feature range [d'] each."""
+    d = plo.shape[0]
+    lo, hi = plo.copy(), phi.copy()
+    for j in range(d):
+        # negatives that the box (on other dims) would contain
+        if len(neg):
+            others = np.ones(len(neg), bool)
+            for oj in range(d):
+                if oj == j:
+                    continue
+                others &= (neg[:, oj] > lo[oj]) & (neg[:, oj] <= hi[oj])
+            below = neg[others & (neg[:, j] <= plo[j]), j]
+            above = neg[others & (neg[:, j] > phi[j]), j]
+        else:
+            below = above = np.empty((0,))
+        lo_lim = max(below.max() if len(below) else -np.inf, rlo[j], frange[0][j])
+        hi_lim = min(above.min() if len(above) else np.inf, rhi[j], frange[1][j])
+        lo[j] = 0.5 * (plo[j] + lo_lim) if np.isfinite(lo_lim) else plo[j]
+        hi[j] = 0.5 * (phi[j] + hi_lim) if np.isfinite(hi_lim) else phi[j]
+    return lo, hi
+
+
+def fit_dbranch(
+    x_pos: np.ndarray,
+    x_neg: np.ndarray,
+    dims: np.ndarray,
+    *,
+    max_depth: int = 12,
+    expand: bool = True,
+    feature_range: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+    subset_id: int = -1,
+) -> BoxSet:
+    """Grow decision branches on the subset ``dims``; return the box union."""
+    xp = np.asarray(x_pos, np.float32)[:, dims]
+    xn = np.asarray(x_neg, np.float32)[:, dims]
+    d = len(dims)
+    if feature_range is None:
+        allx = np.concatenate([xp, xn]) if len(xn) else xp
+        feature_range = (allx.min(0), allx.max(0))
+    boxes_lo: List[np.ndarray] = []
+    boxes_hi: List[np.ndarray] = []
+
+    def emit(p, n, rlo, rhi):
+        plo, phi = p.min(0), p.max(0)
+        # half-open boxes: nudge lo below the smallest positive
+        plo = plo - 1e-6 * (np.abs(plo) + 1.0)
+        if expand:
+            lo, hi = _expand_box(plo, phi, n, rlo, rhi, feature_range)
+        else:
+            lo, hi = plo, phi
+        boxes_lo.append(lo)
+        boxes_hi.append(hi)
+
+    def grow(p, n, rlo, rhi, depth):
+        if len(p) == 0:
+            return
+        # drop negatives already outside the positive bounding region
+        if len(n):
+            plo, phi = p.min(0), p.max(0)
+            keep = ((n > plo[None] - 1e-6) & (n <= phi[None])).all(1)
+            n_in = n[keep]
+        else:
+            n_in = n
+        if len(n_in) == 0 or depth >= max_depth:
+            emit(p, n, rlo, rhi)
+            return
+        x = np.concatenate([p, n_in])
+        y = np.concatenate([np.ones(len(p)), np.zeros(len(n_in))])
+        dim, t, gain = _best_split(x, y)
+        if dim < 0 or gain <= 0:
+            emit(p, n, rlo, rhi)
+            return
+        # children keep ALL region negatives (not just bbox-interior ones):
+        # a negative dropped here could otherwise be swallowed by a
+        # descendant's expanded box
+        lmask_p, lmask_n = p[:, dim] <= t, n[:, dim] <= t
+        llo, lhi = rlo.copy(), rhi.copy()
+        lhi[dim] = min(lhi[dim], t)
+        rlo2, rhi2 = rlo.copy(), rhi.copy()
+        rlo2[dim] = max(rlo2[dim], t)
+        grow(p[lmask_p], n[lmask_n], llo, lhi, depth + 1)
+        grow(p[~lmask_p], n[~lmask_n], rlo2, rhi2, depth + 1)
+
+    grow(xp, xn, np.full(d, -np.inf), np.full(d, np.inf), 0)
+    if not boxes_lo:
+        return BoxSet(np.zeros((0, d), np.float32), np.zeros((0, d), np.float32),
+                      np.asarray(dims), subset_id)
+    return BoxSet(np.stack(boxes_lo).astype(np.float32),
+                  np.stack(boxes_hi).astype(np.float32),
+                  np.asarray(dims), subset_id)
+
+
+def fit_dbranch_best_subset(
+    x_pos: np.ndarray,
+    x_neg: np.ndarray,
+    subsets: np.ndarray,
+    *,
+    max_depth: int = 12,
+    expand: bool = True,
+    candidates: Optional[Sequence[int]] = None,
+) -> BoxSet:
+    """Index-awareness: try candidate subsets, keep the best model.
+
+    Score: fewest boxes (simplest consistent hypothesis), tie-broken by
+    total box volume margin (larger expansion headroom generalises).
+    """
+    cand = list(candidates) if candidates is not None else range(len(subsets))
+    best: Optional[BoxSet] = None
+    best_score = None
+    for k in cand:
+        bs = fit_dbranch(x_pos, x_neg, subsets[k], max_depth=max_depth,
+                         expand=expand, subset_id=k)
+        if bs.n_boxes == 0:
+            continue
+        tr_counts = bs.contains(np.asarray(x_pos, np.float32))
+        fn = int((tr_counts == 0).sum())          # training positives missed
+        score = (fn, bs.n_boxes)
+        if best_score is None or score < best_score:
+            best, best_score = bs, score
+    assert best is not None, "no subset produced boxes"
+    return best
+
+
+def fit_dbens(
+    x_pos: np.ndarray,
+    x_neg: np.ndarray,
+    subsets: np.ndarray,
+    *,
+    n_models: int = 25,
+    subset_candidates: int = 5,
+    max_depth: int = 12,
+    expand: bool = True,
+    seed: int = 0,
+) -> List[BoxSet]:
+    """DBEns: bootstrapped positives/negatives + random subset candidates."""
+    rng = np.random.default_rng(seed)
+    models = []
+    for m in range(n_models):
+        ip = rng.integers(0, len(x_pos), len(x_pos))
+        ineg = rng.integers(0, len(x_neg), len(x_neg)) if len(x_neg) else []
+        cand = rng.choice(len(subsets), size=min(subset_candidates, len(subsets)),
+                          replace=False)
+        models.append(fit_dbranch_best_subset(
+            x_pos[ip], x_neg[ineg] if len(x_neg) else x_neg, subsets,
+            max_depth=max_depth, expand=expand, candidates=cand))
+    return models
+
+
+# ======================================================================
+# JAX trainer (fixed shapes; jit + vmap over ensemble members)
+# ======================================================================
+
+@functools.partial(jax.jit, static_argnames=("max_nodes", "max_depth", "expand"))
+def fit_dbranch_jax(
+    xp: jax.Array,                 # [P, d'] positives (on subset dims)
+    xn: jax.Array,                 # [Ng, d'] negatives
+    frange_lo: jax.Array,          # [d'] global feature min
+    frange_hi: jax.Array,          # [d'] global feature max
+    *,
+    max_nodes: int = 64,
+    max_depth: int = 12,
+    expand: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (lo [max_nodes, d'], hi, valid [max_nodes] bool).
+
+    Same growth rule as fit_dbranch, expressed as a bounded worklist:
+    node state = (pos mask, neg mask, region lo/hi, depth). Each
+    iteration pops one node, either emits a box or splits it.
+    """
+    p_cnt, d = xp.shape
+    n_cnt = xn.shape[0]
+    NEG_BIG = jnp.float32(-3e38)
+    POS_BIG = jnp.float32(3e38)
+
+    # worklist arrays
+    wl_pmask = jnp.zeros((max_nodes, p_cnt), bool).at[0].set(True)
+    wl_nmask = jnp.zeros((max_nodes, n_cnt), bool).at[0].set(True)
+    wl_rlo = jnp.full((max_nodes, d), NEG_BIG).at[0].set(jnp.full(d, NEG_BIG))
+    wl_rhi = jnp.full((max_nodes, d), POS_BIG)
+    wl_depth = jnp.zeros((max_nodes,), jnp.int32)
+    wl_live = jnp.zeros((max_nodes,), bool).at[0].set(True)
+
+    out_lo = jnp.zeros((max_nodes, d), jnp.float32)
+    out_hi = jnp.zeros((max_nodes, d), jnp.float32)
+    out_valid = jnp.zeros((max_nodes,), bool)
+
+    def masked_min(x, m, axis=0):
+        return jnp.min(jnp.where(m, x, POS_BIG), axis=axis)
+
+    def masked_max(x, m, axis=0):
+        return jnp.max(jnp.where(m, x, NEG_BIG), axis=axis)
+
+    def gini_best_split(pmask, nmask):
+        """Vectorised CART split over all dims x all sample thresholds."""
+        x_all = jnp.concatenate([xp, xn], 0)                  # [P+Ng, d]
+        y_all = jnp.concatenate([jnp.ones(p_cnt), jnp.zeros(n_cnt)])
+        m_all = jnp.concatenate([pmask, nmask])
+        # thresholds: every sample value (x <= t split); [P+Ng, d]
+        t_cand = jnp.where(m_all[:, None], x_all, POS_BIG)
+        # counts left of each threshold per dim
+        def gain_for(t):                                       # t: [d]
+            left = x_all <= t[None, :]                         # [n, d]
+            m = m_all[:, None]
+            nl = (left & m).sum(0)
+            nr = (~left & m).sum(0)
+            pl = ((left & m) * y_all[:, None]).sum(0)
+            pr = ((~left & m) * y_all[:, None]).sum(0)
+            def gini(p, n):
+                tot = jnp.maximum(n, 1)
+                q = p / tot
+                return 2 * q * (1 - q)
+            n_tot = jnp.maximum(nl + nr, 1)
+            parent = gini(pl + pr, nl + nr)
+            child = nl / n_tot * gini(pl, nl) + nr / n_tot * gini(pr, nr)
+            valid = (nl > 0) & (nr > 0)
+            return jnp.where(valid, parent - child, -1.0)      # [d]
+        gains = jax.vmap(gain_for)(t_cand)                     # [P+Ng, d]
+        gains = jnp.where(m_all[:, None], gains, -1.0)
+        flat = jnp.argmax(gains)
+        i, dim = flat // d, flat % d
+        return dim, x_all[i, dim], gains[i, dim]
+
+    def emit_box(pmask, nmask, rlo, rhi):
+        plo = masked_min(xp, pmask[:, None])
+        phi = masked_max(xp, pmask[:, None])
+        plo = plo - 1e-6 * (jnp.abs(plo) + 1.0)
+        if not expand:
+            return plo, phi
+
+        # sequential per-face expansion (corner-safe, mirrors numpy):
+        # face j sees bounds already expanded for faces < j
+        def face(j, lohi):
+            lo, hi = lohi
+            for_dim = jnp.arange(d) != j
+            inside_others = jnp.all(
+                jnp.where(for_dim[None, :],
+                          (xn > lo[None]) & (xn <= hi[None]), True), axis=1)
+            cand = nmask & inside_others
+            below = jnp.where(cand & (xn[:, j] <= plo[j]), xn[:, j], NEG_BIG).max()
+            above = jnp.where(cand & (xn[:, j] > phi[j]), xn[:, j], POS_BIG).min()
+            lo_lim = jnp.maximum(jnp.maximum(below, rlo[j]), frange_lo[j])
+            hi_lim = jnp.minimum(jnp.minimum(above, rhi[j]), frange_hi[j])
+            newlo = jnp.where(lo_lim > NEG_BIG / 2, 0.5 * (plo[j] + lo_lim), plo[j])
+            newhi = jnp.where(hi_lim < POS_BIG / 2, 0.5 * (phi[j] + hi_lim), phi[j])
+            return lo.at[j].set(newlo), hi.at[j].set(newhi)
+
+        lo, hi = jax.lax.fori_loop(0, d, face, (plo, phi))
+        return lo, hi
+
+    def body(state):
+        (wl_pmask, wl_nmask, wl_rlo, wl_rhi, wl_depth, wl_live,
+         out_lo, out_hi, out_valid, n_alloc) = state
+        node = jnp.argmax(wl_live)                             # pop first live
+        pmask = wl_pmask[node]
+        nmask_all = wl_nmask[node]
+        rlo, rhi = wl_rlo[node], wl_rhi[node]
+        depth = wl_depth[node]
+        wl_live = wl_live.at[node].set(False)
+
+        # negatives inside the positive bbox only
+        plo = masked_min(xp, pmask[:, None])
+        phi = masked_max(xp, pmask[:, None])
+        n_in = nmask_all & jnp.all(
+            (xn > plo[None] - 1e-6) & (xn <= phi[None]), axis=1)
+        has_pos = pmask.any()
+        pure = ~n_in.any()
+        full = n_alloc + 2 > max_nodes
+        do_emit = has_pos & (pure | (depth >= max_depth) | full)
+
+        dim, t, gain = gini_best_split(pmask, n_in)
+        can_split = has_pos & ~do_emit & (gain > 0)
+        do_emit = has_pos & ~can_split
+
+        lo_e, hi_e = emit_box(pmask, nmask_all, rlo, rhi)
+        out_lo = jnp.where(do_emit, out_lo.at[node].set(lo_e), out_lo)
+        out_hi = jnp.where(do_emit, out_hi.at[node].set(hi_e), out_hi)
+        out_valid = out_valid.at[node].set(do_emit | out_valid[node])
+
+        # split into children at slots (n_alloc, n_alloc+1)
+        la, ra = n_alloc, n_alloc + 1
+        lmask_p = pmask & (xp[:, dim] <= t)
+        rmask_p = pmask & ~(xp[:, dim] <= t)
+        lmask_n = nmask_all & (xn[:, dim] <= t)     # keep all region negatives
+        rmask_n = nmask_all & ~(xn[:, dim] <= t)
+        lrhi = rhi.at[dim].min(t)
+        rrlo = rlo.at[dim].max(t)
+
+        def put(arrs, idx, vals):
+            return [a.at[idx].set(jnp.where(can_split, v, a[idx]))
+                    for a, v in zip(arrs, vals)]
+
+        wl_pmask, wl_nmask, wl_rlo, wl_rhi = put(
+            [wl_pmask, wl_nmask, wl_rlo, wl_rhi], la,
+            [lmask_p, lmask_n, rlo, lrhi])
+        wl_pmask, wl_nmask, wl_rlo, wl_rhi = put(
+            [wl_pmask, wl_nmask, wl_rlo, wl_rhi], ra,
+            [rmask_p, rmask_n, rrlo, rhi])
+        wl_depth = wl_depth.at[la].set(depth + 1).at[ra].set(depth + 1)
+        wl_live = wl_live.at[la].set(can_split & lmask_p.any())
+        wl_live = wl_live.at[ra].set(can_split & rmask_p.any())
+        n_alloc = jnp.where(can_split, n_alloc + 2, n_alloc)
+        return (wl_pmask, wl_nmask, wl_rlo, wl_rhi, wl_depth, wl_live,
+                out_lo, out_hi, out_valid, n_alloc)
+
+    def cond(state):
+        return state[5].any()
+
+    state = (wl_pmask, wl_nmask, wl_rlo, wl_rhi, wl_depth, wl_live,
+             out_lo, out_hi, out_valid, jnp.int32(1))
+    state = jax.lax.while_loop(cond, body, state)
+    return state[6], state[7], state[8]
+
+
+def predict_boxes_jax(x: jax.Array, lo: jax.Array, hi: jax.Array,
+                      valid: jax.Array) -> jax.Array:
+    """Membership counts for fixed-shape JAX boxes (invalid boxes = never)."""
+    inside = (x[:, None, :] > lo[None]) & (x[:, None, :] <= hi[None])
+    return (jnp.all(inside, -1) & valid[None]).sum(-1)

@@ -1,0 +1,216 @@
+"""The RapidEarth search engine — paper §4 "Search application".
+
+Orchestrates the full query-processing path:
+
+  offline:  features [N, D]  ->  K feature subsets  ->  K zone-map indexes
+  online :  (pos ids, neg ids, model)  ->  fit classifier  ->
+            boxes  ->  range queries on the pre-built indexes  ->
+            ranked object ids + query statistics
+
+Five search models (paper §4.1), all returning the same QueryResult:
+
+  dbranch   index-aware decision branches            (index path)
+  dbens     25-model decision-branch ensemble        (index path)
+  dtree     CART decision tree                       (full scan)
+  rforest   25-tree random forest                    (full scan)
+  knn       top-k nearest neighbours on one subset   (index rows, MXU)
+
+The scan-based models reuse the same box_scan kernel over the FULL
+feature matrix — the latency difference against the index path is purely
+which bytes each model touches, which is the paper's headline claim.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import knn as knn_mod
+from repro.core.boxes import BoxSet, merge_boxsets
+from repro.core.dbranch import fit_dbens, fit_dbranch_best_subset
+from repro.core.index import ZoneMapIndex, build_index, full_scan, query_index
+from repro.core.subsets import make_subsets
+from repro.core.trees import fit_decision_tree, fit_random_forest
+
+MODELS = ("dbranch", "dbens", "dtree", "rforest", "knn")
+
+
+@dataclass
+class QueryResult:
+    """What the web application receives back (paper §4, step 4)."""
+
+    model: str
+    ids: np.ndarray               # result row ids, ranked by confidence
+    scores: np.ndarray            # per-id confidence (box-membership votes)
+    train_time_s: float
+    query_time_s: float
+    stats: Dict = field(default_factory=dict)
+
+    @property
+    def n_found(self) -> int:
+        return int(len(self.ids))
+
+    def summary(self) -> str:
+        return (f"{self.model}: {self.n_found} objects in "
+                f"{1e3 * (self.train_time_s + self.query_time_s):.1f} ms "
+                f"(fit {1e3 * self.train_time_s:.1f} + "
+                f"query {1e3 * self.query_time_s:.1f})")
+
+
+class SearchEngine:
+    """End-to-end engine over an in-memory feature shard.
+
+    On a pod, each host holds one engine over its feature shard and
+    queries fan out (boxes are tiny); see serve/engine.py for the batched
+    multi-query front end and core/index.distributed_query for the
+    shard_map'd device path.
+    """
+
+    def __init__(
+        self,
+        features: np.ndarray,
+        *,
+        n_subsets: int = 32,
+        subset_dim: int = 6,
+        block: int = 1024,
+        seed: int = 0,
+        use_pallas: bool = True,
+    ):
+        self.x = np.ascontiguousarray(np.asarray(features, np.float32))
+        self.n, self.d = self.x.shape
+        self.use_pallas = use_pallas
+        t0 = time.perf_counter()
+        self.subsets = make_subsets(self.d, n_subsets, subset_dim, seed=seed)
+        self.indexes: List[ZoneMapIndex] = [
+            build_index(self.x, dims, block=block, subset_id=k)
+            for k, dims in enumerate(self.subsets)
+        ]
+        self.build_time_s = time.perf_counter() - t0
+        # global per-dim feature range (used by box expansion)
+        self.frange = (self.x.min(0), self.x.max(0))
+
+    # ------------------------------------------------------------------
+    def index_stats(self) -> Dict:
+        return {
+            "rows": self.n,
+            "dims": self.d,
+            "n_subsets": len(self.indexes),
+            "subset_dim": int(self.subsets.shape[1]),
+            "build_time_s": self.build_time_s,
+            "index_bytes": int(sum(ix.rows.nbytes for ix in self.indexes)),
+            "feature_bytes": int(self.x.nbytes),
+        }
+
+    # ------------------------------------------------------------------
+    def query(
+        self,
+        pos_ids: Sequence[int],
+        neg_ids: Sequence[int],
+        model: str = "dbranch",
+        *,
+        k_neighbors: int = 1000,
+        max_depth: int = 12,
+        n_models: int = 25,
+        seed: int = 0,
+        include_training: bool = False,
+    ) -> QueryResult:
+        """One user query: label sets in, ranked ids out."""
+        if model not in MODELS:
+            raise ValueError(f"unknown model {model!r}; choose from {MODELS}")
+        pos_ids = np.asarray(list(pos_ids), np.int64)
+        neg_ids = np.asarray(list(neg_ids), np.int64)
+        xp, xn = self.x[pos_ids], self.x[neg_ids]
+
+        t0 = time.perf_counter()
+        if model == "dbranch":
+            boxes = [fit_dbranch_best_subset(xp, xn, self.subsets,
+                                             max_depth=max_depth)]
+        elif model == "dbens":
+            boxes = fit_dbens(xp, xn, self.subsets, n_models=n_models,
+                              max_depth=max_depth, seed=seed)
+        elif model == "dtree":
+            xtr = np.concatenate([xp, xn])
+            ytr = np.concatenate([np.ones(len(xp)), np.zeros(len(xn))])
+            tree = fit_decision_tree(xtr, ytr, max_depth=max_depth)
+        elif model == "rforest":
+            xtr = np.concatenate([xp, xn])
+            ytr = np.concatenate([np.ones(len(xp)), np.zeros(len(xn))])
+            forest = fit_random_forest(xtr, ytr, n_trees=n_models,
+                                       max_depth=max_depth, seed=seed)
+        t_fit = time.perf_counter() - t0
+
+        # ---- inference ------------------------------------------------
+        t0 = time.perf_counter()
+        stats: Dict = {}
+        if model in ("dbranch", "dbens"):
+            counts, stats = self._index_inference(boxes)
+            stats["path"] = "index"
+        elif model == "knn":
+            k = min(k_neighbors, self.n)
+            ids_k, dists = knn_mod.knn_subset(self.indexes[0], xp, k=k)
+            counts = knn_mod.knn_vote(ids_k, self.n)
+            stats = {"path": "index", "bytes_touched": int(
+                self.indexes[0].rows.nbytes)}
+            t_fit = 0.0
+        else:
+            lo, hi = (tree.lo, tree.hi) if model == "dtree" else forest.boxes()
+            if len(lo) == 0:
+                counts = np.zeros(self.n, np.int32)
+            else:
+                counts = np.asarray(full_scan(self.x, lo, hi,
+                                              use_pallas=self.use_pallas))
+            stats = {"path": "scan", "bytes_touched": int(self.x.nbytes),
+                     "n_boxes": int(len(lo))}
+        t_query = time.perf_counter() - t0
+
+        found = np.nonzero(counts > 0)[0]
+        if not include_training:
+            found = found[~np.isin(found, np.concatenate([pos_ids, neg_ids]))]
+        order = np.argsort(-counts[found], kind="stable")
+        ids = found[order]
+        return QueryResult(model, ids, counts[ids].astype(np.float64),
+                           t_fit, t_query, stats)
+
+    # ------------------------------------------------------------------
+    def _index_inference(self, boxsets: List[BoxSet]):
+        """Range queries against the matching pre-built indexes.
+
+        Boxes are grouped per subset (each group answered by ONE index),
+        counts are summed across groups — every row's final score is its
+        total box-membership count across the ensemble."""
+        counts = np.zeros(self.n, np.int64)
+        agg = {"blocks_touched": 0, "blocks_total": 0, "bytes_touched": 0,
+               "n_boxes": 0, "n_range_queries": 0}
+        by_subset: Dict[int, List[BoxSet]] = {}
+        for bs in boxsets:
+            by_subset.setdefault(bs.subset_id, []).append(bs)
+        for sid, group in by_subset.items():
+            merged = group[0]
+            for g in group[1:]:
+                merged = merged.concatenate(g)
+            c, st = query_index(self.indexes[sid], merged,
+                                use_pallas=self.use_pallas)
+            counts += c
+            agg["blocks_touched"] += st["blocks_touched"]
+            agg["blocks_total"] += st["blocks_total"]
+            agg["bytes_touched"] += st["bytes_touched"]
+            agg["n_boxes"] += merged.n_boxes
+            agg["n_range_queries"] += merged.n_boxes
+        agg["scan_bytes_equiv"] = int(self.x.nbytes)
+        agg["bytes_saved_frac"] = 1.0 - agg["bytes_touched"] / max(
+            self.x.nbytes, 1)
+        return counts, agg
+
+    # ------------------------------------------------------------------
+    def refine(self, result: QueryResult, extra_pos: Sequence[int],
+               extra_neg: Sequence[int], prev_pos: Sequence[int],
+               prev_neg: Sequence[int], **kw) -> QueryResult:
+        """Paper §5: iterative refinement — add labels, re-query.
+
+        No index rebuild is needed (the index is label-independent);
+        only the (cheap) model fit and the range queries rerun."""
+        pos = list(prev_pos) + list(extra_pos)
+        neg = list(prev_neg) + list(extra_neg)
+        return self.query(pos, neg, model=result.model, **kw)

@@ -1,0 +1,46 @@
+"""k-nearest-neighbour baseline (the engine's 5th search model).
+
+The paper's kNN runs on a small feature subset so it can reuse the
+pre-built per-subset index; here the analogue is the Morton-ordered rows
+of a ZoneMapIndex — brute force over the subset dims via the l2dist
+Pallas kernel (MXU matmul), then top-k. A full-feature variant is also
+provided for accuracy comparisons.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.index import ZoneMapIndex
+from repro.kernels import ops as kops
+
+
+def knn_subset(index: ZoneMapIndex, queries_full: np.ndarray, k: int = 1000
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k over the index's subset dims. queries_full: [Q, D_full].
+    Returns (ids [Q, k] original row ids, dists [Q, k])."""
+    q = jnp.asarray(np.asarray(queries_full, np.float32)[:, index.dims])
+    rows = jnp.asarray(index.rows[: index.n_rows])
+    k = min(k, index.n_rows)
+    d, idx = kops.knn_topk(rows, q, k)
+    ids = index.perm[np.asarray(idx)]
+    return ids, np.asarray(d)
+
+
+def knn_full(x: np.ndarray, queries: np.ndarray, k: int = 1000
+             ) -> Tuple[np.ndarray, np.ndarray]:
+    d, idx = kops.knn_topk(jnp.asarray(np.asarray(x, np.float32)),
+                           jnp.asarray(np.asarray(queries, np.float32)),
+                           min(k, len(x)))
+    return np.asarray(idx), np.asarray(d)
+
+
+def knn_vote(ids: np.ndarray, n_rows: int) -> np.ndarray:
+    """Merge per-query neighbour lists into per-row vote counts."""
+    votes = np.zeros(n_rows, np.int32)
+    np.add.at(votes, ids.reshape(-1), 1)
+    return votes

@@ -1,0 +1,8 @@
+from repro.data.pipeline import DataConfig, PatchSource, Prefetcher, TokenSource
+from repro.data.synthetic import (CLASSES, CLASS_IDS, PatchDatasetConfig,
+                                  generate_patches, handcrafted_features)
+
+__all__ = [
+    "CLASSES", "CLASS_IDS", "DataConfig", "PatchDatasetConfig", "PatchSource",
+    "Prefetcher", "TokenSource", "generate_patches", "handcrafted_features",
+]

@@ -1,0 +1,138 @@
+"""DINO-lite self-supervised training for the ViT extractor (paper §3).
+
+Self-distillation with no labels [Caron et al., ICCV'21], reduced to its
+load-bearing parts so it trains on CPU in tests yet keeps the structure
+the paper relies on:
+
+  * student/teacher share architecture; teacher = EMA of student;
+  * two augmented views per image; cross-entropy between the teacher's
+    centered/sharpened targets on one view and the student on the other;
+  * centering (EMA of teacher logits) prevents collapse.
+
+Augmentations are jax-native (flips, channel jitter, crops-by-roll) so
+the whole step jits and shards like any train step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.features.vit import extract_features, init_vit
+from repro.models.common import ParallelCtx, dense_init
+
+PyTree = Any
+
+
+class DinoState(NamedTuple):
+    student: PyTree
+    teacher: PyTree
+    head_s: PyTree
+    head_t: PyTree
+    center: jax.Array
+    opt_m: PyTree                 # Adam moments over (student, head_s)
+    opt_v: PyTree
+    step: jax.Array
+
+
+def _init_head(key, in_dim: int, proj_dim: int, dtype=jnp.float32) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": dense_init(k1, (in_dim, in_dim), dtype),
+        "w2": dense_init(k2, (in_dim, proj_dim), dtype),
+    }
+
+
+def _head(p: PyTree, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ p["w1"])
+    h = h @ p["w2"]
+    return h / (jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-6)
+
+
+def init_dino(key, cfg: ModelConfig, *, image_size: int, patch_size: int,
+              proj_dim: int = 256) -> DinoState:
+    k1, k2 = jax.random.split(key)
+    student = init_vit(k1, cfg, image_size=image_size, patch_size=patch_size)
+    head_s = _init_head(k2, 2 * cfg.d_model, proj_dim)
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    return DinoState(
+        student=student,
+        teacher=jax.tree.map(jnp.copy, student),
+        head_s=head_s,
+        head_t=jax.tree.map(jnp.copy, head_s),
+        center=jnp.zeros((proj_dim,), jnp.float32),
+        opt_m=zeros((student, head_s)),
+        opt_v=zeros((student, head_s)),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def augment(rng: jax.Array, images: jax.Array) -> jax.Array:
+    """One stochastic view: flips + brightness/channel jitter + roll-crop."""
+    r = jax.random.split(rng, 4)
+    flip = jax.random.bernoulli(r[0], shape=(images.shape[0], 1, 1, 1))
+    images = jnp.where(flip, images[:, :, ::-1], images)
+    gain = 1.0 + 0.2 * jax.random.normal(r[1], (images.shape[0], 1, 1, 3))
+    bias = 0.1 * jax.random.normal(r[2], (images.shape[0], 1, 1, 3))
+    images = images * gain + bias
+    shift = jax.random.randint(r[3], (2,), -4, 5)
+    images = jnp.roll(images, (shift[0], shift[1]), axis=(1, 2))
+    return jnp.clip(images, 0.0, 1.0)
+
+
+def make_dino_step(cfg: ModelConfig, *, image_size: int, patch_size: int,
+                   ctx: ParallelCtx, lr: float = 1e-3,
+                   teacher_temp: float = 0.04, student_temp: float = 0.1,
+                   ema: float = 0.996, center_ema: float = 0.9):
+    """Returns dino_step(state, images, rng) -> (state, metrics)."""
+
+    def features(params, head, imgs):
+        f = extract_features(params, imgs, cfg, ctx, patch_size=patch_size)
+        return _head(head, f)
+
+    def loss_fn(trainables, teacher, head_t, center, imgs, rng):
+        student, head_s = trainables
+        r1, r2 = jax.random.split(rng)
+        v1, v2 = augment(r1, imgs), augment(r2, imgs)
+        t1 = jax.lax.stop_gradient(features(teacher, head_t, v1))
+        t2 = jax.lax.stop_gradient(features(teacher, head_t, v2))
+        s1 = features(student, head_s, v1)
+        s2 = features(student, head_s, v2)
+
+        def ce(t, s):
+            pt = jax.nn.softmax((t - center) / teacher_temp, -1)
+            ls = jax.nn.log_softmax(s / student_temp, -1)
+            return -(pt * ls).sum(-1).mean()
+
+        loss = 0.5 * (ce(t1, s2) + ce(t2, s1))
+        return loss, (t1 + t2).mean(0) / 2.0
+
+    def dino_step(state: DinoState, images: jax.Array, rng: jax.Array
+                  ) -> Tuple[DinoState, Dict[str, jax.Array]]:
+        (loss, batch_center), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)((state.student, state.head_s),
+                                   state.teacher, state.head_t, state.center,
+                                   images, rng)
+        step = state.step + 1
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.opt_m, grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.opt_v, grads)
+        sc = jnp.sqrt(1 - b2 ** step.astype(jnp.float32)) / (
+            1 - b1 ** step.astype(jnp.float32))
+
+        def upd(p, m_, v_):
+            return p - lr * sc * m_ / (jnp.sqrt(v_) + eps)
+
+        student, head_s = jax.tree.map(
+            upd, (state.student, state.head_s), m, v)
+        teacher = jax.tree.map(lambda t, s: ema * t + (1 - ema) * s,
+                               state.teacher, student)
+        head_t = jax.tree.map(lambda t, s: ema * t + (1 - ema) * s,
+                              state.head_t, head_s)
+        center = center_ema * state.center + (1 - center_ema) * batch_center
+        new = DinoState(student, teacher, head_s, head_t, center, m, v, step)
+        return new, {"loss": loss}
+
+    return dino_step

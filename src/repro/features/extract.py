@@ -1,0 +1,88 @@
+"""Bulk feature extraction — the offline catalog-embedding pass (paper §3).
+
+Embeds the whole patch catalog with the trained extractor: batches are
+host-sharded, the forward pass is pjit-sharded over the mesh, outputs are
+gathered to a [N, F] float32 matrix that feeds the index builder.
+
+Any backbone works as the extractor (DESIGN.md §5): the assigned LM archs
+plug in through ``lm_feature_fn`` (mean-pooled final hidden state), the
+paper's own ViT through ``vit_feature_fn``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.features.vit import extract_features
+from repro.models import lm
+from repro.models.common import ParallelCtx
+
+PyTree = Any
+
+
+def vit_feature_fn(cfg: ModelConfig, ctx: ParallelCtx, *, patch_size: int
+                   ) -> Callable:
+    def fn(params, images):
+        return extract_features(params, images, cfg, ctx,
+                                patch_size=patch_size)
+    return fn
+
+
+def lm_feature_fn(cfg: ModelConfig, ctx: ParallelCtx) -> Callable:
+    """Mean-pooled final hidden state of a causal LM backbone — the
+    arch-agnostic feature head used for the assigned architectures."""
+
+    def fn(params, tokens):
+        s = tokens.shape[1]
+        positions = jnp.arange(s)
+        x = lm.embed_inputs(params, tokens, cfg, ctx, positions)
+        x, _, _ = lm._stack_forward(params, x, cfg, ctx, mode="train",
+                                    positions=positions)
+        return x.mean(axis=1)                      # [B, d_model]
+    return fn
+
+
+def extract_catalog(
+    params: PyTree,
+    inputs: np.ndarray,
+    feature_fn: Callable,
+    *,
+    batch: int = 128,
+    donate: bool = False,
+) -> np.ndarray:
+    """Run ``feature_fn`` over the full catalog in fixed-size batches.
+
+    The tail batch is padded (and trimmed after) so the jitted function
+    compiles exactly once — on a pod this keeps every host in lockstep.
+    """
+    n = inputs.shape[0]
+    fn = jax.jit(feature_fn)
+    outs = []
+    for i in range(0, n, batch):
+        chunk = inputs[i:i + batch]
+        pad = batch - chunk.shape[0]
+        if pad:
+            chunk = np.concatenate(
+                [chunk, np.repeat(chunk[-1:], pad, axis=0)], axis=0)
+        f = np.asarray(fn(params, jnp.asarray(chunk)))
+        outs.append(f[: batch - pad])
+    return np.concatenate(outs, axis=0).astype(np.float32)
+
+
+def extraction_throughput(params, feature_fn, sample: np.ndarray,
+                          *, batch: int = 128, iters: int = 5) -> Dict:
+    """Patches/second of the jitted extractor (benchmarks/extraction.py)."""
+    fn = jax.jit(feature_fn)
+    x = jnp.asarray(np.repeat(sample[:1], batch, axis=0))
+    fn(params, x).block_until_ready()              # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(params, x)
+    out.block_until_ready()
+    dt = (time.perf_counter() - t0) / iters
+    return {"batch": batch, "s_per_batch": dt, "patches_per_s": batch / dt}

@@ -1,0 +1,111 @@
+"""ViT-T feature extractor — the paper's offline stage (§3).
+
+Encoder-only vision transformer (bidirectional attention, CLS token,
+learned positional embeddings). ``extract_features`` returns the paper's
+384-d vector per patch: concat(CLS, mean-pooled patch tokens) of the
+192-d trunk.
+
+Pure JAX; shards over a mesh via pjit (batch over `data`, heads/d_ff over
+`model`) using the same mshard helpers as the LM zoo.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParallelCtx, dense_init, mshard, rms_norm
+
+PyTree = Any
+
+
+def num_patches(image_size: int, patch_size: int) -> int:
+    return (image_size // patch_size) ** 2
+
+
+def init_vit(key, cfg: ModelConfig, *, image_size: int, patch_size: int,
+             dtype=jnp.float32) -> PyTree:
+    d = cfg.d_model
+    np_ = num_patches(image_size, patch_size)
+    ks = jax.random.split(key, 6)
+    in_dim = patch_size * patch_size * 3
+
+    def layer(k):
+        lk = jax.random.split(k, 6)
+        return {
+            "norm1": jnp.zeros((d,), dtype),
+            "attn": {
+                "wq": dense_init(lk[0], (d, cfg.q_dim), dtype),
+                "wk": dense_init(lk[1], (d, cfg.q_dim), dtype),
+                "wv": dense_init(lk[2], (d, cfg.q_dim), dtype),
+                "wo": dense_init(lk[3], (cfg.q_dim, d), dtype),
+            },
+            "norm2": jnp.zeros((d,), dtype),
+            "mlp": {
+                "w_in": dense_init(lk[4], (d, cfg.d_ff), dtype),
+                "w_out": dense_init(lk[5], (cfg.d_ff, d), dtype),
+            },
+        }
+
+    lkeys = jax.random.split(ks[0], cfg.num_layers)
+    return {
+        "patch_proj": dense_init(ks[1], (in_dim, d), dtype),
+        "patch_bias": jnp.zeros((d,), dtype),
+        "cls": (jax.random.normal(ks[2], (1, 1, d), jnp.float32) * 0.02).astype(dtype),
+        "pos": (jax.random.normal(ks[3], (1, np_ + 1, d), jnp.float32) * 0.02).astype(dtype),
+        "layers": jax.vmap(layer)(lkeys),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+
+
+def patchify(images: jax.Array, patch_size: int) -> jax.Array:
+    """[B, H, W, 3] -> [B, N, patch*patch*3]."""
+    b, h, w, c = images.shape
+    gh, gw = h // patch_size, w // patch_size
+    x = images.reshape(b, gh, patch_size, gw, patch_size, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, gh * gw, patch_size * patch_size * c)
+
+
+def _encoder_layer(p, x, cfg: ModelConfig, ctx: ParallelCtx) -> jax.Array:
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    q = (h @ p["attn"]["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (h @ p["attn"]["wk"]).reshape(b, s, cfg.num_heads, hd)
+    v = (h @ p["attn"]["wv"]).reshape(b, s, cfg.num_heads, hd)
+    q = mshard(q, ctx, ctx.dp, None, ctx.tp_axis, None)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * hd ** -0.5
+    probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+    attn = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, -1)
+    x = x + attn @ p["attn"]["wo"]
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    h = jax.nn.gelu(h @ p["mlp"]["w_in"])
+    h = mshard(h, ctx, ctx.dp, None, ctx.tp_axis)
+    return x + h @ p["mlp"]["w_out"]
+
+
+def vit_forward(params: PyTree, images: jax.Array, cfg: ModelConfig,
+                ctx: ParallelCtx, *, patch_size: int) -> jax.Array:
+    """[B, H, W, 3] -> token embeddings [B, N+1, d] (token 0 = CLS)."""
+    x = patchify(images, patch_size) @ params["patch_proj"] + params["patch_bias"]
+    b = x.shape[0]
+    cls = jnp.broadcast_to(params["cls"], (b, 1, x.shape[-1])).astype(x.dtype)
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+    x = mshard(x, ctx, ctx.dp, None, None)
+
+    def body(x, p):
+        return _encoder_layer(p, x, cfg, ctx), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def extract_features(params: PyTree, images: jax.Array, cfg: ModelConfig,
+                     ctx: ParallelCtx, *, patch_size: int) -> jax.Array:
+    """The engine's feature vector: concat(CLS, mean patch tokens) = 2*d
+    (= 384 for the paper's ViT-T d=192)."""
+    toks = vit_forward(params, images, cfg, ctx, patch_size=patch_size)
+    return jnp.concatenate([toks[:, 0], toks[:, 1:].mean(1)], axis=-1)

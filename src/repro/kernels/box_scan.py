@@ -1,0 +1,53 @@
+"""box_scan Pallas kernel — the paper's inference hot spot.
+
+Counts, for every database row, how many of the query boxes contain it
+(a row's count is the DBranch ensemble "confidence"; count > 0 is the
+binary prediction). This is the dense *refine* stage that runs over the
+blocks surviving zone-map pruning.
+
+TPU mapping: rows are tiled [TN, D] into VMEM; the (small) box set is
+resident in VMEM across the whole grid; the containment test is pure VPU
+work — (lo < x) & (x <= hi) reduced over D with a f32 sum (8x128 lanes,
+no MXU involvement). D is padded to a lane multiple by ops.py with
+(-inf, +inf) bounds so padding never changes containment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _box_scan_kernel(x_ref, lo_ref, hi_ref, out_ref):
+    """x: [TN, D]; lo/hi: [B, D]; out: [TN] int32 counts."""
+    x = x_ref[...]                                   # [TN, D]
+    lo = lo_ref[...]                                 # [B, D]
+    hi = hi_ref[...]
+    # [TN, B, D] containment; half-open (lo, hi]
+    inside = (x[:, None, :] > lo[None]) & (x[:, None, :] <= hi[None])
+    member = jnp.all(inside, axis=-1)                # [TN, B]
+    out_ref[...] = member.sum(-1).astype(jnp.int32)  # [TN]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def box_scan_pallas(x: jax.Array, lo: jax.Array, hi: jax.Array,
+                    *, tile_n: int = 1024, interpret: bool = True) -> jax.Array:
+    """x: [N, D] f32 (N % tile_n == 0, D % 128 == 0 — see ops.py),
+    lo/hi: [B, D]. Returns [N] int32 box-membership counts."""
+    n, d = x.shape
+    b = lo.shape[0]
+    grid = (n // tile_n,)
+    return pl.pallas_call(
+        _box_scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),   # row tile -> VMEM
+            pl.BlockSpec((b, d), lambda i: (0, 0)),        # boxes resident
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(x, lo, hi)

@@ -1,0 +1,116 @@
+"""Fused flash-attention Pallas kernel (TPU target, GQA-native).
+
+The backbone's serving hot spot. Online-softmax attention tiled for VMEM:
+Q tiles of [TQ, G, D] per (batch x kv-head) stay resident across the KV
+grid dimension; running (max, sum, acc) live in VMEM scratch; the
+[TQ, TK] score tile NEVER touches HBM — this kernel is what entitles the
+roofline model to exclude score-tensor traffic (hlo_analysis.py).
+
+Grid: (B * Hkv, nq, nk) with the KV dimension innermost ("arbitrary"
+semantics — sequential per core), causal blocks skipped via pl.when.
+
+GQA is native: the G query heads sharing one KV head ride in the Q tile,
+so MQA (G = Hq) and MHA (G = 1) are the same kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, causal: bool, q_chunk: int, kv_chunk: int, scale: float):
+    """q: [TQ, G, D]; k/v: [TK, D]; o: [TQ, G, D].
+    Scratch: acc [TQ, G, D] f32, m/l [TQ, G] f32."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: skip fully-masked blocks (top-right triangle)
+    run = True
+    if causal:
+        run = (qi + 1) * q_chunk - 1 >= ki * kv_chunk
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale         # [TQ, G, D]
+        k = k_ref[0].astype(jnp.float32)                 # [TK, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # [TQ, G, TK]
+        if causal:
+            qpos = qi * q_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_chunk, 1, kv_chunk), 0)
+            kpos = ki * kv_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_chunk, 1, kv_chunk), 2)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                              # [TQ, G]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])                # [TQ, G, TK]
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # [TQ, G, D]
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_chunk", "kv_chunk", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,            # [BH, S, G, D]  (BH = batch * kv_heads)
+    k: jax.Array,            # [BH, S, D]
+    v: jax.Array,            # [BH, S, D]
+    *,
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, s, g, d = q.shape
+    assert k.shape == (bh, s, d) and v.shape == (bh, s, d)
+    assert s % q_chunk == 0 and s % kv_chunk == 0, (s, q_chunk, kv_chunk)
+    nq, nk = s // q_chunk, s // kv_chunk
+    scale = d ** -0.5
+
+    kernel = functools.partial(_flash_kernel, causal=causal,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_chunk, g, d), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, kv_chunk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_chunk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_chunk, g, d), lambda b, i, j: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, g, d), q.dtype),
+        scratch_shapes=[
+            # acc / m / l persist across the (innermost) kv grid dimension
+            pltpu.VMEM((q_chunk, g, d), jnp.float32),
+            pltpu.VMEM((q_chunk, g), jnp.float32),
+            pltpu.VMEM((q_chunk, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

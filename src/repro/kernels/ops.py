@@ -1,0 +1,119 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles TPU-shape hygiene (row-tile padding, lane-multiple feature
+padding with open bounds) and falls back to interpret mode off-TPU so the
+same call sites work everywhere. The pure-jnp oracles live in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.box_scan import box_scan_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.l2dist import l2dist_pallas
+from repro.kernels.zone_prune import zone_prune_pallas
+
+_BIG = jnp.float32(3.4e38)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(a: jax.Array, mult: int, fill: float) -> jax.Array:
+    n = a.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return a
+    return jnp.concatenate(
+        [a, jnp.full((pad,) + a.shape[1:], fill, a.dtype)], axis=0)
+
+
+def _pad_dim(a: jax.Array, mult: int, fill: float) -> jax.Array:
+    d = a.shape[-1]
+    pad = (-d) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * (a.ndim - 1) + [(0, pad)]
+    return jnp.pad(a, widths, constant_values=fill)
+
+
+def box_scan(x: jax.Array, lo: jax.Array, hi: jax.Array,
+             *, tile_n: int = 1024, interpret: bool | None = None) -> jax.Array:
+    """Membership counts [N] for rows x against boxes (lo, hi].
+
+    Feature padding uses (lo=-BIG, hi=+BIG) so padded dims always pass;
+    row padding uses +2*BIG rows that can never be inside any box."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = x.shape[0]
+    xp = _pad_dim(_pad_rows(x, tile_n, float("inf")), 128, 0.0)
+    lop = _pad_dim(lo, 128, -float("inf"))
+    hip = _pad_dim(hi, 128, float("inf"))
+    out = box_scan_pallas(xp, lop, hip, tile_n=tile_n, interpret=interpret)
+    return out[:n]
+
+
+def zone_prune(zlo: jax.Array, zhi: jax.Array, blo: jax.Array, bhi: jax.Array,
+               *, tile_z: int = 512, interpret: bool | None = None) -> jax.Array:
+    """Overlap mask [NZ, B]. Padded zones are empty intervals (lo > hi)
+    that overlap nothing; padded dims are full intervals."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    nz = zlo.shape[0]
+    zlop = _pad_dim(_pad_rows(zlo, tile_z, float("inf")), 128, -float("inf"))
+    zhip = _pad_dim(_pad_rows(zhi, tile_z, -float("inf")), 128, float("inf"))
+    blop = _pad_dim(blo, 128, -float("inf"))
+    bhip = _pad_dim(bhi, 128, float("inf"))
+    out = zone_prune_pallas(zlop, zhip, blop, bhip,
+                            tile_z=tile_z, interpret=interpret)
+    return out[:nz]
+
+
+def l2dist(x: jax.Array, q: jax.Array,
+           *, tile_n: int = 1024, interpret: bool | None = None) -> jax.Array:
+    """Squared L2 distance matrix [N, Q]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = x.shape[0]
+    xp = _pad_dim(_pad_rows(x, tile_n, 0.0), 128, 0.0)
+    qp = _pad_dim(q, 128, 0.0)
+    out = l2dist_pallas(xp, qp, tile_n=tile_n, interpret=interpret)
+    return out[:n]
+
+
+def knn_topk(x: jax.Array, q: jax.Array, k: int,
+             *, interpret: bool | None = None):
+    """(distances [Q, k], indices [Q, k]) nearest rows of x per query."""
+    d = l2dist(x, q, interpret=interpret)            # [N, Q]
+    neg, idx = jax.lax.top_k(-d.T, k)                # [Q, k]
+    return -neg, idx
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True, q_chunk: int = 512,
+                    kv_chunk: int = 512,
+                    interpret: bool | None = None) -> jax.Array:
+    """GQA flash attention in model layout: q [B,S,Hq,D]; k/v [B,S,Hkv,D].
+
+    Repacks to the kernel's [B*Hkv, S, G, D] layout and back. Sequence
+    must divide the chunk sizes (callers pad)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, s)
+    qk = q.reshape(b, s, hkv, g, d).transpose(0, 2, 1, 3, 4)
+    qk = qk.reshape(b * hkv, s, g, d)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    out = flash_attention_pallas(qk, kk, vk, causal=causal, q_chunk=qc,
+                                 kv_chunk=kc, interpret=interpret)
+    out = out.reshape(b, hkv, s, g, d).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, s, hq, d)

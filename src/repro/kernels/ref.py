@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def box_scan_ref(x: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """x: [N, D]; lo/hi: [B, D] -> [N] int32 membership counts.
+    Half-open boxes: inside iff lo < x <= hi on every dim."""
+    inside = (x[:, None, :] > lo[None]) & (x[:, None, :] <= hi[None])
+    return jnp.all(inside, axis=-1).sum(-1).astype(jnp.int32)
+
+
+def zone_prune_ref(zlo, zhi, blo, bhi) -> jax.Array:
+    """[NZ, D] zones x [B, D] boxes -> [NZ, B] bool interval overlap."""
+    ov = (zhi[:, None, :] > blo[None]) & (zlo[:, None, :] <= bhi[None])
+    return jnp.all(ov, axis=-1)
+
+
+def l2dist_ref(x: jax.Array, q: jax.Array) -> jax.Array:
+    """[N, D] x [Q, D] -> [N, Q] squared L2 distances."""
+    x = x.astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    return jnp.sum(jnp.square(x[:, None, :] - q[None]), axis=-1)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True) -> jax.Array:
+    """Materialised-softmax oracle in the kernel's layout.
+    q: [BH, S, G, D]; k/v: [BH, S, D] -> [BH, S, G, D]."""
+    bh, s, g, d = q.shape
+    scale = d ** -0.5
+    scores = jnp.einsum("bqgd,bkd->bgqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgqk,bkd->bqgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,52 @@
+"""zone_prune Pallas kernel — the index *prune* stage.
+
+Tests every (block zone, query box) pair for interval overlap. A zone is
+a per-block [min, max] bounding box; a block can only contain matches for
+box q if the boxes overlap on EVERY dimension. The surviving-block mask
+drives the gather feeding box_scan — together they are the TPU-native
+replacement for the paper's k-d tree traversal (DESIGN.md §2).
+
+VPU-only: [TZ, B, D] comparisons per tile, reduced over D.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _zone_prune_kernel(zlo_ref, zhi_ref, blo_ref, bhi_ref, out_ref):
+    """zones: [TZ, D] lo/hi; boxes: [B, D] lo/hi; out: [TZ, B] bool."""
+    zlo = zlo_ref[...]
+    zhi = zhi_ref[...]
+    blo = blo_ref[...]
+    bhi = bhi_ref[...]
+    # overlap on dim d: zone_hi > box_lo  AND  zone_lo <= box_hi
+    # (half-open boxes (lo, hi]: a zone whose max == box_lo can't match)
+    ov = (zhi[:, None, :] > blo[None]) & (zlo[:, None, :] <= bhi[None])
+    out_ref[...] = jnp.all(ov, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_z", "interpret"))
+def zone_prune_pallas(zlo: jax.Array, zhi: jax.Array,
+                      blo: jax.Array, bhi: jax.Array,
+                      *, tile_z: int = 512, interpret: bool = True) -> jax.Array:
+    """zlo/zhi: [NZ, D]; blo/bhi: [B, D]. Returns [NZ, B] bool overlap."""
+    nz, d = zlo.shape
+    b = blo.shape[0]
+    grid = (nz // tile_z,)
+    return pl.pallas_call(
+        _zone_prune_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_z, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile_z, d), lambda i: (i, 0)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_z, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nz, b), jnp.bool_),
+        interpret=interpret,
+    )(zlo, zhi, blo, bhi)

@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+# init). Only the dry-run sees 512 placeholder devices; tests and benches
+# see the real host device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces a JSON artifact with:
+  * memory_analysis()  — per-device bytes (args/outputs/temps) -> "fits"
+  * cost_analysis()    — per-device HLO FLOPs and bytes accessed
+  * collective bytes   — parsed from the post-SPMD HLO, by op kind
+  * the collective schedule summary (op kind -> count, bytes)
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all                    # every live cell
+  python -m repro.launch.dryrun --all --multi-pod        # 2x16x16 mesh
+"""
+import argparse
+import gzip
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED_ARCHS, get_config, make_run_config,
+                           shape_cells)
+from repro.configs.base import ServeConfig, SHAPES_BY_NAME
+from repro.launch import sharding as shd
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.steps import (TrainState, init_train_state, make_decode_step,
+                                make_optimizer, make_prefill_step,
+                                make_train_step)
+from repro.models import lm
+
+ART_DIR = Path(__file__).resolve().parents[3] / "experiments" / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device collective bytes by op kind (output-shape convention;
+    all-reduce counted 2x for its reduce-scatter + all-gather phases)."""
+    stats: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out_part, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(out_part)
+        if kind == "all-reduce":
+            nbytes *= 2
+        entry = stats.setdefault(kind, {"count": 0, "bytes": 0})
+        entry["count"] += 1
+        entry["bytes"] += nbytes
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def memory_dict(mem) -> dict:
+    return {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "code_bytes": mem.generated_code_size_in_bytes,
+        "peak_bytes_est": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+    }
+
+
+def _lower_cell(arch: str, shape_name: str, mesh, *, overrides=None):
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    rc = make_run_config(arch, shape_name, multi_pod=(len(mesh.shape) == 3))
+    overrides = overrides or {}
+    tc = rc.train
+    import dataclasses as _dc
+    tc_over = {k: v for k, v in overrides.items()
+               if k in ("sharding_mode", "microbatches", "remat")}
+    if tc_over:
+        tc = _dc.replace(tc, **tc_over)
+    sv = (ServeConfig(seq_parallel=bool(overrides["seq_parallel"]))
+          if "seq_parallel" in overrides else rc.serve)
+    mode = tc.sharding_mode
+
+    params_sh = shd.params_shardings(specs_mod.params_specs(cfg), mesh, mode)
+    repl = shd.replicated(mesh)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, tc, mesh)
+        opt = make_optimizer(tc)
+        state_spec = jax.eval_shape(
+            lambda k: init_train_state(k, cfg, tc), jax.random.PRNGKey(0))
+        state_sh = TrainState(
+            params=params_sh,
+            opt=type(state_spec.opt)(
+                m=shd.params_shardings(state_spec.opt.m, mesh, mode),
+                v=shd.params_shardings(state_spec.opt.v, mesh, mode),
+                step=repl),
+            step=repl)
+        batch = specs_mod.train_batch_specs(cfg, shape)
+        batch_sh = shd.batch_shardings(batch, mesh, mode)
+        rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh, repl),
+                     donate_argnums=(0,))
+        return fn.lower(state_spec, batch, rng)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, sv, mesh)
+        args = specs_mod.prefill_specs(cfg, shape)
+        in_sh = shd.batch_shardings(args[0], mesh)
+        fn = jax.jit(step, in_shardings=(params_sh, in_sh))
+        return fn.lower(specs_mod.params_specs(cfg), *args)
+
+    # decode
+    step = make_decode_step(cfg, sv, mesh)
+    caches, token, pos = specs_mod.decode_specs(cfg, shape, sv)
+    caches_sh = shd.cache_shardings(caches, cfg, mesh, sv.decode_seq_parallel)
+    token_sh = shd.batch_shardings(token, mesh)
+    fn = jax.jit(step, in_shardings=(params_sh, caches_sh, token_sh, repl),
+                 donate_argnums=(1,))
+    return fn.lower(specs_mod.params_specs(cfg), caches, token, pos)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True, keep_hlo: bool = False,
+             overrides=None, tag: str = "") -> dict:
+    mesh_name = ("pod2_2x16x16" if multi_pod else "pod1_16x16") + tag
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "devices": int(len(jax.devices())), "ok": False,
+        "overrides": dict(overrides or {}),
+    }
+    try:
+        lowered = _lower_cell(arch, shape_name, mesh, overrides=overrides)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        colls = collective_stats(hlo)          # raw (while-bodies-once)
+        deep = hlo_analyze(hlo)                # trip-count-aware
+        result.update(
+            ok=True,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=memory_dict(mem),
+            xla_flops_per_device=float(cost.get("flops", -1)),
+            xla_bytes_per_device=float(cost.get("bytes accessed", -1)),
+            # trip-aware per-device numbers (see hlo_analysis.py)
+            flops_per_device=deep["total_flops"],
+            dot_flops_per_device=deep["dot_flops"],
+            hbm_bytes_per_device=deep["hbm_bytes"],
+            hbm_bytes_upper_per_device=deep.get("hbm_bytes_upper", 0.0),
+            collective_bytes_per_device=deep["collective_bytes"],
+            collectives=deep["collectives"],
+            collectives_raw=colls,
+            hlo_ops=len(hlo.splitlines()),
+        )
+        # always persist the post-SPMD HLO (gzipped) so the roofline
+        # estimator can be re-run without recompiling (launch/reanalyze.py)
+        ART_DIR.mkdir(parents=True, exist_ok=True)
+        hlo_path = ART_DIR / f"{arch}_{shape_name}_{mesh_name}.hlo.txt.gz"
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+        result["hlo_gz"] = str(hlo_path.name)
+    except Exception as e:  # noqa: BLE001 — a failing cell is a report, not a crash
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+    if save:
+        ART_DIR.mkdir(parents=True, exist_ok=True)
+        out = ART_DIR / f"{arch}_{shape_name}_{mesh_name}.json"
+        out.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="architecture id (see configs)")
+    ap.add_argument("--shape", help="shape cell name")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all live cells")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact suffix (hillclimb)")
+    ap.add_argument("--sharding-mode", default=None,
+                    choices=["fsdp_tp", "zero3"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default=None, choices=["none", "full", "dots"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.sharding_mode:
+        overrides["sharding_mode"] = args.sharding_mode
+    if args.microbatches is not None:
+        overrides["microbatches"] = args.microbatches
+    if args.remat is not None:
+        overrides["remat"] = args.remat
+    if args.seq_parallel:
+        overrides["seq_parallel"] = True
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for sc in shape_cells(arch):
+                cells.append((arch, sc.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("need --arch and --shape (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    mesh_name = ("pod2_2x16x16" if args.multi_pod else "pod1_16x16") + args.tag
+    failures = 0
+    for arch, shape_name in cells:
+        out = ART_DIR / f"{arch}_{shape_name}_{mesh_name}.json"
+        if args.skip_existing and out.exists():
+            prev = json.loads(out.read_text())
+            if prev.get("ok"):
+                print(f"[skip] {arch} {shape_name} {mesh_name}")
+                continue
+        r = run_cell(arch, shape_name, args.multi_pod, keep_hlo=args.keep_hlo,
+                     overrides=overrides, tag=args.tag)
+        if r["ok"]:
+            gb = r["memory"]["peak_bytes_est"] / 2**30
+            cb = r["collective_bytes_per_device"] / 2**20
+            print(f"[ok]   {arch:28s} {shape_name:12s} {mesh_name}  "
+                  f"peak={gb:6.2f} GiB/dev  flops/dev={r['flops_per_device']:.3e}  "
+                  f"coll={cb:.1f} MiB  (lower {r['lower_s']}s compile {r['compile_s']}s)")
+        else:
+            failures += 1
+            print(f"[FAIL] {arch} {shape_name} {mesh_name}: {r['error']}")
+        jax.clear_caches()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

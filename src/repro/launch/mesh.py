@@ -1,0 +1,56 @@
+"""Mesh construction for the production topology.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs.base import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips single-pod; 2x16x16 = 512 chips multi-pod.
+
+    Axes: data (batch / FSDP), model (TP / EP / sequence), pod (outer
+    data-parallel replica groups across the inter-pod DCN links).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(cfg: MeshConfig) -> Mesh:
+    return jax.make_mesh(
+        cfg.shape, cfg.axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.axes))
+
+
+def make_host_mesh(model_axis: int = 1) -> Optional[Mesh]:
+    """A mesh over whatever devices exist (tests / examples).
+
+    Returns None when there's a single device — models then run the
+    unsharded path (ParallelCtx(mesh=None))."""
+    n = len(jax.devices())
+    if n == 1:
+        return None
+    data = n // model_axis
+    return jax.make_mesh(
+        (data, model_axis), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def elastic_mesh_shape(n_devices: int, model_axis: int = 16) -> Tuple[int, ...]:
+    """Largest (data, model) grid available from ``n_devices`` survivors —
+    used by the elastic-restart path after node loss (train/elastic.py)."""
+    while model_axis > 1 and n_devices % model_axis:
+        model_axis //= 2
+    return (n_devices // model_axis, model_axis)

@@ -1,0 +1,46 @@
+"""Re-run the HLO roofline estimator over stored (gzipped) HLO artifacts.
+
+``python -m repro.launch.reanalyze`` updates every dry-run JSON in place
+from its ``.hlo.txt.gz`` sibling — estimator improvements never require
+recompiling the 64-cell matrix.
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import sys
+from pathlib import Path
+
+from repro.launch.hlo_analysis import analyze
+
+ART_DIR = Path(__file__).resolve().parents[3] / "experiments" / "artifacts" / "dryrun"
+
+
+def main() -> int:
+    updated = skipped = 0
+    for jpath in sorted(ART_DIR.glob("*.json")):
+        d = json.loads(jpath.read_text())
+        gz = ART_DIR / (jpath.stem + ".hlo.txt.gz")
+        if not d.get("ok") or not gz.exists():
+            skipped += 1
+            continue
+        with gzip.open(gz, "rt") as f:
+            hlo = f.read()
+        deep = analyze(hlo)
+        d.update(
+            flops_per_device=deep["total_flops"],
+            dot_flops_per_device=deep["dot_flops"],
+            hbm_bytes_per_device=deep["hbm_bytes"],
+            hbm_bytes_upper_per_device=deep["hbm_bytes_upper"],
+            collective_bytes_per_device=deep["collective_bytes"],
+            collectives=deep["collectives"],
+        )
+        jpath.write_text(json.dumps(d, indent=1))
+        updated += 1
+        print(f"[reanalyzed] {jpath.name}")
+    print(f"updated={updated} skipped(no hlo)={skipped}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,248 @@
+"""Parameter / state / batch PartitionSpec rules for every architecture.
+
+One rule function maps (pytree path, leaf) -> PartitionSpec:
+
+  * FSDP: the `data` axis shards one weight dim of every matrix
+    (ZeRO-3 style; XLA all-gathers weights around their use).
+  * TP:   the `model` axis shards heads / d_ff / vocab / SSM-inner /
+    LRU width / the expert dim of MoE banks.
+  * Stacked block params (under "blocks/") get a leading None for the
+    scan dimension.
+  * Multi-pod: batch shards over ("pod","data"); weights FSDP only over
+    "data" — gradients all-reduce over "pod" on the slow DCN links,
+    optionally int8-compressed (train/compression.py).
+
+Everything returns specs, composable with jax.eval_shape trees, so the
+dry-run never allocates.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MeshConfig, ModelConfig
+
+PyTree = Any
+
+FSDP_AXIS = "data"
+TP_AXIS = "model"
+
+
+def batch_axes(mesh_axes: Tuple[str, ...]) -> Tuple[str, ...]:
+    return tuple(a for a in mesh_axes if a in ("pod", "data"))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _divisible(dim: int, mesh: Mesh, axis: str) -> bool:
+    return dim % mesh.shape[axis] == 0
+
+
+def param_spec(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
+               mode: str = "fsdp_tp") -> P:
+    """Sharding rule for one parameter tensor.
+
+    Modes:
+      fsdp_tp — ZeRO-3 over `data` x tensor-parallel over `model`
+                (the baseline recorded in EXPERIMENTS.md §Roofline).
+      zero3   — fully-sharded weights over ALL mesh axes, no TP: every
+                matrix shards its largest divisible dim over
+                ("pod","data","model") jointly; batch is data-parallel
+                over the same axes. No per-layer activation collectives;
+                weights are all-gathered around use (§Perf-A).
+    """
+    stacked = "blocks/" in path_str
+    base = shape[1:] if stacked else shape
+    name = path_str.rsplit("/", 1)[-1]
+
+    def out(*spec):
+        spec = tuple(spec)
+        # drop sharding on non-divisible dims (safety: falls back to repl)
+        fixed = []
+        for dim, s in zip(base, spec):
+            if s is None:
+                fixed.append(None)
+            else:
+                axes = s if isinstance(s, tuple) else (s,)
+                ok = True
+                d = dim
+                for a in axes:
+                    if d % mesh.shape[a]:
+                        ok = False
+                        break
+                    d //= mesh.shape[a]
+                fixed.append(s if ok else None)
+        if stacked:
+            fixed = [None] + fixed
+        return P(*fixed)
+
+    if len(base) == 1:
+        return out(None)                       # norms / biases / diag gates
+
+    if mode == "zero3":
+        all_axes = tuple(a for a in mesh.axis_names)
+        total = 1
+        for a in all_axes:
+            total *= mesh.shape[a]
+        if name in ("embed", "unembed"):
+            # shard the d_model dim, NEVER the vocab dim: a vocab-sharded
+            # table makes every token lookup all-gather the full f32 table
+            # (5.9 GiB for a 256k vocab — §Perf-A follow-up). With d
+            # sharded the gather stays local and the unembed contraction
+            # all-reduces only the (chunked) logits.
+            d_dim = 1 if name == "embed" else 0
+            spec = [None] * len(base)
+            if base[d_dim] % total == 0:
+                spec[d_dim] = all_axes
+            return out(*spec)
+        # shard the largest dim divisible by the full device count
+        order = sorted(range(len(base)), key=lambda i: -base[i])
+        for i in order:
+            if base[i] % total == 0:
+                spec = [None] * len(base)
+                spec[i] = all_axes
+                return out(*spec)
+        return out(*([None] * len(base)))      # tiny tensor: replicate
+
+    # --- embeddings ---------------------------------------------------
+    if name == "embed":
+        return out(TP_AXIS, FSDP_AXIS)         # [V, d]
+    if name == "unembed":
+        return out(FSDP_AXIS, TP_AXIS)         # [d, V]
+
+    # --- MoE expert banks [E, d, ff] / [E, ff, d] ----------------------
+    # E shards over `model` (expert parallelism); of the two matrix dims
+    # the LARGER shards over `data` — this puts the per-layer partial-sum
+    # all-reduce on the smaller dim's activations (§Perf-C).
+    if ("moe/" in path_str and len(base) == 3
+            and name in ("w_in", "w_gate", "w_out")):
+        if base[1] >= base[2]:
+            return out(TP_AXIS, FSDP_AXIS, None)
+        return out(TP_AXIS, None, FSDP_AXIS)
+    if name == "router":
+        return out(FSDP_AXIS, None)
+
+    # --- attention ----------------------------------------------------
+    if name in ("wq", "wk", "wv"):
+        return out(FSDP_AXIS, TP_AXIS)
+    if name == "wo":
+        return out(TP_AXIS, FSDP_AXIS)
+
+    # --- SSM / LRU ------------------------------------------------------
+    if name == "in_proj":
+        return out(FSDP_AXIS, TP_AXIS)
+    if name == "conv_w":
+        return out(None, TP_AXIS)
+    if name in ("w_in", "w_gate", "gate_a", "gate_x"):
+        return out(FSDP_AXIS, TP_AXIS)
+    if name == "out_proj":
+        return out(TP_AXIS, FSDP_AXIS)
+
+    # --- generic 2-d matmul weight -------------------------------------
+    if len(base) == 2:
+        return out(FSDP_AXIS, TP_AXIS)
+    if len(base) == 3:
+        return out(None, FSDP_AXIS, TP_AXIS)
+    return out(*([None] * len(base)))
+
+
+def params_shardings(tree: PyTree, mesh: Mesh, mode: str = "fsdp_tp") -> PyTree:
+    def f(path, leaf):
+        return NamedSharding(mesh, param_spec(_path_str(path), leaf.shape,
+                                              mesh, mode))
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def opt_shardings(opt_state: PyTree, params_tree: PyTree, mesh: Mesh) -> PyTree:
+    """m/v mirror params; scalars (step) replicate. Works because the
+    optimizer state trees embed copies of the params treedef."""
+    def f(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        ps = _path_str(path)
+        # strip the optimizer-level prefix ("m/", "v/", "factored/", ...)
+        for prefix in ("m/", "v/", "factored/", "0/", "1/"):
+            if ps.startswith(prefix):
+                ps = ps[len(prefix):]
+                break
+        return NamedSharding(mesh, param_spec(ps, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(f, opt_state)
+
+
+# ----------------------------------------------------------------------
+# activations / batch / caches
+# ----------------------------------------------------------------------
+
+def _dp_for(dim: int, mesh: Mesh, mode: str = "fsdp_tp"):
+    """Largest prefix of the batch axes that divides ``dim`` (handles
+    global_batch=1 long-context cells: batch replicates)."""
+    dp = (tuple(mesh.axis_names) if mode == "zero3"
+          else batch_axes(mesh.axis_names))
+    while dp and dim % int(
+            __import__("math").prod(mesh.shape[a] for a in dp)):
+        dp = dp[:-1]
+    return dp or None
+
+
+def batch_shardings(batch: PyTree, mesh: Mesh, mode: str = "fsdp_tp") -> PyTree:
+    def f(leaf):
+        spec = ([_dp_for(leaf.shape[0], mesh, mode)] + [None] * (leaf.ndim - 1)
+                if leaf.ndim else [])
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(f, batch)
+
+
+def cache_shardings(caches: PyTree, cfg: ModelConfig, mesh: Mesh,
+                    seq_parallel: bool = True) -> PyTree:
+    """KV caches: [nb?, B, S, kv, hd] -> (None, dp, model-on-S, None, None).
+    SSM/LRU states: batch + inner-dim sharding."""
+
+    def f(path, leaf):
+        ps = _path_str(path)
+        stacked = "blocks/" in ps
+        base = leaf.shape[1:] if stacked else leaf.shape
+        name = ps.rsplit("/", 1)[-1]
+        dp = _dp_for(base[0], mesh)
+        if name in ("k", "v"):
+            spec = [dp,
+                    TP_AXIS if (seq_parallel and _div(base[1], mesh, TP_AXIS)) else None,
+                    None, None]
+        elif name == "conv":
+            spec = [dp, None,
+                    TP_AXIS if _div(base[2], mesh, TP_AXIS) else None]
+        elif name == "ssd":
+            spec = [dp,
+                    TP_AXIS if _div(base[1], mesh, TP_AXIS) else None,
+                    None, None]
+        elif name == "h":
+            spec = [dp, TP_AXIS if _div(base[1], mesh, TP_AXIS) else None]
+        else:
+            spec = [dp] + [None] * (len(base) - 1)
+        if stacked:
+            spec = [None] + spec
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, caches)
+
+
+def _div(dim, mesh, axis):
+    return dim % mesh.shape[axis] == 0
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

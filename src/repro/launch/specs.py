@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run currency.
+
+``input_specs(arch, shape)`` returns exactly what the corresponding step
+function will be lowered with: weak-type-correct, shardable, and never
+allocating device memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, ServeConfig, ShapeConfig, SHAPES_BY_NAME
+from repro.models import lm
+
+PyTree = Any
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "embeddings":
+        inputs = sds((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs = sds((b, s), jnp.int32)
+    return {"inputs": inputs, "targets": sds((b, s), jnp.int32)}
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Any, ...]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "embeddings":
+        return (sds((b, s, cfg.d_model), jnp.bfloat16),)
+    return (sds((b, s), jnp.int32),)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
+                 serve: ServeConfig = ServeConfig()) -> Tuple[Any, ...]:
+    """(caches, token, pos) for decode_step; one new token against a
+    seq_len-deep context."""
+    b, s = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(
+        functools.partial(lm.init_caches, get_config_like(cfg), b, s, serve))
+    token = sds((b, 1), jnp.int32)
+    pos = sds((), jnp.int32)
+    return caches, token, pos
+
+
+def get_config_like(cfg: ModelConfig) -> ModelConfig:
+    return cfg
+
+
+def params_specs(cfg: ModelConfig) -> PyTree:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)  # PRNG key placeholder
+    return jax.eval_shape(
+        lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def input_specs(arch: str, shape_name: str,
+                serve: ServeConfig = ServeConfig()) -> Dict[str, Any]:
+    """Everything dryrun.py needs for one (arch x shape) cell."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    out: Dict[str, Any] = {"model": cfg, "shape": shape,
+                           "params": params_specs(cfg)}
+    if shape.kind == "train":
+        out["batch"] = train_batch_specs(cfg, shape)
+    elif shape.kind == "prefill":
+        out["args"] = prefill_specs(cfg, shape)
+    else:
+        out["args"] = decode_specs(cfg, shape, serve)
+    return out

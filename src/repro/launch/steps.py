@@ -1,0 +1,147 @@
+"""jit-able train / prefill / decode step factories with full distribution.
+
+These close over static config and return pure functions of
+(state/params, data) — the same objects are used by the real launchers
+(train.py / serve.py) and the dry-run (lowered against ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ServeConfig, TrainConfig
+from repro.models import lm
+from repro.models.common import ParallelCtx
+from repro.train.optimizer import AdamW, AdamWState, clip_by_global_norm, cosine_schedule
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: AdamWState
+    step: jax.Array
+
+
+def make_optimizer(tc: TrainConfig) -> AdamW:
+    return AdamW(
+        cosine_schedule(tc.learning_rate, tc.warmup_steps, tc.total_steps),
+        beta1=tc.beta1, beta2=tc.beta2, weight_decay=tc.weight_decay,
+        state_dtype=tc.opt_state_dtype)
+
+
+def init_train_state(key, cfg: ModelConfig, tc: TrainConfig) -> TrainState:
+    params = lm.init_params(key, cfg)
+    opt = make_optimizer(tc).init(params)
+    return TrainState(params, opt, jnp.zeros((), jnp.int32))
+
+
+def make_parallel_ctx(mesh, tc: TrainConfig | None = None,
+                      sv: ServeConfig | None = None,
+                      cfg: ModelConfig | None = None) -> ParallelCtx:
+    if tc is not None and tc.sharding_mode == "zero3" and mesh is not None:
+        # ZeRO-3: every mesh axis is data-parallel, no tensor parallelism
+        return ParallelCtx(
+            mesh=mesh,
+            dp_axes=tuple(mesh.axis_names),
+            tp_axis=None,
+            sequence_parallel=False,
+        )
+    seq_shard = bool(sv and sv.seq_parallel and cfg is not None
+                     and cfg.family in ("dense", "vlm", "audio"))
+    return ParallelCtx(
+        mesh=mesh,
+        dp_axes=tuple(a for a in (mesh.axis_names if mesh else ())
+                      if a in ("pod", "data")) or ("data",),
+        tp_axis="model",
+        sequence_parallel=bool(tc and tc.sequence_parallel),
+        decode_seq_parallel=(sv.decode_seq_parallel if sv else True),
+        seq_shard_acts=seq_shard,
+    )
+
+
+# ----------------------------------------------------------------------
+# train
+# ----------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh) -> Callable:
+    """Returns train_step(state, batch, rng) -> (state, metrics).
+
+    Gradient accumulation: the global batch is split into
+    ``tc.microbatches`` chunks scanned sequentially; each chunk's
+    backward is remat'd per ``tc.remat``. fp32 gradient accumulators.
+    """
+    ctx = make_parallel_ctx(mesh, tc=tc, cfg=cfg)
+    opt = make_optimizer(tc)
+    M = max(tc.microbatches, 1)
+
+    def loss_fn(params, inputs, targets, rng):
+        return lm.forward_train(
+            params, inputs, targets, cfg, ctx, rng=rng, remat=tc.remat,
+            loss_chunk=tc.loss_chunk, z_loss=tc.z_loss,
+            lb_coef=cfg.load_balance_coef if cfg.num_experts else 0.0)
+
+    grad_fn = jax.grad(lambda p, i, t, r: loss_fn(p, i, t, r)[0])
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array], rng
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        inputs, targets = batch["inputs"], batch["targets"]
+        b = inputs.shape[0]
+        assert b % M == 0, (b, M)
+
+        if M == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, inputs, targets, rng)
+        else:
+            mb_in = inputs.reshape((M, b // M) + inputs.shape[1:])
+            mb_tg = targets.reshape((M, b // M) + targets.shape[1:])
+
+            acc_dt = jnp.dtype(tc.grad_acc_dtype)
+
+            def micro(acc, inp):
+                i, t, m = inp
+                r = jax.random.fold_in(rng, m)
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, i, t, r)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, x: a + x.astype(acc_dt) / M, acc_g, g)
+                return (acc_g, acc_l + l / M), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), state.params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zero, 0.0), (mb_in, mb_tg, jnp.arange(M)))
+            metrics = {"ce_loss": loss}
+
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        params, opt_state = opt.update(grads, state.opt, state.params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["loss"] = metrics.get("ce_loss", 0.0)
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+# ----------------------------------------------------------------------
+# serve
+# ----------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, sv: ServeConfig, mesh) -> Callable:
+    ctx = make_parallel_ctx(mesh, sv=sv, cfg=cfg)
+
+    def prefill_step(params, inputs):
+        return lm.prefill(params, inputs, cfg, ctx, sv)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, sv: ServeConfig, mesh) -> Callable:
+    ctx = make_parallel_ctx(mesh, sv=sv, cfg=cfg)
+
+    def decode_step(params, caches, token, pos):
+        return lm.decode_step(params, caches, token, pos, cfg, ctx, sv)
+    return decode_step

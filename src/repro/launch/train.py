@@ -1,0 +1,63 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Drives the Trainer with either the real (full-size) config on a mesh or
+the reduced config on the host device (--reduced, the CPU-friendly path
+used by examples and CI). Checkpoints/restarts work identically in both.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.configs import get_config, get_reduced_config
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.train.trainer import Trainer
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-scale)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=["none", "full", "dots"])
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    cfg = (get_reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    tc = TrainConfig(learning_rate=args.lr, microbatches=args.microbatches,
+                     remat=args.remat, warmup_steps=min(20, args.steps // 5 + 1),
+                     total_steps=args.steps, seed=args.seed,
+                     z_loss=0.0, loss_chunk=0)
+    dc = DataConfig(seq_len=args.seq_len, global_batch=args.batch,
+                    vocab_size=cfg.vocab_size, seed=args.seed)
+    mesh = make_host_mesh()
+
+    trainer = Trainer(cfg, tc, dc, mesh=mesh,
+                      checkpoint_dir=args.checkpoint_dir,
+                      checkpoint_every=args.checkpoint_every)
+    state, report = trainer.run(args.steps, log_every=args.log_every)
+    print(f"arch={cfg.name} steps={report.steps_run} "
+          f"loss[first]={report.losses[0]:.4f} loss[last]={report.final_loss:.4f} "
+          f"tokens/s={report.tokens_per_s:,.0f} "
+          f"resumed_from={report.resumed_from} preempted={report.preempted}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

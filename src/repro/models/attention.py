@@ -1,0 +1,380 @@
+"""GQA attention: full, chunked-flash (online softmax), block-local, decode.
+
+All functions are pure JAX (pjit-partitionable). Sequence-sharded decode
+(flash-decoding) falls out of SPMD: the KV cache is sharded along the
+sequence axis and XLA partitions the softmax reductions (max/sum) into
+small all-reduces of per-shard partials.
+
+Shapes follow [B, S, H, D] (batch, seq, heads, head_dim).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParallelCtx, mshard
+
+NEG_INF = -1e30
+
+
+def _group_heads(q: jax.Array, num_kv: int) -> jax.Array:
+    """[B, S, Hq, D] -> [B, S, Hkv, G, D] grouping query heads per kv head."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, num_kv, hq // num_kv, d)
+
+
+# ----------------------------------------------------------------------
+# full attention (reference / small-seq path)
+# ----------------------------------------------------------------------
+
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Materialised-scores attention. q: [B,Sq,Hq,D], k/v: [B,Sk,Hkv,D].
+
+    ``q_offset``: absolute position of q[0] (for masks when Sq < Sk).
+    ``window`` > 0 applies a sliding-window band mask (local attention).
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    qg = _group_heads(q, hkv)
+    scale = d ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# chunked flash attention (train / prefill at long seq)
+# ----------------------------------------------------------------------
+#
+# custom_vjp with the real flash backward: the forward saves only
+# (q, k, v, out, lse) — O(S) residuals — and the backward recomputes each
+# [q_chunk, kv_chunk] probability tile from q, k and the saved LSE. This
+# is what keeps the zero3 train cells inside 16 GB/chip (EXPERIMENTS.md
+# §Perf-A); without it the inner scan checkpoints every probability tile.
+
+import functools
+
+
+def _visible_pairs(nq, nk, q_chunk, kv_chunk, causal):
+    if causal:
+        return [(qi, ki) for qi in range(nq) for ki in range(nk)
+                if (qi + 1) * q_chunk - 1 >= ki * kv_chunk]
+    return [(qi, ki) for qi in range(nq) for ki in range(nk)]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_core(q, k, v, causal: bool, q_chunk: int, kv_chunk: int):
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk):
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    nq, nk = s // q_chunk, s // kv_chunk
+    scale = d ** -0.5
+    qg = _group_heads(q, hkv)                       # [B,S,Hkv,G,D]
+    g = qg.shape[3]
+    qs = qg.reshape(b, nq, q_chunk, hkv, g, d).astype(jnp.float32) * scale
+    ks = k.reshape(b, nk, kv_chunk, hkv, d).astype(jnp.float32)
+    vs = v.reshape(b, nk, kv_chunk, hkv, d).astype(jnp.float32)
+
+    def body(carry, pair):
+        acc, m, l = carry
+        qi, ki = pair
+        qc = jax.lax.dynamic_index_in_dim(qs, qi, 1, keepdims=False)
+        kc = jax.lax.dynamic_index_in_dim(ks, ki, 1, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vs, ki, 1, keepdims=False)
+        sc = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc)
+        if causal:
+            qpos = qi * q_chunk + jnp.arange(q_chunk)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            sc = jnp.where(qpos[:, None] >= kpos[None, :], sc, NEG_INF)
+        m_new = jnp.maximum(m[..., qi, :], sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m[..., qi, :] - m_new)
+        l_new = l[..., qi, :] * corr + p.sum(-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc)
+        acc_new = acc[:, :, :, qi] * corr[..., None] + pv
+        return (
+            acc.at[:, :, :, qi].set(acc_new),
+            m.at[..., qi, :].set(m_new),
+            l.at[..., qi, :].set(l_new),
+        ), None
+
+    pairs = jnp.asarray(_visible_pairs(nq, nk, q_chunk, kv_chunk, causal),
+                        jnp.int32)
+    acc0 = jnp.zeros((b, hkv, g, nq, q_chunk, d), jnp.float32)
+    m0 = jnp.full((b, hkv, g, nq, q_chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, nq, q_chunk), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), pairs)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))        # [B,H,G,nq,qc]
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 4, 1, 2, 5).reshape(b, s, hq, d)
+    return out.astype(q.dtype), lse
+
+
+def _flash_core_fwd(q, k, v, causal, q_chunk, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(causal, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse = res
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    nq, nk = s // q_chunk, s // kv_chunk
+    g = hq // hkv
+    scale = d ** -0.5
+    qs = _group_heads(q, hkv).reshape(
+        b, nq, q_chunk, hkv, g, d).astype(jnp.float32)
+    ks = k.reshape(b, nk, kv_chunk, hkv, d).astype(jnp.float32)
+    vs = v.reshape(b, nk, kv_chunk, hkv, d).astype(jnp.float32)
+    dog = _group_heads(dout, hkv).reshape(
+        b, nq, q_chunk, hkv, g, d).astype(jnp.float32)
+    og = _group_heads(out, hkv).reshape(
+        b, nq, q_chunk, hkv, g, d).astype(jnp.float32)
+    # delta_i = sum_d dout_i * out_i   [B,nq,qc,H,G]
+    delta = (dog * og).sum(-1)
+
+    def body(carry, pair):
+        dq, dk, dv = carry
+        qi, ki = pair
+        qc = jax.lax.dynamic_index_in_dim(qs, qi, 1, keepdims=False)
+        kc = jax.lax.dynamic_index_in_dim(ks, ki, 1, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vs, ki, 1, keepdims=False)
+        doc = jax.lax.dynamic_index_in_dim(dog, qi, 1, keepdims=False)
+        del_c = jax.lax.dynamic_index_in_dim(delta, qi, 1, keepdims=False)
+        lse_c = jax.lax.dynamic_index_in_dim(lse, qi, 3, keepdims=False)
+        sc = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc) * scale
+        if causal:
+            qpos = qi * q_chunk + jnp.arange(q_chunk)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            sc = jnp.where(qpos[:, None] >= kpos[None, :], sc, NEG_INF)
+        p = jnp.exp(sc - lse_c[..., None])                    # [B,H,G,qc,kc]
+        dv_c = jnp.einsum("bhgqk,bqhgd->bkhd", p, doc)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc, vc)
+        # delta/doc are [B,qc,H,G]; transpose to [B,H,G,qc]
+        ds = p * (dp - del_c.transpose(0, 2, 3, 1)[..., None])
+        dq_c = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kc) * scale
+        dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qc) * scale
+        return (dq.at[:, qi].add(dq_c), dk.at[:, ki].add(dk_c),
+                dv.at[:, ki].add(dv_c)), None
+
+    pairs = jnp.asarray(_visible_pairs(nq, nk, q_chunk, kv_chunk, causal),
+                        jnp.int32)
+    dq0 = jnp.zeros((b, nq, q_chunk, hkv, g, d), jnp.float32)
+    dk0 = jnp.zeros((b, nk, kv_chunk, hkv, d), jnp.float32)
+    dv0 = jnp.zeros((b, nk, kv_chunk, hkv, d), jnp.float32)
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0), pairs)
+    dq = dq.reshape(b, s, hkv, g, d).reshape(b, s, hq, d).astype(q.dtype)
+    dk = dk.reshape(b, s, hkv, d).astype(k.dtype)
+    dv = dv.reshape(b, s, hkv, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_chunk: int = 2048,
+    kv_chunk: int = 1024,
+    skip_masked_blocks: bool = True,
+) -> jax.Array:
+    """Online-softmax attention: O(q_chunk*kv_chunk) live scores, O(S)
+    backward residuals (custom flash VJP). Causal chunk pairs above the
+    diagonal are skipped (static pair list -> plain scan)."""
+    b, s, hq, d = q.shape
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    if s % q_chunk or s % kv_chunk:
+        return full_attention(q, k, v, causal=causal)
+    return _flash_core(q, k, v, causal, q_chunk, kv_chunk)
+
+
+# ----------------------------------------------------------------------
+# kv-scan flash attention (q kept whole — for q-sequence-sharded TP)
+# ----------------------------------------------------------------------
+
+def flash_attention_kvscan(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax over KV chunks with the FULL query tensor live.
+
+    Used when query heads don't divide the tensor-parallel degree: q is
+    sharded along its sequence axis instead, and every op below is
+    elementwise over q positions — SPMD partitions it with zero attention
+    collectives (K/V chunks are small and replicated).
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    if s % kv_chunk:
+        return full_attention(q, k, v, causal=causal)
+    nk = s // kv_chunk
+    scale = d ** -0.5
+    qg = _group_heads(q, hkv).astype(jnp.float32) * scale          # [B,S,Hkv,G,D]
+    g = qg.shape[3]
+    ks = k.reshape(b, nk, kv_chunk, hkv, d).astype(jnp.float32)
+    vs = v.reshape(b, nk, kv_chunk, hkv, d).astype(jnp.float32)
+    qpos = jnp.arange(s)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kc, vc, ki = inp
+        sc = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc)               # [B,H,G,S,kc]
+        if causal:
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            sc = jnp.where(qpos[:, None] >= kpos[None, :], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vc)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, hkv, g, s, d), jnp.float32)
+    m0 = jnp.full((b, hkv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (ks.transpose(1, 0, 2, 3, 4), vs.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nk)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)                   # [B,H,G,S,D]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, d)
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# block-local (sliding window) attention — O(S * W)
+# ----------------------------------------------------------------------
+
+def local_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    causal: bool = True,
+) -> jax.Array:
+    """Sliding-window attention via the two-block trick.
+
+    Position p attends to [p-window+1, p]. Query block i only needs key
+    blocks i-1 and i (block size = window), so compute is O(S*W) exact.
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    if s <= window or s % window:
+        return full_attention(q, k, v, causal=causal, window=window)
+    nb = s // window
+    qg = _group_heads(q, hkv).astype(jnp.float32)
+    g = qg.shape[3]
+    scale = d ** -0.5
+
+    qb = qg.reshape(b, nb, window, hkv, g, d) * scale
+    kb = k.reshape(b, nb, window, hkv, d).astype(jnp.float32)
+    vb = v.reshape(b, nb, window, hkv, d).astype(jnp.float32)
+    # previous block of K/V (block -1 = zeros, masked out anyway)
+    kprev = jnp.pad(kb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    vprev = jnp.pad(vb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    k2 = jnp.concatenate([kprev, kb], axis=2)   # [B,nb,2W,Hkv,D]
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+
+    sc = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qb, k2)          # [B,nb,H,G,W,2W]
+    qpos = jnp.arange(window)[:, None] + window               # abs pos within [0,2W)
+    kpos = jnp.arange(2 * window)[None, :]
+    mask = (qpos >= kpos) & (qpos - kpos < window)
+    # first block has no previous block: mask its left half
+    first = (jnp.arange(nb) == 0)[:, None, None]
+    valid = mask[None] & ~(first & (kpos < window)[None])
+    sc = sc + jnp.where(valid, 0.0, NEG_INF)[None, :, None, None]  # [1,nb,1,1,W,2W]
+    probs = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bnhgqk,bnkhd->bnqhgd", probs, v2)
+    return out.reshape(b, s, hq, d).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# decode (single new token against a cache)
+# ----------------------------------------------------------------------
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    ctx: Optional[ParallelCtx] = None,
+) -> jax.Array:
+    """q: [B,1,Hq,D]; caches: [B,S,Hkv,D] valid up to ``pos`` (inclusive).
+
+    With the cache sequence axis sharded over the model axis, the masked
+    max/sum reductions below are partitioned by SPMD into per-shard partials
+    plus tiny all-reduces — i.e. flash-decoding, for any kv_heads count.
+    """
+    b, _, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    qg = _group_heads(q, hkv)[:, 0]                     # [B,Hkv,G,D]
+    scale = d ** -0.5
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    valid = (jnp.arange(s) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    m = scores.max(-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    out = out / p.sum(-1, keepdims=True)[..., 0][..., None]
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+# ----------------------------------------------------------------------
+# fused-kernel scope tagging
+# ----------------------------------------------------------------------
+# Every op inside these functions carries "fused_attention" in its HLO
+# metadata op_name. kernels/flash_attention.py is the Pallas kernel this
+# scope promises on TPU (scores stay in VMEM); launch/hlo_analysis.py
+# uses the tag to cost the region as the fused kernel would execute it.
+
+def _scoped(fn):
+    import functools
+
+    @functools.wraps(fn)
+    def inner(*args, **kw):
+        with jax.named_scope("fused_attention"):
+            return fn(*args, **kw)
+    return inner
+
+
+full_attention = _scoped(full_attention)
+flash_attention = _scoped(flash_attention)
+flash_attention_kvscan = _scoped(flash_attention_kvscan)
+local_attention = _scoped(local_attention)
+decode_attention = _scoped(decode_attention)

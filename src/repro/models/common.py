@@ -1,0 +1,111 @@
+"""Shared model building blocks: norms, RoPE, init, sharding helpers."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParallelCtx:
+    """Distribution context threaded through every model call.
+
+    ``mesh is None`` means single-device (smoke tests / examples): all
+    sharding constraints and shard_map paths become no-ops / reference
+    implementations.
+    """
+
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: Optional[str] = "model"     # None => ZeRO-3 mode: the model
+    #                                      axis joins dp_axes; no tensor
+    #                                      parallelism, weights fully sharded
+    sequence_parallel: bool = False      # Megatron-SP residual sharding (train)
+    decode_seq_parallel: bool = True     # shard KV cache sequence over tp_axis
+    seq_shard_acts: bool = False         # context-parallel serving: shard
+    #                                      activations along SEQ over tp_axis
+    moe_impl: str = "replicated_dispatch"  # or "a2a_ep"
+    moe_chunk_tokens: int = 4096         # token-chunking of the MoE dispatch
+
+    @property
+    def dp(self) -> Optional[Tuple[str, ...]]:
+        return self.dp_axes if self.mesh is not None else None
+
+    @property
+    def tp_degree(self) -> int:
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return int(self.mesh.shape[self.tp_axis])
+
+    @property
+    def seq_axis(self) -> Optional[str]:
+        return self.tp_axis if self.seq_shard_acts else None
+
+
+def mshard(x: jax.Array, ctx: ParallelCtx, *spec) -> jax.Array:
+    """with_sharding_constraint that is a no-op without a mesh."""
+    if ctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+# ----------------------------------------------------------------------
+# numerics
+# ----------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [S] or [B, S] int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)          # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    if angles.ndim == 2:  # [S, D/2] -> broadcast over batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]                  # [B, S, 1, D/2]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, in_axis: int = 0) -> jax.Array:
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def stacked(keys, init_fn):
+    """vmap an init over a leading stack of PRNG keys."""
+    return jax.vmap(init_fn)(keys)

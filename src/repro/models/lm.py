@@ -1,0 +1,511 @@
+"""Unified causal LM covering every assigned architecture family.
+
+The layer stack is expressed as ``pattern * num_blocks + tail`` (see
+``ModelConfig.scan_pattern``) and lowered as a single ``lax.scan`` over
+blocks, so the HLO stays O(|pattern|) even for 94-layer models. Each slot
+in the pattern is one of the layer kinds:
+
+    AD  attention + dense MLP          (granite/nemotron/internlm2/llama3/
+                                        llava backbone/musicgen)
+    AM  attention + MoE MLP            (qwen3, llama4 odd layers)
+    AL  local sliding-window attention (recurrentgemma every 3rd layer)
+    S   Mamba2 SSD block               (mamba2)
+    R   RG-LRU recurrent block + MLP   (recurrentgemma)
+
+Three entry points:
+    forward_train(params, inputs, targets)        -> (loss, metrics)
+    prefill(params, inputs)                       -> (last_logits, caches)
+    decode_step(params, caches, token, pos)       -> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import attention as attn_mod
+from repro.models.common import ParallelCtx, apply_rope, dense_init, mshard, rms_norm
+from repro.models.mlp import init_mlp, mlp
+from repro.models.moe import init_moe, moe_mlp
+from repro.models.rglru import (LRUState, init_lru_state, init_rglru,
+                                rglru_decode_step, rglru_forward)
+from repro.models.ssm import (SSMState, init_ssd, init_ssm_state,
+                              ssd_decode_step, ssd_forward)
+
+PyTree = Any
+
+FLASH_THRESHOLD = 2048     # use chunked flash attention above this seq len
+# (at 4k+ the materialised [H, S, S] score tensor of full_attention
+# dominates peak memory once heads are data-local — §Perf-A iteration 2)
+
+
+# ======================================================================
+# init
+# ======================================================================
+
+def _init_attn(key, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.q_dim), dtype),
+        "wk": dense_init(ks[1], (d, cfg.kv_dim), dtype),
+        "wv": dense_init(ks[2], (d, cfg.kv_dim), dtype),
+        "wo": dense_init(ks[3], (cfg.q_dim, d), dtype),
+    }
+
+
+def _init_layer(key, kind: str, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    norm = lambda: jnp.zeros((d,), dtype)
+    if kind == "S":
+        return {"ssd": init_ssd(ks[0], cfg, dtype), "norm1": norm()}
+    if kind == "R":
+        return {
+            "rec": init_rglru(ks[0], cfg, dtype),
+            "mlp": init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_gated, dtype),
+            "norm1": norm(), "norm2": norm(),
+        }
+    p = {"attn": _init_attn(ks[0], cfg, dtype), "norm1": norm(), "norm2": norm()}
+    if kind == "AM":
+        p["moe"] = init_moe(ks[1], d, cfg.d_ff, cfg.num_experts,
+                            cfg.num_shared_experts, cfg.mlp_gated, dtype)
+    else:  # AD / AL
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.mlp_gated, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    dtype = jnp.dtype(cfg.param_dtype)
+    pattern, nblocks, tail = cfg.scan_pattern()
+    keys = jax.random.split(key, 4)
+    embed_std = cfg.d_model ** -0.5 if cfg.scale_embed else 1.0
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model), jnp.float32)
+                  * embed_std).astype(dtype) if cfg.vocab_size else None,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.vocab_size and not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], (cfg.d_model, cfg.padded_vocab), dtype)
+
+    bkeys = jax.random.split(keys[2], nblocks)
+    blocks = {}
+    for si, kind in enumerate(pattern):
+        slot_keys = jax.vmap(lambda k: jax.random.fold_in(k, si))(bkeys)
+        blocks[f"slot{si}"] = jax.vmap(
+            lambda k: _init_layer(k, kind, cfg, dtype))(slot_keys)
+    params["blocks"] = blocks
+
+    tkeys = jax.random.split(keys[3], max(len(tail), 1))
+    params["tail"] = {
+        f"layer{ti}": _init_layer(tkeys[ti], kind, cfg, dtype)
+        for ti, kind in enumerate(tail)
+    }
+    return params
+
+
+# ======================================================================
+# layer application
+# ======================================================================
+
+def attn_parallel_mode(cfg: ModelConfig, ctx: ParallelCtx) -> str:
+    """'ctxpar' when activations are sequence-sharded (serving), 'head' TP
+    when query heads divide the model axis, else 'qseq' (query-sequence
+    context parallelism) — covers any head count. 'none' = no model axis
+    (single device, or ZeRO-3 where `model` is data-parallel)."""
+    if ctx.mesh is None or ctx.tp_axis is None:
+        return "none"
+    if ctx.seq_shard_acts:
+        return "ctxpar"
+    tp = ctx.tp_degree
+    return "head" if cfg.num_heads % tp == 0 else "qseq"
+
+
+def _attn_apply(p, x, cfg: ModelConfig, ctx: ParallelCtx, *, kind: str,
+                mode: str, positions, cache=None, pos=None,
+                cache_dtype=jnp.bfloat16):
+    """Returns (out, new_cache_or_None). x: [B,S,d]."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    q = (x @ p["wq"].astype(cdt)).reshape(b, s, cfg.num_heads, hd)
+    k = (x @ p["wk"].astype(cdt)).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"].astype(cdt)).reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    pmode = attn_parallel_mode(cfg, ctx)
+    window = cfg.local_window if kind == "AL" else 0
+    new_cache = None
+
+    if mode == "decode":
+        assert cache is not None
+        if window:
+            slot = pos % window                     # ring buffer of size W
+            kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache_dtype), (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache_dtype), (0, slot, 0, 0))
+            valid_to = jnp.where(pos >= window, window - 1, pos)
+        else:
+            kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache_dtype), (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache_dtype), (0, pos, 0, 0))
+            valid_to = pos
+        if ctx.mesh is not None and ctx.decode_seq_parallel:
+            # flash-decoding: cache sharded along sequence over the model axis
+            kc = mshard(kc, ctx, ctx.dp, ctx.tp_axis, None, None)
+            vc = mshard(vc, ctx, ctx.dp, ctx.tp_axis, None, None)
+        out = attn_mod.decode_attention(q, kc, vc, valid_to, ctx=ctx)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        if pmode == "head":
+            # GQA -> MHA repeat so any kv_heads supports head TP
+            g = cfg.num_heads // cfg.num_kv_heads
+            kr = jnp.repeat(k, g, axis=2)
+            vr = jnp.repeat(v, g, axis=2)
+            q = mshard(q, ctx, ctx.dp, None, ctx.tp_axis, None)
+            kr = mshard(kr, ctx, ctx.dp, None, ctx.tp_axis, None)
+            vr = mshard(vr, ctx, ctx.dp, None, ctx.tp_axis, None)
+        elif pmode == "ctxpar":
+            # context-parallel serving: q stays sequence-sharded with the
+            # activations; K/V are gathered over the model axis (one AG of
+            # the small GQA KV per layer — DESIGN.md §Perf-B)
+            q = mshard(q, ctx, ctx.dp, ctx.tp_axis, None, None)
+            kr = mshard(k, ctx, ctx.dp, None, None, None)
+            vr = mshard(v, ctx, ctx.dp, None, None, None)
+        else:
+            # qseq: q sharded along sequence, K/V replicated
+            q = mshard(q, ctx, ctx.dp, ctx.tp_axis if pmode == "qseq" else None,
+                       None, None)
+            kr, vr = k, v
+        if window:
+            out = attn_mod.local_attention(q, kr, vr, window=window)
+        elif s > FLASH_THRESHOLD:
+            if pmode in ("qseq", "ctxpar"):
+                out = attn_mod.flash_attention_kvscan(q, kr, vr, causal=True)
+            else:
+                out = attn_mod.flash_attention(q, kr, vr, causal=True)
+        else:
+            out = attn_mod.full_attention(q, kr, vr, causal=True)
+        if pmode == "head":
+            out = mshard(out, ctx, ctx.dp, None, ctx.tp_axis, None)
+        elif pmode == "ctxpar":
+            out = mshard(out, ctx, ctx.dp, ctx.tp_axis, None, None)
+        if mode == "prefill":
+            if window:
+                # keep the trailing window in ring layout (slot = p % W)
+                if s < window:
+                    # short prompt: token p sits at slot p; right-pad to W
+                    pad = window - s
+                    wk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    wv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    wk = wk.astype(cache_dtype)
+                    wv = wv.astype(cache_dtype)
+                else:
+                    wk = k[:, -window:].astype(cache_dtype)
+                    wv = v[:, -window:].astype(cache_dtype)
+                    shift = s % window
+                    wk = jnp.roll(wk, shift, axis=1)
+                    wv = jnp.roll(wv, shift, axis=1)
+                new_cache = {"k": wk, "v": wv}
+            else:
+                kc = k.astype(cache_dtype)
+                vc = v.astype(cache_dtype)
+                if ctx.mesh is not None and ctx.decode_seq_parallel:
+                    kc = mshard(kc, ctx, ctx.dp, ctx.tp_axis, None, None)
+                    vc = mshard(vc, ctx, ctx.dp, ctx.tp_axis, None, None)
+                new_cache = {"k": kc, "v": vc}
+    out = out.reshape(b, out.shape[1], cfg.q_dim)
+    return out @ p["wo"].astype(cdt), new_cache
+
+
+def _apply_layer(p, x, kind: str, cfg: ModelConfig, ctx: ParallelCtx, *,
+                 mode: str, positions, cache=None, pos=None, rng=None,
+                 cache_dtype=jnp.bfloat16):
+    """One layer. Returns (x, new_cache, aux)."""
+    aux = {"load_balance": 0.0, "router_z": 0.0}
+    eps = cfg.norm_eps
+    resid_spec = (ctx.dp, ctx.seq_axis if mode != "decode" else None, None)
+
+    if kind == "S":
+        h = rms_norm(x, p["norm1"], eps)
+        if mode == "decode":
+            y, new_cache = ssd_decode_step(p["ssd"], h, cfg, ctx, cache)
+        else:
+            st = cache if cache is not None else (
+                init_ssm_state(cfg, x.shape[0], x.dtype) if mode == "prefill" else None)
+            y, new_cache = ssd_forward(p["ssd"], h, cfg, ctx, st)
+        x = mshard(x + y, ctx, *resid_spec)
+        return x, new_cache, aux
+
+    if kind == "R":
+        h = rms_norm(x, p["norm1"], eps)
+        if mode == "decode":
+            y, new_cache = rglru_decode_step(p["rec"], h, cfg, ctx, cache)
+        else:
+            st = cache if cache is not None else (
+                init_lru_state(cfg, x.shape[0], x.dtype) if mode == "prefill" else None)
+            y, new_cache = rglru_forward(p["rec"], h, cfg, ctx, st)
+        x = x + y
+        h = rms_norm(x, p["norm2"], eps)
+        x = mshard(x + mlp(p["mlp"], h, cfg.mlp_activation, ctx), ctx, *resid_spec)
+        return x, new_cache, aux
+
+    # attention kinds
+    h = rms_norm(x, p["norm1"], eps)
+    y, new_cache = _attn_apply(p["attn"], h, cfg, ctx, kind=kind, mode=mode,
+                               positions=positions, cache=cache, pos=pos,
+                               cache_dtype=cache_dtype)
+    x = x + y
+    h = rms_norm(x, p["norm2"], eps)
+    if kind == "AM":
+        y, aux = moe_mlp(p["moe"], h, experts_per_token=cfg.experts_per_token,
+                         act_name=cfg.mlp_activation, ctx=ctx,
+                         capacity_factor=cfg.moe_capacity_factor,
+                         router_jitter=cfg.router_jitter, rng=rng)
+    else:
+        y = mlp(p["mlp"], h, cfg.mlp_activation, ctx)
+    x = mshard(x + y, ctx, *resid_spec)
+    return x, new_cache, aux
+
+
+# ======================================================================
+# embedding / head
+# ======================================================================
+
+def _sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def embed_inputs(params, inputs, cfg: ModelConfig, ctx: ParallelCtx,
+                 positions) -> jax.Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.input_mode == "embeddings" and inputs.dtype in (jnp.float32, jnp.bfloat16):
+        x = inputs.astype(cdt)
+    else:
+        x = jnp.take(params["embed"], inputs, axis=0).astype(cdt)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    if cfg.pos_embed == "sinusoidal":
+        pe = _sinusoidal(positions, cfg.d_model).astype(cdt)
+        x = x + (pe[None] if pe.ndim == 2 else pe)
+    seq = ctx.seq_axis if x.shape[1] > 1 else None
+    return mshard(x, ctx, ctx.dp, seq, None)
+
+
+def unembed(params, x, cfg: ModelConfig, ctx: ParallelCtx) -> jax.Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x @ w.astype(cdt)
+    return mshard(logits, ctx, ctx.dp, None, ctx.tp_axis)
+
+
+# ======================================================================
+# stack
+# ======================================================================
+
+def _stack_forward(params, x, cfg: ModelConfig, ctx: ParallelCtx, *, mode,
+                   positions, caches=None, pos=None, rng=None, remat="none",
+                   cache_dtype=jnp.bfloat16):
+    """Run the full layer stack. Returns (x, new_caches, aux_sum)."""
+    pattern, nblocks, tail = cfg.scan_pattern()
+
+    def block_body(carry, xs):
+        x, aux_lb, aux_z = carry
+        slot_params, slot_caches, bi = xs
+        new_caches = {}
+        for si, kind in enumerate(pattern):
+            c = slot_caches.get(f"slot{si}") if slot_caches else None
+            r = jax.random.fold_in(rng, bi * 131 + si) if rng is not None else None
+            x, nc, aux = _apply_layer(
+                slot_params[f"slot{si}"], x, kind, cfg, ctx, mode=mode,
+                positions=positions, cache=c, pos=pos, rng=r,
+                cache_dtype=cache_dtype)
+            if nc is not None:
+                new_caches[f"slot{si}"] = nc
+        return (x, aux_lb + aux["load_balance"], aux_z + aux["router_z"]), new_caches
+
+    body = block_body
+    if remat == "full":
+        body = jax.checkpoint(block_body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            block_body, prevent_cse=False,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    if caches is None:
+        def body_nocache(carry, xs2):
+            sp, bi = xs2
+            return body(carry, (sp, None, bi))
+        (x, lb, zz), ys = jax.lax.scan(body_nocache, (x, 0.0, 0.0),
+                                       (params["blocks"], jnp.arange(nblocks)))
+    else:
+        (x, lb, zz), ys = jax.lax.scan(
+            body, (x, 0.0, 0.0),
+            (params["blocks"], caches["blocks"], jnp.arange(nblocks)))
+
+    new_caches = {"blocks": ys} if (mode in ("prefill", "decode")) else None
+
+    # tail layers (unscanned)
+    tail_caches = {}
+    for ti, kind in enumerate(tail):
+        c = caches["tail"][f"layer{ti}"] if caches is not None else None
+        r = jax.random.fold_in(rng, 7919 + ti) if rng is not None else None
+        x, nc, aux = _apply_layer(params["tail"][f"layer{ti}"], x, kind, cfg, ctx,
+                                  mode=mode, positions=positions, cache=c, pos=pos,
+                                  rng=r, cache_dtype=cache_dtype)
+        lb = lb + aux["load_balance"]
+        zz = zz + aux["router_z"]
+        if nc is not None:
+            tail_caches[f"layer{ti}"] = nc
+    if new_caches is not None:
+        new_caches["tail"] = tail_caches
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_caches, {"load_balance": lb, "router_z": zz}
+
+
+# ======================================================================
+# losses / entry points
+# ======================================================================
+
+def chunked_ce_loss(params, hidden, targets, cfg: ModelConfig, ctx: ParallelCtx,
+                    chunk: int = 0, z_loss: float = 0.0):
+    """Cross-entropy over the vocab, scanned over sequence chunks."""
+    b, s, d = hidden.shape
+    if chunk <= 0 or s % chunk:
+        chunk = s
+    nch = s // chunk
+    hc = hidden.reshape(b, nch, chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, nch, chunk).transpose(1, 0, 2)
+
+    pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+
+    @jax.checkpoint
+    def body(acc, inp):
+        # remat: without it the scan stacks every chunk's [*, V] f32
+        # logits for the backward (3.9 GiB at 256k vocab)
+        h, t = inp
+        logits = unembed(params, h, cfg, ctx).astype(jnp.float32)
+        logits = jnp.where(pad_mask, -1e30, logits)   # mask vocab padding
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = (lse - gold).sum()
+        zl = (lse ** 2).sum()
+        return (acc[0] + nll, acc[1] + zl), None
+
+    (nll, zl), _ = jax.lax.scan(body, (0.0, 0.0), (hc, tc))
+    ntok = b * s
+    loss = nll / ntok
+    if z_loss:
+        loss = loss + z_loss * zl / ntok
+    return loss
+
+
+def forward_train(params, inputs, targets, cfg: ModelConfig, ctx: ParallelCtx, *,
+                  rng=None, remat: str = "none", loss_chunk: int = 0,
+                  z_loss: float = 0.0, lb_coef: float = 0.0):
+    s = inputs.shape[1]
+    positions = jnp.arange(s)
+    x = embed_inputs(params, inputs, cfg, ctx, positions)
+    x, _, aux = _stack_forward(params, x, cfg, ctx, mode="train",
+                               positions=positions, rng=rng, remat=remat)
+    loss = chunked_ce_loss(params, x, targets, cfg, ctx, loss_chunk, z_loss)
+    if lb_coef and cfg.num_experts:
+        loss = loss + lb_coef * aux["load_balance"]
+    metrics = {"ce_loss": loss, "load_balance": aux["load_balance"]}
+    return loss, metrics
+
+
+def prefill(params, inputs, cfg: ModelConfig, ctx: ParallelCtx,
+            serve: ServeConfig = ServeConfig()):
+    s = inputs.shape[1]
+    positions = jnp.arange(s)
+    cdt = jnp.dtype(serve.cache_dtype)
+    x = embed_inputs(params, inputs, cfg, ctx, positions)
+    x, caches, _ = _stack_forward(params, x, cfg, ctx, mode="prefill",
+                                  positions=positions, cache_dtype=cdt)
+    logits = unembed(params, x[:, -1:], cfg, ctx)
+    return logits, caches
+
+
+def decode_step(params, caches, token, pos, cfg: ModelConfig, ctx: ParallelCtx,
+                serve: ServeConfig = ServeConfig()):
+    """token: [B,1] ids (or [B,1,d] embeds); pos: scalar int32."""
+    positions = jnp.asarray(pos)[None]
+    cdt = jnp.dtype(serve.cache_dtype)
+    x = embed_inputs(params, token, cfg, ctx, positions)
+    x, new_caches, _ = _stack_forward(params, x, cfg, ctx, mode="decode",
+                                      positions=positions, caches=caches, pos=pos,
+                                      cache_dtype=cdt)
+    logits = unembed(params, x, cfg, ctx)
+    return logits, new_caches
+
+
+# ======================================================================
+# cache init
+# ======================================================================
+
+def _layer_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, cdt):
+    hd = cfg.resolved_head_dim
+    if kind == "S":
+        return init_ssm_state(cfg, batch, cdt)
+    if kind == "R":
+        return init_lru_state(cfg, batch, cdt)
+    size = cfg.local_window if kind == "AL" else max_len
+    shape = (batch, size, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, cdt), "v": jnp.zeros(shape, cdt)}
+
+
+def pad_caches(caches: PyTree, cfg: ModelConfig, max_len: int) -> PyTree:
+    """Grow full-attention KV caches (seq axis) to ``max_len`` for decode.
+
+    Prefill returns caches sized to the prompt; decode writes at pos >= S,
+    which needs head-room. Ring-buffer (AL), SSM and LRU states are
+    fixed-size and pass through untouched.
+    """
+    pattern, _, tail = cfg.scan_pattern()
+
+    def pad_kind(kind, c, stacked):
+        if kind in ("S", "R", "AL") or c is None:
+            return c
+        seq_axis = 2 if stacked else 1
+        def pad(a):
+            extra = max_len - a.shape[seq_axis]
+            if extra <= 0:
+                return a
+            widths = [(0, 0)] * a.ndim
+            widths[seq_axis] = (0, extra)
+            return jnp.pad(a, widths)
+        return jax.tree.map(pad, c)
+
+    out = {"blocks": {}, "tail": {}}
+    for si, kind in enumerate(pattern):
+        key = f"slot{si}"
+        if key in caches["blocks"]:
+            out["blocks"][key] = pad_kind(kind, caches["blocks"][key], True)
+    for ti, kind in enumerate(tail):
+        key = f"layer{ti}"
+        if key in caches.get("tail", {}):
+            out["tail"][key] = pad_kind(kind, caches["tail"][key], False)
+    return out
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                serve: ServeConfig = ServeConfig()) -> PyTree:
+    cdt = jnp.dtype(serve.cache_dtype)
+    pattern, nblocks, tail = cfg.scan_pattern()
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (nblocks,) + a.shape), tree)
+
+    blocks = {f"slot{si}": stack(_layer_cache(kind, cfg, batch, max_len, cdt))
+              for si, kind in enumerate(pattern)}
+    tail_c = {f"layer{ti}": _layer_cache(kind, cfg, batch, max_len, cdt)
+              for ti, kind in enumerate(tail)}
+    return {"blocks": blocks, "tail": tail_c}

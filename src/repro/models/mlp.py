@@ -1,0 +1,37 @@
+"""Dense MLP blocks (gated SwiGLU-style and classic 2-matmul)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParallelCtx, activation, dense_init, mshard
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_out": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, act_name: str, ctx: ParallelCtx) -> jax.Array:
+    """x: [..., d_model]. TP: d_ff columns sharded, out rows sharded.
+    Context-parallel serving (ctx.seq_shard_acts): activations stay
+    sequence-sharded instead — the matmuls are then fully local."""
+    act = activation(act_name)
+    h = x @ params["w_in"].astype(x.dtype)
+    if ctx.seq_shard_acts and x.ndim == 3:
+        h = mshard(h, ctx, ctx.dp, ctx.seq_axis, None)
+    else:
+        # [B, S, d_ff]: batch over dp axes, d_ff over tp
+        h = mshard(h, ctx, ctx.dp, *((None,) * (x.ndim - 2)), ctx.tp_axis)
+    if "w_gate" in params:
+        h = act(x @ params["w_gate"].astype(x.dtype)) * h
+    else:
+        h = act(h)
+    out = h @ params["w_out"].astype(x.dtype)
+    return out

@@ -1,0 +1,220 @@
+"""Mixture-of-Experts MLP: top-k routing, sort-based capacity dispatch.
+
+Design notes (production scale):
+  * Token-choice top-k routing with a fixed per-expert capacity
+    C = ceil(T*k/E) * capacity_factor. Overflowing tokens are dropped
+    (their MoE output is 0, the residual passes through) — the standard
+    fixed-shape formulation for XLA.
+  * Dispatch is sort-based (argsort by expert id + rank-in-expert), not
+    one-hot einsum: the [T,E,C] one-hot tensor would be ~100x larger than
+    the token activations at 32k seq.
+  * Expert weights are laid out [E, d, ff] and sharded over the `model`
+    axis (expert parallelism) and the `data` axis (expert-FSDP); the
+    scatter/gather pair around the expert matmul is where XLA inserts the
+    all-to-all-equivalent collectives.
+  * Auxiliary load-balance loss (Switch-style) + router z-loss returned to
+    the caller.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParallelCtx, activation, dense_init, mshard
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int,
+             num_shared: int, gated: bool, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+
+    def bank(k, shape_in, shape_out):
+        return (jax.random.normal(k, (num_experts,) + shape_in, jnp.float32)
+                * (shape_in[0] ** -0.5)).astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], (d_model, num_experts), jnp.float32),
+        "w_in": bank(ks[1], (d_model, d_ff), None),
+        "w_out": (jax.random.normal(ks[2], (num_experts, d_ff, d_model), jnp.float32)
+                  * (d_ff ** -0.5)).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = bank(ks[3], (d_model, d_ff), None)
+    if num_shared:
+        p["shared"] = {
+            "w_in": dense_init(ks[4], (d_model, num_shared * d_ff), dtype),
+            "w_out": dense_init(ks[5], (num_shared * d_ff, d_model), dtype),
+        }
+        if gated:
+            p["shared"]["w_gate"] = dense_init(ks[6], (d_model, num_shared * d_ff), dtype)
+    return p
+
+
+def capacity(tokens: int, num_experts: int, k: int, factor: float = 1.25) -> int:
+    c = math.ceil(tokens * k / num_experts * factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _dispatch_group(params, xt, *, k: int, c: int, act_name: str,
+                    rng, router_jitter: float):
+    """Sort-based dispatch for ONE token group. xt: [T, d].
+
+    vmapped over the (batch-sharded) group axis by moe_mlp, so every
+    gather/scatter below carries the sharded leading dim — SPMD keeps the
+    dispatch local to each data shard instead of replicating [T*k, d]
+    buffers (the single biggest memory/collective win of the dry-run)."""
+    t, d = xt.shape
+    e = params["w_in"].shape[0]
+    logits = xt.astype(jnp.float32) @ params["router"]            # [T, E]
+    if router_jitter and rng is not None:
+        logits = logits + router_jitter * jax.random.normal(rng, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)               # [T, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss statistics (summed over groups by the caller)
+    me = probs.mean(0)
+    ce = jnp.zeros(e).at[expert_idx.reshape(-1)].add(1.0) / (t * k)
+    lb = e * jnp.sum(me * ce)
+    rz = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    flat_expert = expert_idx.reshape(-1)                          # [T*k]
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.arange(t * k, dtype=jnp.int32) // k
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    seg_start = jnp.searchsorted(sorted_expert, jnp.arange(e), side="left")
+    rank = jnp.arange(t * k) - seg_start[sorted_expert]
+    keep = rank < c
+    safe_rank = jnp.where(keep, rank, c - 1)
+
+    buckets = jnp.zeros((e, c, d), xt.dtype)
+    buckets = buckets.at[sorted_expert, safe_rank].add(
+        xt[sorted_token] * keep[:, None].astype(xt.dtype))
+    return (buckets, sorted_expert, sorted_token, sorted_gate, safe_rank,
+            keep, lb, rz)
+
+
+def _combine_group(out_b, sorted_expert, sorted_token, sorted_gate,
+                   safe_rank, keep, t: int):
+    contrib = out_b[sorted_expert, safe_rank]                     # [T*k, d]
+    contrib = contrib * (sorted_gate * keep)[:, None].astype(contrib.dtype)
+    return jnp.zeros((t, out_b.shape[-1]), out_b.dtype).at[sorted_token].add(contrib)
+
+
+def moe_mlp(
+    params: dict,
+    x: jax.Array,
+    *,
+    experts_per_token: int,
+    act_name: str,
+    ctx: ParallelCtx,
+    capacity_factor: float = 1.25,
+    router_jitter: float = 0.0,
+    rng: jax.Array | None = None,
+    seq_chunk: int = 4096,
+) -> Tuple[jax.Array, dict]:
+    """x: [B, S, d]. Returns (y [B,S,d], aux losses dict).
+
+    Dispatch is grouped per batch element (leading dim stays sharded over
+    `data`) and, for long sequences, chunked over S with a lax.scan so the
+    live dispatch buffers stay O(B * seq_chunk * d)."""
+    b, s, d = x.shape
+    e = params["w_in"].shape[0]
+    k = experts_per_token
+
+    if b * s <= 16384 or b == 1:
+        # small-token path (decode): a single flat group
+        groups, gs = 1, b * s
+        xg = x.reshape(1, b * s, d)
+        chunks = 1
+    else:
+        groups, gs = b, s
+        xg = x
+        chunks = max(1, s // seq_chunk) if s > seq_chunk and s % seq_chunk == 0 else 1
+
+    c = capacity(gs // chunks, e, k, capacity_factor)
+    act = activation(act_name)
+    w_in = params["w_in"]
+    w_gate = params.get("w_gate")
+    w_out = params["w_out"]
+
+    def process(xc, rngc):
+        # xc: [G, Tc, d]
+        disp = jax.vmap(lambda xt: _dispatch_group(
+            params, xt, k=k, c=c, act_name=act_name, rng=rngc,
+            router_jitter=router_jitter))(xc)
+        (buckets, se, st, sg, sr, keep, lb, rz) = disp
+        # Buckets stay token-sharded over `data` with experts over
+        # `model`. A forced (g-gather, E-slice) a2a choreography was
+        # tried and REFUTED (EXPERIMENTS.md §Perf-C iter 3): XLA answered
+        # with replicated expert matmuls (4x flops) on qwen3. The h
+        # tensor is left unconstrained so its layout follows the
+        # expert-bank sharding (larger-dim rule, launch/sharding.py).
+        buckets = mshard(buckets, ctx, ctx.dp, ctx.tp_axis, None, None)
+        h = jnp.einsum("gecd,edf->gecf", buckets, w_in.astype(xc.dtype))
+        if w_gate is not None:
+            h = act(jnp.einsum("gecd,edf->gecf", buckets,
+                               w_gate.astype(xc.dtype))) * h
+        else:
+            h = act(h)
+        out_b = jnp.einsum("gecf,efd->gecd", h.astype(xc.dtype),
+                           w_out.astype(xc.dtype))
+        out_b = mshard(out_b, ctx, ctx.dp, ctx.tp_axis, None, None)
+        y = jax.vmap(lambda ob, a, bt, g2, r2, kp: _combine_group(
+            ob, a, bt, g2, r2, kp, xc.shape[1]))(out_b, se, st, sg, sr, keep)
+        return y, lb.mean(), rz.mean()
+
+    if chunks == 1:
+        y, lb, rz = process(xg, rng)
+    else:
+        xc = xg.reshape(groups, chunks, gs // chunks, d).transpose(1, 0, 2, 3)
+        rngs = (jax.random.split(rng, chunks) if rng is not None
+                else jnp.zeros((chunks, 2), jnp.uint32))
+
+        def body(_, inp):
+            xcc, r = inp
+            y, lb, rz = process(xcc, r if rng is not None else None)
+            return (), (y, lb, rz)
+
+        _, (ys, lbs, rzs) = jax.lax.scan(body, (), (xc, rngs))
+        y = ys.transpose(1, 0, 2, 3).reshape(groups, gs, d)
+        lb, rz = lbs.mean(), rzs.mean()
+
+    aux = {"load_balance": lb, "router_z": rz}
+    y = y.reshape(b, s, d)
+    if "shared" in params:
+        from repro.models.mlp import mlp as dense_mlp
+        y = y + dense_mlp(params["shared"], x, act_name, ctx)
+    return y, aux
+
+
+def moe_mlp_reference(params, x, *, experts_per_token, act_name):
+    """Dense no-drop oracle: every token through its top-k experts."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, experts_per_token)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    act = activation(act_name)
+    y = jnp.zeros_like(xt)
+    for j in range(experts_per_token):
+        w_in = params["w_in"][expert_idx[:, j]]                   # [T, d, ff]
+        w_out = params["w_out"][expert_idx[:, j]]
+        h = jnp.einsum("td,tdf->tf", xt, w_in)
+        if "w_gate" in params:
+            g = jnp.einsum("td,tdf->tf", xt, params["w_gate"][expert_idx[:, j]])
+            h = act(g) * h
+        else:
+            h = act(h)
+        y = y + jnp.einsum("tf,tfd->td", h, w_out) * gate_vals[:, j:j + 1].astype(x.dtype)
+    if "shared" in params:
+        from repro.models.mlp import mlp as dense_mlp
+        ctx = ParallelCtx()
+        y = y + dense_mlp(params["shared"], xt, act_name, ctx)
+    return y.reshape(b, s, d)

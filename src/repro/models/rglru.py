@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma). [arXiv:2402.19427]
+
+Block: y = W_out( GeLU(W_gate x) * RGLRU(conv4(W_in x)) ).
+RG-LRU (diagonal linear recurrence with input & recurrence gates):
+
+    r_t = sigmoid(W_a u_t + b_a)
+    i_t = sigmoid(W_x u_t + b_x)
+    log a_t = c * r_t * log sigmoid(Lambda)        (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over the sequence —
+O(S log S) depth, fully parallel. Decode is a single fused step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParallelCtx, dense_init
+from repro.configs.base import ModelConfig
+
+_C = 8.0
+
+
+class LRUState(NamedTuple):
+    conv: jax.Array   # [B, W-1, w] trailing conv inputs
+    h: jax.Array      # [B, w] recurrent state
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a^c spans ~[0.9, 0.999] (paper appendix)
+    u = jax.random.uniform(ks[0], (w,), minval=0.9 ** 2, maxval=0.999 ** 2)
+    lam = jnp.log(u ** (1.0 / _C) / (1.0 - u ** (1.0 / _C)))   # sigmoid^-1
+    return {
+        "w_in": dense_init(ks[1], (d, w), dtype),
+        "w_gate": dense_init(ks[2], (d, w), dtype),
+        "conv_w": (jax.random.normal(ks[3], (4, w), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": dense_init(ks[4], (w, w), jnp.float32),
+        "gate_a_b": jnp.zeros((w,), jnp.float32),
+        "gate_x": dense_init(ks[5], (w, w), jnp.float32),
+        "gate_x_b": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "out_proj": dense_init(jax.random.fold_in(key, 7), (w, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[width - 1 - i]
+    return out + b
+
+
+def _gates(params, u):
+    """u: [..., w] fp32 -> (log_a, b_in) of the recurrence h = a h + b."""
+    r = jax.nn.sigmoid(u @ params["gate_a"] + params["gate_a_b"])
+    i = jax.nn.sigmoid(u @ params["gate_x"] + params["gate_x_b"])
+    log_a = _C * r * jax.nn.log_sigmoid(params["lam"])            # <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u)
+    return a, b
+
+
+def rglru_forward(
+    params: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx,
+    state: LRUState | None = None,
+) -> Tuple[jax.Array, LRUState | None]:
+    """x: [B, S, d] -> (y [B, S, d], final state)."""
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype))
+    u = x @ params["w_in"].astype(x.dtype)
+    if state is not None:
+        full = jnp.concatenate([state.conv.astype(u.dtype), u], axis=1)
+        u = _causal_conv(full, params["conv_w"], params["conv_b"])[:, state.conv.shape[1]:]
+        new_conv = full[:, -(params["conv_w"].shape[0] - 1):]
+    else:
+        u = _causal_conv(u, params["conv_w"], params["conv_b"])
+        new_conv = None
+    u = u.astype(jnp.float32)
+    a, b = _gates(params, u)                                      # [B,S,w]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_pref, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if state is not None:
+        h = h + a_pref * state.h[:, None, :].astype(jnp.float32)
+    y = (h.astype(x.dtype) * gate) @ params["out_proj"].astype(x.dtype)
+    new_state = LRUState(new_conv, h[:, -1]) if state is not None else None
+    return y, new_state
+
+
+def rglru_decode_step(
+    params: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx, state: LRUState,
+) -> Tuple[jax.Array, LRUState]:
+    """x: [B, 1, d]."""
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype))
+    u = x @ params["w_in"].astype(x.dtype)                                        # [B,1,w]
+    full = jnp.concatenate([state.conv.astype(u.dtype), u], axis=1)   # [B,W,w]
+    u = (full * params["conv_w"][None]).sum(1, keepdims=True) + params["conv_b"]
+    new_conv = full[:, 1:]
+    u = u.astype(jnp.float32)
+    a, b = _gates(params, u)
+    h = a[:, 0] * state.h.astype(jnp.float32) + b[:, 0]           # [B,w]
+    y = (h[:, None].astype(x.dtype) * gate) @ params["out_proj"].astype(x.dtype)
+    return y, LRUState(new_conv, h)
+
+
+def init_lru_state(cfg: ModelConfig, batch: int, dtype) -> LRUState:
+    w = cfg.lru_width or cfg.d_model
+    return LRUState(
+        conv=jnp.zeros((batch, 3, w), dtype),
+        h=jnp.zeros((batch, w), jnp.float32),
+    )

@@ -1,0 +1,181 @@
+"""Mamba2 / SSD (state-space duality) block. [arXiv:2405.21060]
+
+Chunked SSD for train/prefill (lax.scan over sequence chunks, carry = the
+[B, nh, hd, N] state), O(S * L) with chunk L; O(1)-state single-token
+decode. ngroups = 1 (B/C shared across heads).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParallelCtx, dense_init, mshard
+from repro.configs.base import ModelConfig
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # [B, W-1, d_conv_ch] trailing conv inputs
+    ssd: jax.Array    # [B, nh, hd, N]
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_ssd(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, n, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * di + 2 * n + nh          # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_channels(cfg)),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_channels(cfg),), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01))).astype(jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width W: x [B,S,C], w [W,C]."""
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, : x.shape[1]]
+        out = out + shifted * w[width - 1 - i]
+    return out + b
+
+
+def _split_proj(proj: jax.Array, cfg: ModelConfig):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di: di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(z.dtype)
+
+
+def ssd_forward(
+    params: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx,
+    state: SSMState | None = None,
+) -> Tuple[jax.Array, SSMState | None]:
+    """x: [B, S, d_model] -> (y, final_state). Chunked SSD."""
+    b, s, _ = x.shape
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    L = min(cfg.ssm_chunk, s)
+    s_orig = s
+    if s % L:
+        # pad to a chunk multiple; padded steps get dt == 0 (identity
+        # transition, zero input) so y[:s] and the final state are exact
+        pad = L - s % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // L
+    valid = (jnp.arange(s) < s_orig)[None, :, None]               # [1,S,1]
+
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    if state is not None:
+        full = jnp.concatenate([state.conv, xbc], axis=1)
+        xbc = _causal_conv(full, params["conv_w"], params["conv_b"])[:, state.conv.shape[1]:]
+        # trailing W-1 *real* (unpadded) conv inputs
+        new_conv = jax.lax.dynamic_slice_in_dim(full, s_orig, cfg.ssm_conv_width - 1, 1)
+    else:
+        xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        new_conv = None
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xs = xbc[..., :di].reshape(b, s, nh, hd)                      # [B,S,nh,hd]
+    Bm = xbc[..., di: di + n]                                     # [B,S,N]
+    Cm = xbc[..., di + n:]                                        # [B,S,N]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # [B,S,nh]
+    dt = dt * valid                                               # zero padded steps
+    A = -jnp.exp(params["A_log"])                                 # [nh]
+    a = dt * A                                                    # [B,S,nh] log-decay
+
+    # chunk
+    xs_c = xs.reshape(b, nc, L, nh, hd)
+    B_c = Bm.reshape(b, nc, L, n)
+    C_c = Cm.reshape(b, nc, L, n)
+    dt_c = dt.reshape(b, nc, L, nh)
+    a_c = a.reshape(b, nc, L, nh)
+
+    h0 = state.ssd if state is not None else jnp.zeros((b, nh, hd, n), jnp.float32)
+
+    def chunk_step(h, inp):
+        xc, bc, cc, dtc, ac = inp                 # per-chunk [B,L,...]
+        acum = jnp.cumsum(ac, axis=1)             # [B,L,nh]
+        atot = acum[:, -1]                        # [B,nh]
+        # intra-chunk (quadratic within the chunk only)
+        seg = acum[:, :, None, :] - acum[:, None, :, :]           # [B,L,L,nh]  (t,s)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        g = jnp.einsum("btn,bsn->bts", cc, bc)                    # [B,L,L]
+        m = g[..., None] * decay * dtc[:, None, :, :]             # [B,L,L,nh]
+        y_intra = jnp.einsum("btsh,bshd->bthd", m, xc)
+        # inter-chunk contribution from the carried state
+        y_inter = jnp.einsum("btn,bhdn->bthd", cc, h) * jnp.exp(acum)[..., None]
+        # state update
+        w = jnp.exp(atot[:, None, :] - acum) * dtc                # [B,L,nh]
+        dh = jnp.einsum("blh,blhd,bln->bhdn", w, xc, bc)
+        h_new = h * jnp.exp(atot)[:, :, None, None] + dh
+        return h_new, y_intra + y_inter
+
+    inputs = (
+        xs_c.transpose(1, 0, 2, 3, 4),
+        B_c.transpose(1, 0, 2, 3),
+        C_c.transpose(1, 0, 2, 3),
+        dt_c.transpose(1, 0, 2, 3),
+        a_c.transpose(1, 0, 2, 3),
+    )
+    h_fin, ys = jax.lax.scan(chunk_step, h0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, hd)
+    y = y + xs * params["D"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)[:, :s_orig]
+    y = _gated_norm(y, z[:, :s_orig], params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(y.dtype)
+    new_state = SSMState(new_conv, h_fin) if state is not None else None
+    return out, new_state
+
+
+def ssd_decode_step(
+    params: dict, x: jax.Array, cfg: ModelConfig, ctx: ParallelCtx, state: SSMState,
+) -> Tuple[jax.Array, SSMState]:
+    """x: [B, 1, d_model], O(1) state update."""
+    b = x.shape[0]
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    full = jnp.concatenate([state.conv, xbc], axis=1)             # [B, W, C]
+    conv_out = (full * params["conv_w"][None]).sum(1, keepdims=True) + params["conv_b"]
+    new_conv = full[:, 1:]
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32))               # [B,1,C]
+    xs = xbc[..., :di].reshape(b, nh, hd)
+    Bm = xbc[:, 0, di: di + n]                                    # [B,N]
+    Cm = xbc[:, 0, di + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B,nh]
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                                       # [B,nh]
+    dh = jnp.einsum("bh,bhd,bn->bhdn", dt, xs, Bm)
+    h = state.ssd * decay[:, :, None, None] + dh
+    y = jnp.einsum("bn,bhdn->bhd", Cm, h) + xs * params["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = _gated_norm(y, z, params["norm_scale"], cfg.norm_eps)
+    return y @ params["out_proj"].astype(y.dtype), SSMState(new_conv, h)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_channels(cfg)), dtype),
+        ssd=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    )

@@ -1,0 +1,5 @@
+from repro.serve.engine import (QueryRequest, QueryResponse, QueryServer,
+                                merge_shard_results)
+
+__all__ = ["QueryRequest", "QueryResponse", "QueryServer",
+           "merge_shard_results"]

@@ -1,0 +1,136 @@
+"""Batched query serving — the online half of the engine (paper §4).
+
+The web application sends labelled-patch queries; this module is the
+"search application": it batches concurrent requests, fits the requested
+model per query, executes the range queries, and returns ranked ids with
+latency statistics. Mirrors a FastAPI deployment's behaviour minus the
+HTTP layer (swappable transport), so serving-path tests and benchmarks
+measure exactly what production would.
+
+Production notes:
+  * queries are independent → batching is for device efficiency
+    (box_scan over the union of all queries' boxes), not semantics;
+  * the feature DB / indexes shard over hosts; each host runs one
+    QueryServer on its shard and a stateless front end merges id lists;
+  * per-request deadline + error isolation: one bad query never takes
+    down the batch.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import MODELS, QueryResult, SearchEngine
+
+
+@dataclass
+class QueryRequest:
+    request_id: int
+    pos_ids: Sequence[int]
+    neg_ids: Sequence[int]
+    model: str = "dbranch"
+    kwargs: Dict = field(default_factory=dict)
+
+
+@dataclass
+class QueryResponse:
+    request_id: int
+    ok: bool
+    result: Optional[QueryResult] = None
+    error: str = ""
+    latency_s: float = 0.0
+
+
+class QueryServer:
+    """Synchronous core (``handle``) + threaded front end (``submit``)."""
+
+    def __init__(self, engine: SearchEngine, *, max_batch: int = 8,
+                 batch_window_s: float = 0.002):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.batch_window_s = batch_window_s
+        self._q: "queue.Queue[Tuple[QueryRequest, queue.Queue]]" = queue.Queue()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.stats = {"served": 0, "errors": 0, "batches": 0,
+                      "latency_sum": 0.0}
+
+    # ------------------------------------------------------------------
+    def handle(self, req: QueryRequest) -> QueryResponse:
+        t0 = time.perf_counter()
+        try:
+            res = self.engine.query(req.pos_ids, req.neg_ids,
+                                    model=req.model, **req.kwargs)
+            resp = QueryResponse(req.request_id, True, res,
+                                 latency_s=time.perf_counter() - t0)
+        except Exception as e:  # noqa: BLE001 — per-request isolation
+            resp = QueryResponse(req.request_id, False, None, f"{e}",
+                                 time.perf_counter() - t0)
+        self.stats["served"] += 1
+        self.stats["errors"] += 0 if resp.ok else 1
+        self.stats["latency_sum"] += resp.latency_s
+        return resp
+
+    def handle_batch(self, reqs: List[QueryRequest]) -> List[QueryResponse]:
+        self.stats["batches"] += 1
+        return [self.handle(r) for r in reqs]
+
+    # ------------------------------------------------------------------
+    # threaded front end
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def submit(self, req: QueryRequest) -> "queue.Queue[QueryResponse]":
+        out: "queue.Queue[QueryResponse]" = queue.Queue(maxsize=1)
+        self._q.put((req, out))
+        return out
+
+    def _loop(self):
+        while not self._stop.is_set():
+            try:
+                first = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = [first]
+            deadline = time.perf_counter() + self.batch_window_s
+            while len(batch) < self.max_batch:
+                try:
+                    batch.append(self._q.get(
+                        timeout=max(deadline - time.perf_counter(), 0)))
+                except queue.Empty:
+                    break
+            reqs = [b[0] for b in batch]
+            resps = self.handle_batch(reqs)
+            for (_, out), resp in zip(batch, resps):
+                out.put(resp)
+
+    def close(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+
+    # ------------------------------------------------------------------
+    def summary(self) -> Dict:
+        served = max(self.stats["served"], 1)
+        return {**self.stats,
+                "mean_latency_s": self.stats["latency_sum"] / served}
+
+
+def merge_shard_results(per_shard: List[QueryResult],
+                        shard_offsets: List[int]) -> Tuple[np.ndarray, np.ndarray]:
+    """Front-end merge of per-host results: offset local ids to global,
+    concatenate, re-rank by score. Pure function — stateless front end."""
+    ids, scores = [], []
+    for res, off in zip(per_shard, shard_offsets):
+        ids.append(res.ids + off)
+        scores.append(res.scores)
+    ids = np.concatenate(ids) if ids else np.empty(0, np.int64)
+    scores = np.concatenate(scores) if scores else np.empty(0)
+    order = np.argsort(-scores, kind="stable")
+    return ids[order], scores[order]

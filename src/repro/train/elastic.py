@@ -1,0 +1,108 @@
+"""Elastic scaling + failure handling.
+
+On node loss the job restarts on the surviving device set: the mesh is
+rebuilt with ``elastic_mesh_shape`` and the latest checkpoint is resharded
+onto it. Because checkpoints are stored as full logical arrays (host
+numpy, topology-independent) the reshard is just ``jax.device_put`` with
+the new sharding — no per-shard stitching, which is what makes restarts
+on *any* topology safe.
+
+Also here: straggler/preemption utilities used by the Trainer:
+  * ``Heartbeat``   — per-step deadline monitor (straggler detection);
+  * ``Preemption``  — SIGTERM-triggered save-and-exit flag.
+"""
+from __future__ import annotations
+
+import signal
+import threading
+import time
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import elastic_mesh_shape
+
+PyTree = Any
+
+
+def remesh(n_devices: int, model_axis: int = 16) -> Mesh:
+    """Build the largest (data, model) mesh from the surviving devices."""
+    shape = elastic_mesh_shape(n_devices, model_axis)
+    devs = jax.devices()[: shape[0] * shape[1]]
+    import numpy as np
+    return Mesh(np.asarray(devs).reshape(shape), ("data", "model"))
+
+
+def reshard_state(state: PyTree, shardings: PyTree) -> PyTree:
+    """Place a host-side (or differently-sharded) pytree onto new
+    shardings — the elastic-restart data path."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, shardings)
+
+
+class Preemption:
+    """SIGTERM/SIGINT -> ``requested`` flag; the train loop checkpoints
+    and exits cleanly at the next step boundary."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.requested = False
+        self._prev = {}
+        for s in signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handler)
+            except ValueError:      # non-main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def restore(self):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+
+
+class Heartbeat:
+    """Step-deadline monitor. ``beat()`` each step; if a step exceeds
+    ``deadline_s`` the ``on_straggler`` callback fires (log + metrics in
+    production; the trainer also counts skips)."""
+
+    def __init__(self, deadline_s: float, on_straggler: Callable[[float], None]):
+        self.deadline = deadline_s
+        self.on_straggler = on_straggler
+        self._last = time.monotonic()
+        self._stop = threading.Event()
+        self._fired_for_step = False
+        self._thread = threading.Thread(target=self._watch, daemon=True)
+        self._thread.start()
+
+    def beat(self):
+        self._last = time.monotonic()
+        self._fired_for_step = False
+
+    def _watch(self):
+        while not self._stop.wait(min(self.deadline / 4, 1.0)):
+            dt = time.monotonic() - self._last
+            if dt > self.deadline and not self._fired_for_step:
+                self._fired_for_step = True
+                self.on_straggler(dt)
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+
+
+def simulate_failure_and_restart(
+    state: PyTree,
+    make_shardings: Callable[[Mesh], PyTree],
+    *,
+    old_mesh: Mesh,
+    surviving_devices: int,
+    model_axis: int = 1,
+) -> Tuple[Mesh, PyTree]:
+    """Test harness for the elastic path: take a sharded state, 'lose'
+    devices, rebuild a smaller mesh and reshard. Returns (mesh, state)."""
+    host_state = jax.tree.map(lambda x: jax.device_get(x), state)
+    new_mesh = remesh(surviving_devices, model_axis)
+    shardings = make_shardings(new_mesh)
+    return new_mesh, reshard_state(host_state, shardings)

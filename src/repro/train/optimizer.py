@@ -1,0 +1,140 @@
+"""Sharded AdamW + Adafactor and LR schedules (no external deps).
+
+Optimizer states mirror the parameter pytree, so the same sharding rules
+apply to both. ``opt_state_dtype`` lets the >=200B MoE archs keep bf16
+moments (fp32 m/v would not fit 16 GB/chip on the 16x16 mesh).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    m: PyTree
+    v: PyTree
+    step: jax.Array
+
+
+def cosine_schedule(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return schedule
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+class AdamW:
+    """Decoupled weight decay Adam. Functional: init/update are pure."""
+
+    def __init__(self, schedule: Callable, beta1=0.9, beta2=0.95, eps=1e-8,
+                 weight_decay=0.1, state_dtype="float32"):
+        self.schedule = schedule
+        self.b1, self.b2, self.eps = beta1, beta2, eps
+        self.wd = weight_decay
+        self.state_dtype = jnp.dtype(state_dtype)
+
+    def init(self, params: PyTree) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return AdamWState(
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, grads: PyTree, state: AdamWState, params: PyTree
+               ) -> Tuple[PyTree, AdamWState]:
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            # decoupled weight decay (skip 1-d params: norms, biases)
+            if p.ndim >= 2:
+                delta = delta + self.wd * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        newp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        newm = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        newv = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return newp, AdamWState(newm, newv, step)
+
+
+class Adafactor:
+    """Factored second-moment optimizer (for memory-constrained archs).
+
+    Matrices keep row/col factored v (O(n+m) instead of O(nm)); vectors
+    fall back to full v. beta1=0 (no momentum) as in the paper defaults.
+    """
+
+    def __init__(self, schedule: Callable, decay=0.8, eps=1e-30, clip=1.0):
+        self.schedule = schedule
+        self.decay, self.eps, self.clip = decay, eps, clip
+
+    def init(self, params: PyTree) -> PyTree:
+        def f(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"factored": jax.tree.map(f, params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads: PyTree, state: PyTree, params: PyTree):
+        step = state["step"] + 1
+        lr = self.schedule(step)
+        beta = 1.0 - step.astype(jnp.float32) ** -self.decay
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + self.eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(vr.mean(-1, keepdims=True)[..., None], self.eps))
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(v)
+                ns = {"v": v}
+            u = g32 / jnp.maximum(denom, self.eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)))
+            u = u / jnp.maximum(1.0, rms / self.clip)
+            newp = p.astype(jnp.float32) - lr * u
+            return newp.astype(p.dtype), ns
+
+        flat, treedef = jax.tree.flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        sflat = treedef.flatten_up_to(state["factored"])
+        pairs = [upd(g, s, p) for g, s, p in zip(gflat, sflat, flat)]
+        newp = jax.tree.unflatten(treedef, [a for a, _ in pairs])
+        news = jax.tree.unflatten(treedef, [b for _, b in pairs])
+        return newp, {"factored": news, "step": step}

@@ -1,0 +1,138 @@
+"""The training loop — checkpointed, preemptible, straggler-aware.
+
+Composes the substrate:
+  steps.make_train_step  (pjit-sharded, microbatched, remat)
+  data.Prefetcher        (deterministic resumable batches)
+  checkpoint.CheckpointManager (atomic, async)
+  elastic.{Preemption, Heartbeat}
+
+The same Trainer drives the ~100M-param example run on CPU and the
+production mesh on a pod — only the config differs.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import DataConfig, Prefetcher, TokenSource
+from repro.launch import sharding as shd
+from repro.launch.steps import (TrainState, init_train_state, make_train_step)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import Heartbeat, Preemption
+
+log = logging.getLogger("repro.trainer")
+PyTree = Any
+
+
+@dataclass
+class TrainerReport:
+    steps_run: int = 0
+    final_loss: float = float("nan")
+    losses: List[float] = field(default_factory=list)
+    straggler_events: int = 0
+    preempted: bool = False
+    resumed_from: Optional[int] = None
+    tokens_per_s: float = 0.0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tc: TrainConfig,
+        dc: DataConfig,
+        *,
+        mesh=None,
+        checkpoint_dir: Optional[str | Path] = None,
+        checkpoint_every: int = 50,
+        step_deadline_s: float = 300.0,
+        source=None,
+    ):
+        self.cfg, self.tc, self.dc = cfg, tc, dc
+        self.mesh = mesh
+        self.step_fn = jax.jit(make_train_step(cfg, tc, mesh),
+                               donate_argnums=(0,))
+        self.source = source or TokenSource(dc)
+        self.ckpt = (CheckpointManager(checkpoint_dir)
+                     if checkpoint_dir else None)
+        self.checkpoint_every = checkpoint_every
+        self.step_deadline_s = step_deadline_s
+
+    # ------------------------------------------------------------------
+    def init_or_restore(self, seed: int = 0) -> TrainState:
+        state = init_train_state(jax.random.PRNGKey(seed), self.cfg, self.tc)
+        self._resumed_from = None
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            state = self.ckpt.restore(state)
+            state = jax.tree.map(jnp.asarray, state)
+            self._resumed_from = int(state.step)
+            log.info("restored checkpoint at step %s", self._resumed_from)
+        if self.mesh is not None:
+            shardings = TrainState(
+                params=shd.params_shardings(state.params, self.mesh),
+                opt=type(state.opt)(
+                    m=shd.params_shardings(state.opt.m, self.mesh),
+                    v=shd.params_shardings(state.opt.v, self.mesh),
+                    step=shd.replicated(self.mesh)),
+                step=shd.replicated(self.mesh))
+            state = jax.tree.map(jax.device_put, state, shardings)
+        return state
+
+    # ------------------------------------------------------------------
+    def run(self, num_steps: int, *, state: Optional[TrainState] = None,
+            log_every: int = 10) -> tuple[TrainState, TrainerReport]:
+        report = TrainerReport()
+        if state is None:
+            state = self.init_or_restore(self.tc.seed)
+        report.resumed_from = self._resumed_from
+        start_step = int(jax.device_get(state.step))
+        prefetch = Prefetcher(self.source, start_step=start_step)
+        preempt = Preemption()
+        hb = Heartbeat(self.step_deadline_s,
+                       lambda dt: self._on_straggler(report, dt))
+        rng = jax.random.PRNGKey(self.tc.seed ^ 0x5EED)
+
+        tokens = self.dc.global_batch * self.dc.seq_len
+        t0 = time.perf_counter()
+        try:
+            for step in range(start_step, start_step + num_steps):
+                batch = next(prefetch)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                step_rng = jax.random.fold_in(rng, step)
+                state, metrics = self.step_fn(state, batch, step_rng)
+                hb.beat()
+                loss = float(jax.device_get(metrics["loss"]))
+                report.losses.append(loss)
+                report.steps_run += 1
+                if log_every and (step % log_every == 0):
+                    log.info("step %d loss %.4f", step, loss)
+                if (self.ckpt is not None and self.checkpoint_every
+                        and (step + 1) % self.checkpoint_every == 0):
+                    self.ckpt.save_async(step + 1, jax.device_get(state))
+                if preempt.requested:
+                    report.preempted = True
+                    if self.ckpt is not None:
+                        self.ckpt.save(step + 1, jax.device_get(state))
+                    break
+        finally:
+            prefetch.close()
+            hb.close()
+            preempt.restore()
+            if self.ckpt is not None:
+                self.ckpt.wait()
+        dt = time.perf_counter() - t0
+        report.final_loss = report.losses[-1] if report.losses else float("nan")
+        report.tokens_per_s = report.steps_run * tokens / max(dt, 1e-9)
+        return state, report
+
+    def _on_straggler(self, report: TrainerReport, dt: float) -> None:
+        report.straggler_events += 1
+        log.warning("straggler: step exceeded %.1fs (%.1fs)",
+                    self.step_deadline_s, dt)

@@ -1,0 +1,33 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — tests must see
+the real host device (the 512-device override belongs to dryrun.py only).
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def blob_data():
+    """Separable 2-class blobs in 16-d: class 1 concentrated, class 0
+    spread — the canonical search-by-classification setting."""
+    r = np.random.default_rng(42)
+    n_pos, n_neg, d = 60, 400, 16
+    pos = r.normal(2.0, 0.3, (n_pos, d)).astype(np.float32)
+    neg = r.normal(0.0, 1.0, (n_neg, d)).astype(np.float32)
+    x = np.concatenate([pos, neg])
+    y = np.concatenate([np.ones(n_pos), np.zeros(n_neg)]).astype(np.int32)
+    return x, y
+
+
+@pytest.fixture(scope="session")
+def catalog():
+    """A small synthetic patch catalog with features + labels."""
+    from repro.data.synthetic import (PatchDatasetConfig, generate_patches,
+                                      handcrafted_features)
+    data = generate_patches(PatchDatasetConfig(n_patches=1500, seed=3))
+    feats = handcrafted_features(data["images"])
+    return feats, data["labels"]

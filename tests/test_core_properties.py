@@ -1,0 +1,139 @@
+"""Hypothesis property tests on the system's core invariants.
+
+The co-design's contract (DESIGN.md §7): for ANY data and ANY boxes,
+the index path returns exactly the full-scan result set; zone pruning
+never drops a matching block; DBranch boxes contain no training
+negatives; k-d tree oracle agrees with both.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.boxes import BoxSet, boxes_contain
+from repro.core.dbranch import fit_dbranch
+from repro.core.index import build_index, query_index
+from repro.core.kdtree import build_kdtree, range_query
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def data_and_boxes(draw):
+    n = draw(st.integers(16, 400))
+    d = draw(st.integers(1, 6))
+    b = draw(st.integers(1, 8))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    # boxes around random data points (non-degenerate selectivity)
+    centers = x[rng.integers(0, n, b)]
+    width = np.abs(rng.normal(0.5, 0.5, (b, d))).astype(np.float32)
+    lo, hi = centers - width, centers + width
+    return x, lo, hi
+
+
+@given(data_and_boxes())
+def test_index_equals_scan(args):
+    """THE paper invariant: index-accelerated range query == full scan."""
+    x, lo, hi = args
+    d = x.shape[1]
+    dims = np.arange(d)
+    idx = build_index(x, dims, block=32)
+    counts, stats = query_index(idx, BoxSet(lo, hi, dims), use_pallas=True)
+    want = boxes_contain(x, lo, hi)
+    np.testing.assert_array_equal(counts, want)
+    assert stats["blocks_touched"] <= stats["blocks_total"]
+
+
+@given(data_and_boxes())
+def test_zone_prune_soundness(args):
+    """Pruned blocks contain no matching rows (no false negatives)."""
+    x, lo, hi = args
+    d = x.shape[1]
+    idx = build_index(x, np.arange(d), block=32)
+    from repro.kernels import ref as kref
+    import jax.numpy as jnp
+    mask = np.asarray(kref.zone_prune_ref(
+        jnp.asarray(idx.zlo), jnp.asarray(idx.zhi),
+        jnp.asarray(lo), jnp.asarray(hi)))          # [NB, B]
+    rows = idx.rows.reshape(idx.n_blocks, idx.block, d)
+    for bi in range(idx.n_blocks):
+        for qi in range(lo.shape[0]):
+            if not mask[bi, qi]:
+                inside = ((rows[bi] > lo[qi]) & (rows[bi] <= hi[qi])).all(-1)
+                assert not inside.any(), (bi, qi)
+
+
+@given(data_and_boxes())
+def test_kdtree_oracle_agreement(args):
+    """Bentley k-d tree (the paper's structure) returns the same ids."""
+    x, lo, hi = args
+    tree = build_kdtree(x, leaf_size=16)
+    counts = boxes_contain(x, lo[:1], hi[:1])
+    ids_scan = np.nonzero(counts > 0)[0]
+    ids_tree, touched = range_query(tree, lo[0], hi[0])
+    np.testing.assert_array_equal(np.sort(ids_tree), ids_scan)
+    assert touched <= len(x)
+
+
+@st.composite
+def labelled_data(draw):
+    seed = draw(st.integers(0, 2**31 - 1))
+    n_pos = draw(st.integers(3, 30))
+    n_neg = draw(st.integers(5, 80))
+    d = draw(st.integers(2, 8))
+    rng = np.random.default_rng(seed)
+    xp = rng.normal(1.5, 0.5, (n_pos, d)).astype(np.float32)
+    xn = rng.normal(0.0, 1.0, (n_neg, d)).astype(np.float32)
+    return xp, xn
+
+
+@given(labelled_data())
+def test_dbranch_excludes_training_negatives(args):
+    xp, xn = args
+    d = xp.shape[1]
+    bs = fit_dbranch(xp, xn, np.arange(d), max_depth=16)
+    if bs.n_boxes == 0:
+        return
+    assert (bs.contains(xn) == 0).all(), "a training negative is inside a box"
+
+
+@given(labelled_data())
+def test_dbranch_covers_training_positives(args):
+    """With enough depth every training positive lands in >=1 box."""
+    xp, xn = args
+    d = xp.shape[1]
+    bs = fit_dbranch(xp, xn, np.arange(d), max_depth=64)
+    # duplicated pos/neg points make a pure leaf impossible; tolerate those
+    dup = (xn[None, :, :] == xp[:, None, :]).all(-1).any(1)
+    covered = bs.contains(xp) > 0
+    assert covered[~dup].all()
+
+
+@given(labelled_data())
+def test_dbranch_subset_constraint(args):
+    """Boxes only constrain dims inside the declared subset."""
+    xp, xn = args
+    d = xp.shape[1]
+    if d < 3:
+        return
+    dims = np.asarray([0, 2])
+    bs = fit_dbranch(xp, xn, dims, max_depth=16)
+    lo_full, hi_full = bs.to_full(d)
+    other = np.setdiff1d(np.arange(d), dims)
+    assert np.all(np.isinf(lo_full[:, other]))
+    assert np.all(np.isinf(hi_full[:, other]))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(10, 300), st.integers(1, 5))
+def test_morton_index_roundtrip(seed, n, d):
+    """Index permutation is a bijection; counts map back to original order."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    idx = build_index(x, np.arange(d), block=16)
+    valid = idx.perm >= 0
+    perm = idx.perm[valid]
+    assert len(np.unique(perm)) == n
+    np.testing.assert_allclose(
+        np.sort(idx.rows[: n], axis=0), np.sort(x, axis=0), rtol=1e-6)

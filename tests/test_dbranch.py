@@ -1,0 +1,134 @@
+"""DBranch / DBEns unit tests (numpy + JAX trainers)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.boxes import BoxSet
+from repro.core.dbranch import (fit_dbens, fit_dbranch,
+                                fit_dbranch_best_subset, fit_dbranch_jax,
+                                predict_boxes_jax)
+from repro.core.subsets import make_subsets
+
+
+def test_fit_dbranch_separable(blob_data):
+    x, y = blob_data
+    xp, xn = x[y == 1], x[y == 0]
+    bs = fit_dbranch(xp, xn, np.arange(x.shape[1]), max_depth=12)
+    assert bs.n_boxes >= 1
+    assert (bs.contains(xp) > 0).all()
+    assert (bs.contains(xn) == 0).all()
+
+
+def test_fit_dbranch_generalizes(blob_data):
+    """Box expansion should capture unseen positives from the same cluster."""
+    x, y = blob_data
+    rng = np.random.default_rng(1)
+    pos_idx = np.nonzero(y == 1)[0]
+    train_pos = pos_idx[:30]
+    test_pos = pos_idx[30:]
+    xn = x[y == 0][:100]
+    bs = fit_dbranch(x[train_pos], xn, np.arange(x.shape[1]))
+    recall = (bs.contains(x[test_pos]) > 0).mean()
+    assert recall > 0.5, f"expanded boxes should find unseen positives, got {recall}"
+
+
+def test_best_subset_is_answerable(blob_data):
+    x, y = blob_data
+    subsets = make_subsets(x.shape[1], n_subsets=8, subset_dim=4, seed=0)
+    bs = fit_dbranch_best_subset(x[y == 1], x[y == 0], subsets)
+    assert 0 <= bs.subset_id < len(subsets)
+    np.testing.assert_array_equal(bs.dims, subsets[bs.subset_id])
+
+
+def test_dbens_box_count_and_subsets(blob_data):
+    x, y = blob_data
+    subsets = make_subsets(x.shape[1], n_subsets=8, subset_dim=4, seed=0)
+    models = fit_dbens(x[y == 1], x[y == 0], subsets, n_models=5, seed=1)
+    assert len(models) == 5
+    for m in models:
+        assert m.subset_id >= 0
+        np.testing.assert_array_equal(m.dims, subsets[m.subset_id])
+
+
+def test_dbens_improves_recall_over_single(blob_data):
+    x, y = blob_data
+    rng = np.random.default_rng(2)
+    pos_idx = np.nonzero(y == 1)[0]
+    train_pos, test_pos = pos_idx[:25], pos_idx[25:]
+    xn = x[y == 0][:150]
+    subsets = make_subsets(x.shape[1], n_subsets=10, subset_dim=4, seed=3)
+    single = fit_dbranch_best_subset(x[train_pos], xn, subsets)
+    ens = fit_dbens(x[train_pos], xn, subsets, n_models=15, seed=3)
+    r1 = (single.contains(x[test_pos]) > 0).mean()
+    cnt = np.zeros(len(test_pos))
+    for m in ens:
+        cnt += m.contains(x[test_pos])
+    r2 = (cnt > 0).mean()
+    assert r2 >= r1 - 1e-9
+
+
+# ----------------------------------------------------------------------
+# JAX trainer
+# ----------------------------------------------------------------------
+
+def _jax_boxes(xp, xn, max_nodes=64, max_depth=12, expand=True):
+    frange_lo = np.minimum(xp.min(0), xn.min(0) if len(xn) else xp.min(0))
+    frange_hi = np.maximum(xp.max(0), xn.max(0) if len(xn) else xp.max(0))
+    lo, hi, valid = fit_dbranch_jax(
+        jnp.asarray(xp), jnp.asarray(xn), jnp.asarray(frange_lo),
+        jnp.asarray(frange_hi), max_nodes=max_nodes, max_depth=max_depth,
+        expand=expand)
+    return np.asarray(lo), np.asarray(hi), np.asarray(valid)
+
+
+def test_jax_trainer_invariants(blob_data):
+    x, y = blob_data
+    xp = x[y == 1][:, :6]
+    xn = x[y == 0][:80, :6]
+    lo, hi, valid = _jax_boxes(xp, xn)
+    assert valid.any()
+    pred_p = np.asarray(predict_boxes_jax(jnp.asarray(xp), jnp.asarray(lo),
+                                          jnp.asarray(hi), jnp.asarray(valid)))
+    pred_n = np.asarray(predict_boxes_jax(jnp.asarray(xn), jnp.asarray(lo),
+                                          jnp.asarray(hi), jnp.asarray(valid)))
+    assert (pred_p > 0).all(), "JAX trainer must cover training positives"
+    assert (pred_n == 0).all(), "JAX trainer must exclude training negatives"
+
+
+def test_jax_trainer_matches_numpy_on_training_predictions():
+    rng = np.random.default_rng(11)
+    xp = rng.normal(1.0, 0.4, (12, 4)).astype(np.float32)
+    xn = rng.normal(0.0, 1.0, (40, 4)).astype(np.float32)
+    xq = rng.normal(0.5, 1.0, (200, 4)).astype(np.float32)
+    bs = fit_dbranch(xp, xn, np.arange(4), max_depth=10)
+    lo, hi, valid = _jax_boxes(xp, xn, max_depth=10)
+    pred_np = bs.contains(xq) > 0
+    pred_jx = np.asarray(predict_boxes_jax(
+        jnp.asarray(xq), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(valid))) > 0
+    # same algorithm, same splits -> identical decision regions
+    agreement = (pred_np == pred_jx).mean()
+    assert agreement > 0.97, f"agreement {agreement}"
+
+
+def test_jax_trainer_vmaps_over_ensemble():
+    rng = np.random.default_rng(5)
+    E, P, Ng, d = 4, 8, 30, 3
+    xps = rng.normal(1.0, 0.3, (E, P, d)).astype(np.float32)
+    xns = rng.normal(0.0, 1.0, (E, Ng, d)).astype(np.float32)
+    flo = np.full((E, d), -3.0, np.float32)
+    fhi = np.full((E, d), 3.0, np.float32)
+    lo, hi, valid = jax.vmap(
+        lambda a, b, c, e: fit_dbranch_jax(a, b, c, e, max_nodes=32))(
+        jnp.asarray(xps), jnp.asarray(xns), jnp.asarray(flo), jnp.asarray(fhi))
+    assert lo.shape == (E, 32, d)
+    assert np.asarray(valid).any(axis=1).all()
+
+
+def test_no_negatives_trivial_box():
+    xp = np.asarray([[0.5, 0.5], [0.7, 0.6]], np.float32)
+    xn = np.zeros((0, 2), np.float32)
+    bs = fit_dbranch(xp, xn, np.arange(2))
+    assert bs.n_boxes == 1
+    assert (bs.contains(xp) > 0).all()

@@ -1,0 +1,184 @@
+"""Multi-device tests. These run in a SUBPROCESS with
+``--xla_force_host_platform_device_count=8`` so the main pytest process
+keeps seeing the single real device (dryrun.py owns the 512-device
+override; tests must not leak device-count state)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_in_subprocess(body: str) -> dict:
+    """Run ``body`` with 8 fake CPU devices; body must print one JSON line
+    prefixed RESULT:."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        assert len(jax.devices()) == 8
+    """) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT:"):
+            return json.loads(line[len("RESULT:"):])
+    raise AssertionError(f"no RESULT line in stdout:\n{out.stdout[-2000:]}")
+
+
+@pytest.mark.slow
+def test_sharded_train_step_runs_and_matches_single_device():
+    r = _run_in_subprocess("""
+        from repro.configs import get_reduced_config
+        from repro.configs.base import TrainConfig
+        from repro.launch.steps import init_train_state, make_train_step
+        from repro.launch import sharding as shd
+        from jax.sharding import Mesh
+
+        cfg = get_reduced_config("internlm2-1.8b", num_layers=2, d_model=64,
+                                 d_ff=128, vocab_size=128, num_heads=4,
+                                 num_kv_heads=2, head_dim=16)
+        tc = TrainConfig(z_loss=0.0, microbatches=1, remat="none")
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+        state = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+        batch = {"inputs": jnp.zeros((8, 32), jnp.int32),
+                 "targets": jnp.zeros((8, 32), jnp.int32)}
+        rng = jax.random.PRNGKey(1)
+
+        # single-device reference
+        step_ref = jax.jit(make_train_step(cfg, tc, None))
+        _, m_ref = step_ref(state, batch, rng)
+
+        # sharded
+        state2 = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+        step = make_train_step(cfg, tc, mesh)
+        psh = shd.params_shardings(state2.params, mesh)
+        state2 = state2._replace(
+            params=jax.device_put(state2.params, psh),
+            opt=state2.opt._replace(
+                m=jax.device_put(state2.opt.m, shd.params_shardings(state2.opt.m, mesh)),
+                v=jax.device_put(state2.opt.v, shd.params_shardings(state2.opt.v, mesh))))
+        batch_sh = jax.device_put(batch, shd.batch_shardings(batch, mesh))
+        with mesh:
+            _, m = jax.jit(step)(state2, batch_sh, rng)
+        print("RESULT:" + json.dumps({
+            "loss_sharded": float(m["loss"]),
+            "loss_ref": float(m_ref["loss"])}))
+    """)
+    assert abs(r["loss_sharded"] - r["loss_ref"]) < 5e-2, r
+
+
+@pytest.mark.slow
+def test_distributed_query_sharded_equals_oracle():
+    r = _run_in_subprocess("""
+        from repro.core.index import build_index, distributed_query
+        from repro.core.boxes import boxes_contain
+        from jax.sharding import Mesh
+
+        rng = np.random.default_rng(0)
+        x = rng.normal(0, 1, (4096, 4)).astype(np.float32)
+        idx = build_index(x, np.arange(4), block=64)
+        lo = (x[7] - 0.3)[None].astype(np.float32)
+        hi = (x[7] + 0.3)[None].astype(np.float32)
+        mesh = jax.make_mesh((8,), ("data",))
+        rows = idx.rows.reshape(idx.n_blocks, idx.block, -1)
+        counts = np.asarray(distributed_query(
+            jnp.asarray(rows), jnp.asarray(idx.zlo), jnp.asarray(idx.zhi),
+            jnp.asarray(lo), jnp.asarray(hi), mesh, idx.block))
+        back = np.zeros(idx.n_rows, np.int32)
+        valid = idx.perm >= 0
+        back[idx.perm[valid]] = counts[valid]
+        want = boxes_contain(x, lo, hi)
+        print("RESULT:" + json.dumps({
+            "match": bool((back == want).all()),
+            "found": int(want.sum())}))
+    """)
+    assert r["match"] and r["found"] > 0
+
+
+@pytest.mark.slow
+def test_elastic_reshard_preserves_state():
+    r = _run_in_subprocess("""
+        from repro.configs import get_reduced_config
+        from repro.configs.base import TrainConfig
+        from repro.launch.steps import init_train_state
+        from repro.launch import sharding as shd
+        from repro.train.elastic import simulate_failure_and_restart
+
+        cfg = get_reduced_config("internlm2-1.8b", num_layers=2, d_model=64,
+                                 d_ff=128, vocab_size=128)
+        tc = TrainConfig()
+        mesh8 = jax.make_mesh((8, 1), ("data", "model"))
+        state = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+        ref = jax.device_get(state.params)
+        sharded = jax.device_put(
+            state.params, shd.params_shardings(state.params, mesh8))
+
+        new_mesh, resharded = simulate_failure_and_restart(
+            sharded,
+            lambda m: shd.params_shardings(state.params, m),
+            old_mesh=mesh8, surviving_devices=4, model_axis=1)
+        got = jax.device_get(resharded)
+        ok = all(bool(np.allclose(a, b)) for a, b in
+                 zip(jax.tree.leaves(ref), jax.tree.leaves(got)))
+        print("RESULT:" + json.dumps({
+            "ok": ok, "new_shape": list(new_mesh.devices.shape)}))
+    """)
+    assert r["ok"] and r["new_shape"] == [4, 1]
+
+
+@pytest.mark.slow
+def test_compressed_cross_pod_mean():
+    r = _run_in_subprocess("""
+        from jax.sharding import Mesh
+        from repro.train.compression import (Int8ErrorFeedback,
+                                             compressed_cross_pod_mean)
+        mesh = jax.make_mesh((2, 4), ("pod", "data"))
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, (16, 16)),
+                              jnp.float32)}
+        comp = Int8ErrorFeedback()
+        ef = comp.init(g)
+        out, ef = compressed_cross_pod_mean(g, ef, mesh, axis="pod")
+        # replicated input -> mean across pods == dequantised input
+        err = float(jnp.abs(out["w"] - g["w"]).max())
+        scale = float(jnp.abs(g["w"]).max()) / 127.0
+        print("RESULT:" + json.dumps({"err": err, "bound": scale}))
+    """)
+    assert r["err"] <= r["bound"] * 1.01 + 1e-7
+
+
+@pytest.mark.slow
+def test_vocab_and_expert_sharding_rules():
+    r = _run_in_subprocess("""
+        from repro.configs import get_reduced_config
+        from repro.launch import sharding as shd
+        from repro.launch.steps import init_train_state
+        from repro.configs.base import TrainConfig
+
+        cfg = get_reduced_config("qwen3-moe-235b-a22b", num_layers=2,
+                                 d_model=64, d_ff=128, vocab_size=512,
+                                 num_experts=4, experts_per_token=2)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        state = init_train_state(jax.random.PRNGKey(0), cfg, TrainConfig())
+        sh = shd.params_shardings(state.params, mesh)
+        embed_spec = str(sh["embed"].spec)
+        moe_spec = str(jax.tree.leaves(
+            sh["blocks"]["slot0"]["moe"])[0].spec) if "moe" in sh["blocks"]["slot0"] else "?"
+        # apply them — device_put must succeed (divisibility rules hold)
+        _ = jax.device_put(state.params, sh)
+        print("RESULT:" + json.dumps({
+            "embed_spec": embed_spec, "ok": True}))
+    """)
+    assert r["ok"]
+    assert "model" in r["embed_spec"]

@@ -1,0 +1,152 @@
+"""ZoneMapIndex + SearchEngine integration tests."""
+import numpy as np
+import pytest
+
+from repro.core.boxes import BoxSet, boxes_contain
+from repro.core.engine import MODELS, SearchEngine
+from repro.core.index import build_index, full_scan, query_index
+from repro.core.subsets import make_subsets
+
+
+def test_build_index_padding_and_stats(rng):
+    x = rng.normal(0, 1, (1000, 4)).astype(np.float32)
+    idx = build_index(x, np.arange(4), block=64)
+    assert idx.n_rows == 1000
+    assert idx.rows.shape[0] % 64 == 0
+    st = idx.stats()
+    assert st["rows"] == 1000 and st["blocks"] == idx.n_blocks
+
+
+def test_query_index_prunes(rng):
+    """A tight box must touch far fewer blocks than the total."""
+    x = rng.normal(0, 1, (20000, 4)).astype(np.float32)
+    idx = build_index(x, np.arange(4), block=128)
+    center = x[17]
+    lo = (center - 0.05)[None].astype(np.float32)
+    hi = (center + 0.05)[None].astype(np.float32)
+    counts, stats = query_index(idx, BoxSet(lo, hi, np.arange(4)))
+    np.testing.assert_array_equal(counts, boxes_contain(x, lo, hi))
+    assert stats["prune_fraction"] > 0.5, stats
+
+
+def test_full_scan_matches_oracle(rng):
+    x = rng.normal(0, 1, (512, 8)).astype(np.float32)
+    lo = x[:3] - 0.3
+    hi = x[:3] + 0.3
+    got = np.asarray(full_scan(x, lo, hi))
+    np.testing.assert_array_equal(got, boxes_contain(x, lo, hi))
+
+
+def test_subsets_are_valid():
+    s = make_subsets(384, 32, 6, seed=1)
+    assert s.shape == (32, 6)
+    assert (s >= 0).all() and (s < 384).all()
+    for row in s:
+        assert len(np.unique(row)) == 6
+        np.testing.assert_array_equal(row, np.sort(row))
+
+
+# ----------------------------------------------------------------------
+# SearchEngine end to end
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_and_labels(catalog):
+    feats, labels = catalog
+    eng = SearchEngine(feats, n_subsets=16, subset_dim=6, block=128, seed=0)
+    return eng, labels
+
+
+def _query_sets(labels, cls, n_pos=15, n_neg=60, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.choice(np.nonzero(labels == cls)[0], n_pos, replace=False)
+    neg = rng.choice(np.nonzero(labels != cls)[0], n_neg, replace=False)
+    return pos, neg
+
+
+@pytest.mark.parametrize("model", MODELS)
+def test_engine_all_models_run(engine_and_labels, model):
+    eng, labels = engine_and_labels
+    pos, neg = _query_sets(labels, 2)          # forest: texture-separable
+    res = eng.query(pos, neg, model=model)
+    assert res.model == model
+    assert res.query_time_s >= 0
+    assert res.ids.ndim == 1
+    # scores sorted descending
+    assert (np.diff(res.scores) <= 1e-9).all()
+
+
+def test_engine_index_path_equals_scan_path(engine_and_labels):
+    """dbranch via index == same boxes via full scan (the paper contract
+    at engine level)."""
+    eng, labels = engine_and_labels
+    pos, neg = _query_sets(labels, 2, seed=3)
+    res = eng.query(pos, neg, model="dbranch", include_training=True)
+    # rebuild the same model and scan
+    from repro.core.dbranch import fit_dbranch_best_subset
+    bs = fit_dbranch_best_subset(eng.x[pos], eng.x[neg], eng.subsets)
+    lo, hi = bs.to_full(eng.d)
+    counts = np.asarray(full_scan(eng.x, lo, hi))
+    ids_scan = np.nonzero(counts > 0)[0]
+    np.testing.assert_array_equal(np.sort(res.ids), np.sort(ids_scan))
+
+
+def test_engine_excludes_training_by_default(engine_and_labels):
+    eng, labels = engine_and_labels
+    pos, neg = _query_sets(labels, 2, seed=5)
+    res = eng.query(pos, neg, model="dbranch")
+    assert not np.isin(res.ids, np.concatenate([pos, neg])).any()
+
+
+def test_engine_stats_report_bytes_saved(engine_and_labels):
+    eng, labels = engine_and_labels
+    pos, neg = _query_sets(labels, 2, seed=7)
+    res = eng.query(pos, neg, model="dbens", n_models=8)
+    assert res.stats["path"] == "index"
+    assert 0.0 <= res.stats["bytes_saved_frac"] <= 1.0
+    assert res.stats["bytes_touched"] <= res.stats["scan_bytes_equiv"] * len(
+        eng.indexes)
+
+
+def test_engine_refine_monotone_labels(engine_and_labels):
+    eng, labels = engine_and_labels
+    pos, neg = _query_sets(labels, 2, seed=9)
+    res1 = eng.query(pos[:8], neg[:20], model="dbranch")
+    res2 = eng.refine(res1, pos[8:], neg[20:], pos[:8], neg[:20])
+    assert res2.model == "dbranch"
+
+
+def test_engine_quality_beats_random(engine_and_labels):
+    """Search results must be enriched in the positive class vs the base
+    rate (the engine actually works as a search engine)."""
+    eng, labels = engine_and_labels
+    cls = 2
+    pos, neg = _query_sets(labels, cls, n_pos=20, n_neg=100, seed=11)
+    res = eng.query(pos, neg, model="dbens", n_models=15)
+    assert res.n_found > 0
+    prec = (labels[res.ids] == cls).mean()
+    base = (labels == cls).mean()
+    assert prec > 3 * base, (prec, base)
+
+
+def test_distributed_query_matches_local(rng):
+    """shard_map path == local path (single-device mesh degenerate case)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core.index import distributed_query
+    x = rng.normal(0, 1, (2048, 4)).astype(np.float32)
+    idx = build_index(x, np.arange(4), block=128)
+    lo = (x[5] - 0.4)[None].astype(np.float32)
+    hi = (x[5] + 0.4)[None].astype(np.float32)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    rows = idx.rows.reshape(idx.n_blocks, idx.block, -1)
+    counts = np.asarray(distributed_query(
+        jnp.asarray(rows), jnp.asarray(idx.zlo), jnp.asarray(idx.zhi),
+        jnp.asarray(lo), jnp.asarray(hi), mesh, idx.block))
+    want, _ = query_index(idx, BoxSet(lo, hi, np.arange(4)))
+    # distributed returns Morton order; map back
+    back = np.zeros(idx.n_rows, np.int32)
+    valid = idx.perm >= 0
+    back[idx.perm[valid]] = counts[valid]
+    np.testing.assert_array_equal(back, want)

@@ -1,0 +1,183 @@
+"""Per-kernel correctness: shape/dtype sweeps, Pallas (interpret=True)
+vs the pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels.box_scan import box_scan_pallas
+from repro.kernels.l2dist import l2dist_pallas
+from repro.kernels.zone_prune import zone_prune_pallas
+
+
+def _boxes(rng, b, d, dtype=np.float32):
+    lo = rng.normal(0, 1, (b, d)).astype(dtype)
+    hi = lo + np.abs(rng.normal(0, 1, (b, d))).astype(dtype)
+    return lo, hi
+
+
+# ----------------------------------------------------------------------
+# raw Pallas kernels vs oracle (aligned shapes)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,b", [(1024, 128, 4), (2048, 128, 16),
+                                   (1024, 256, 1), (4096, 128, 64)])
+def test_box_scan_pallas_matches_ref(n, d, b):
+    rng = np.random.default_rng(n + d + b)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    lo, hi = _boxes(rng, b, d)
+    got = box_scan_pallas(jnp.asarray(x), jnp.asarray(lo), jnp.asarray(hi),
+                          tile_n=512, interpret=True)
+    want = ref.box_scan_ref(jnp.asarray(x), jnp.asarray(lo), jnp.asarray(hi))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("nz,d,b", [(512, 128, 8), (1024, 128, 32),
+                                    (512, 256, 2)])
+def test_zone_prune_pallas_matches_ref(nz, d, b):
+    rng = np.random.default_rng(nz + d + b)
+    zlo, zhi = _boxes(rng, nz, d)
+    blo, bhi = _boxes(rng, b, d)
+    got = zone_prune_pallas(jnp.asarray(zlo), jnp.asarray(zhi),
+                            jnp.asarray(blo), jnp.asarray(bhi),
+                            tile_z=256, interpret=True)
+    want = ref.zone_prune_ref(jnp.asarray(zlo), jnp.asarray(zhi),
+                              jnp.asarray(blo), jnp.asarray(bhi))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,d,q", [(1024, 128, 8), (2048, 384, 4)])
+def test_l2dist_pallas_matches_ref(n, d, q):
+    rng = np.random.default_rng(n + d + q)
+    d_pad = -(-d // 128) * 128
+    x = np.zeros((n, d_pad), np.float32)
+    x[:, :d] = rng.normal(0, 1, (n, d))
+    qq = np.zeros((q, d_pad), np.float32)
+    qq[:, :d] = rng.normal(0, 1, (q, d))
+    got = l2dist_pallas(jnp.asarray(x), jnp.asarray(qq),
+                        tile_n=512, interpret=True)
+    want = ref.l2dist_ref(jnp.asarray(x), jnp.asarray(qq))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ----------------------------------------------------------------------
+# public wrappers: padding hygiene (odd N, odd D, dtype sweep)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,b", [(100, 6, 3), (1000, 384, 25),
+                                   (1023, 17, 1), (1, 6, 2), (513, 130, 7)])
+def test_box_scan_wrapper_padding(n, d, b):
+    rng = np.random.default_rng(n * 7 + d)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    lo, hi = _boxes(rng, b, d)
+    got = ops.box_scan(jnp.asarray(x), jnp.asarray(lo), jnp.asarray(hi))
+    want = ref.box_scan_ref(jnp.asarray(x), jnp.asarray(lo), jnp.asarray(hi))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_box_scan_wrapper_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (300, 12)).astype(dtype)
+    lo, hi = _boxes(rng, 5, 12, np.float32)
+    got = ops.box_scan(jnp.asarray(x, jnp.float32), jnp.asarray(lo),
+                       jnp.asarray(hi))
+    want = ref.box_scan_ref(jnp.asarray(x, jnp.float32), jnp.asarray(lo),
+                            jnp.asarray(hi))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("nz,d,b", [(37, 6, 3), (513, 5, 9), (1, 6, 1)])
+def test_zone_prune_wrapper_padding(nz, d, b):
+    rng = np.random.default_rng(nz + 1)
+    zlo, zhi = _boxes(rng, nz, d)
+    blo, bhi = _boxes(rng, b, d)
+    got = ops.zone_prune(jnp.asarray(zlo), jnp.asarray(zhi),
+                         jnp.asarray(blo), jnp.asarray(bhi))
+    want = ref.zone_prune_ref(jnp.asarray(zlo), jnp.asarray(zhi),
+                              jnp.asarray(blo), jnp.asarray(bhi))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,d,q,k", [(500, 6, 3, 10), (2000, 384, 2, 100)])
+def test_knn_topk_matches_numpy(n, d, q, k):
+    rng = np.random.default_rng(9)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    qq = rng.normal(0, 1, (q, d)).astype(np.float32)
+    dists, idx = ops.knn_topk(jnp.asarray(x), jnp.asarray(qq), k)
+    full = ((x[None] - qq[:, None]) ** 2).sum(-1)          # [Q, N]
+    want_d = np.sort(full, axis=1)[:, :k]
+    np.testing.assert_allclose(np.sort(np.asarray(dists), 1), want_d,
+                               rtol=1e-4, atol=1e-3)
+    # indices must be a valid top-k set (distance-equivalent)
+    got_d = np.take_along_axis(full, np.asarray(idx), axis=1)
+    np.testing.assert_allclose(np.sort(got_d, 1), want_d, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,d,causal", [
+    (2, 256, 8, 2, 32, True),
+    (1, 128, 4, 4, 64, True),      # MHA
+    (1, 128, 4, 1, 32, True),      # MQA
+    (2, 128, 4, 2, 32, False),     # bidirectional
+])
+def test_flash_attention_pallas_matches_ref(b, s, hq, hkv, d, causal):
+    from repro.kernels.ref import flash_attention_ref
+    rng = np.random.default_rng(b + s + hq)
+    q = jnp.asarray(rng.normal(0, 1, (b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, q_chunk=64, kv_chunk=64)
+    g = hq // hkv
+    qk = q.reshape(b, s, hkv, g, d).transpose(0, 2, 1, 3, 4).reshape(
+        b * hkv, s, g, d)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    want = flash_attention_ref(qk, kk, vk, causal=causal)
+    want = want.reshape(b, hkv, s, g, d).transpose(0, 2, 1, 3, 4).reshape(
+        b, s, hq, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_pallas_dtypes(dtype):
+    from repro.kernels.ref import flash_attention_ref
+    rng = np.random.default_rng(0)
+    b, s, hq, hkv, d = 1, 128, 4, 2, 32
+    q = jnp.asarray(rng.normal(0, 1, (b, s, hq, d))).astype(dtype)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d))).astype(dtype)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, hkv, d))).astype(dtype)
+    got = ops.flash_attention(q, k, v, q_chunk=64, kv_chunk=32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    g = hq // hkv
+    qk = q.reshape(b, s, hkv, g, d).transpose(0, 2, 1, 3, 4).reshape(
+        b * hkv, s, g, d)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    want = flash_attention_ref(qk, kk, vk).reshape(
+        b, hkv, s, g, d).transpose(0, 2, 1, 3, 4).reshape(b, s, hq, d)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_box_scan_half_open_semantics():
+    """Boundary: x == lo excluded, x == hi included."""
+    x = jnp.asarray([[0.0], [1.0], [0.5]])
+    lo = jnp.asarray([[0.0]])
+    hi = jnp.asarray([[1.0]])
+    got = np.asarray(ops.box_scan(x, lo, hi))
+    np.testing.assert_array_equal(got, [0, 1, 1])
+
+
+def test_zone_prune_boundary_zone():
+    """A zone ending exactly at box lo cannot contain a match."""
+    zlo = jnp.asarray([[0.0], [2.0]])
+    zhi = jnp.asarray([[1.0], [3.0]])
+    blo = jnp.asarray([[1.0]])
+    bhi = jnp.asarray([[2.5]])
+    got = np.asarray(ops.zone_prune(zlo, zhi, blo, bhi))
+    np.testing.assert_array_equal(got[:, 0], [False, True])

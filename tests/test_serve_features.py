@@ -1,0 +1,143 @@
+"""Serving front end + feature extraction tests."""
+import queue
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import SearchEngine
+from repro.data.synthetic import PatchDatasetConfig, generate_patches
+from repro.features.dino import init_dino, make_dino_step
+from repro.features.extract import (extract_catalog, lm_feature_fn,
+                                    vit_feature_fn)
+from repro.features.vit import init_vit
+from repro.models.common import ParallelCtx
+from repro.serve.engine import (QueryRequest, QueryServer,
+                                merge_shard_results)
+
+CTX = ParallelCtx()
+
+
+@pytest.fixture(scope="module")
+def small_engine(catalog):
+    feats, labels = catalog
+    return SearchEngine(feats[:800], n_subsets=8, subset_dim=5, block=64), labels
+
+
+def test_server_handles_request(small_engine):
+    eng, labels = small_engine
+    srv = QueryServer(eng)
+    pos = np.nonzero(labels[:800] == 2)[0][:10]
+    neg = np.nonzero(labels[:800] != 2)[0][:40]
+    resp = srv.handle(QueryRequest(0, pos, neg, "dbranch"))
+    assert resp.ok and resp.result is not None
+    assert resp.latency_s > 0
+
+
+def test_server_error_isolation(small_engine):
+    eng, _ = small_engine
+    srv = QueryServer(eng)
+    good = QueryRequest(0, [1, 2, 3], [10, 11], "dbranch")
+    bad = QueryRequest(1, [1], [2], "not_a_model")
+    out = srv.handle_batch([good, bad])
+    assert out[0].ok and not out[1].ok
+    assert "not_a_model" in out[1].error
+    assert srv.stats["errors"] == 1
+
+
+def test_server_threaded_batching(small_engine):
+    eng, labels = small_engine
+    srv = QueryServer(eng, max_batch=4)
+    srv.start()
+    pos = np.nonzero(labels[:800] == 2)[0][:8]
+    neg = np.nonzero(labels[:800] != 2)[0][:30]
+    pending = [srv.submit(QueryRequest(i, pos, neg, "dbranch"))
+               for i in range(5)]
+    for i, p in enumerate(pending):
+        resp = p.get(timeout=120)
+        assert resp.ok and resp.request_id == i
+    srv.close()
+    assert srv.summary()["served"] == 5
+
+
+def test_merge_shard_results():
+    from repro.core.engine import QueryResult
+    r1 = QueryResult("dbranch", np.asarray([2, 0]), np.asarray([5.0, 1.0]),
+                     0, 0)
+    r2 = QueryResult("dbranch", np.asarray([1]), np.asarray([3.0]), 0, 0)
+    ids, scores = merge_shard_results([r1, r2], [0, 100])
+    np.testing.assert_array_equal(ids, [2, 101, 0])
+    np.testing.assert_array_equal(scores, [5.0, 3.0, 1.0])
+
+
+# ----------------------------------------------------------------------
+# features
+# ----------------------------------------------------------------------
+
+def _vit_cfg():
+    from repro.configs.base import ModelConfig
+    return ModelConfig(name="vit-test", family="vit", num_layers=2,
+                       d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                       d_ff=64, vocab_size=0, mlp_gated=False)
+
+
+def test_vit_extract_catalog_matches_direct():
+    cfg = _vit_cfg()
+    params = init_vit(jax.random.PRNGKey(0), cfg, image_size=16, patch_size=8)
+    imgs = np.random.default_rng(0).uniform(0, 1, (10, 16, 16, 3)).astype(
+        np.float32)
+    fn = vit_feature_fn(cfg, CTX, patch_size=8)
+    feats = extract_catalog(params, imgs, fn, batch=4)
+    assert feats.shape == (10, 2 * cfg.d_model)
+    direct = np.asarray(fn(params, jnp.asarray(imgs)))
+    np.testing.assert_allclose(feats, direct, rtol=2e-5, atol=2e-5)
+
+
+def test_lm_feature_fn_shape():
+    from repro.configs import get_reduced_config
+    from repro.models import lm
+    cfg = get_reduced_config("internlm2-1.8b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    fn = lm_feature_fn(cfg, CTX)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (3, 16)), jnp.int32)
+    f = fn(params, toks)
+    assert f.shape == (3, cfg.d_model)
+    assert np.isfinite(np.asarray(f)).all()
+
+
+def test_dino_step_trains():
+    cfg = _vit_cfg()
+    state = init_dino(jax.random.PRNGKey(0), cfg, image_size=16, patch_size=8)
+    step = jax.jit(make_dino_step(cfg, image_size=16, patch_size=8, ctx=CTX))
+    imgs = jnp.asarray(np.random.default_rng(0).uniform(
+        0, 1, (8, 16, 16, 3)), jnp.float32)
+    t0 = jax.tree.leaves(state.teacher)[0].copy()
+    losses = []
+    for i in range(3):
+        state, m = step(state, imgs, jax.random.PRNGKey(i))
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(l) for l in losses)
+    # teacher moved (EMA of student updates)
+    assert not np.allclose(np.asarray(jax.tree.leaves(state.teacher)[0]),
+                           np.asarray(t0))
+    assert int(state.step) == 3
+
+
+def test_dino_features_improve_knn_separability():
+    """After a few DINO steps features shouldn't collapse: per-class
+    centroid distances stay positive."""
+    cfg = _vit_cfg()
+    data = generate_patches(PatchDatasetConfig(n_patches=64, patch_size=16,
+                                               seed=2))
+    state = init_dino(jax.random.PRNGKey(1), cfg, image_size=16, patch_size=8)
+    step = jax.jit(make_dino_step(cfg, image_size=16, patch_size=8, ctx=CTX))
+    imgs = jnp.asarray(data["images"][:, ::1, ::1][:, :16, :16])
+    for i in range(3):
+        state, _ = step(state, imgs[:16], jax.random.PRNGKey(10 + i))
+    from repro.features.vit import extract_features
+    f = np.asarray(extract_features(state.student, imgs, cfg, CTX,
+                                    patch_size=8))
+    assert np.isfinite(f).all()
+    assert f.std() > 1e-4          # not collapsed

@@ -1,0 +1,279 @@
+"""Substrate tests: optimizer, checkpoint, compression, data, trainer."""
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, Prefetcher, TokenSource
+from repro.data.synthetic import (CLASSES, PatchDatasetConfig,
+                                  generate_patches, handcrafted_features)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import (Int8ErrorFeedback, compression_ratio)
+from repro.train.optimizer import (AdamW, clip_by_global_norm,
+                                   cosine_schedule, global_norm)
+
+
+# ----------------------------------------------------------------------
+# optimizer
+# ----------------------------------------------------------------------
+
+def test_adamw_single_step_closed_form():
+    sched = lambda step: 0.1
+    opt = AdamW(sched, beta1=0.9, beta2=0.99, weight_decay=0.0)
+    p = {"w": jnp.asarray([[1.0, 2.0]])}
+    g = {"w": jnp.asarray([[0.5, -0.5]])}
+    st = opt.init(p)
+    newp, _ = opt.update(g, st, p)
+    # bias-corrected first step: mhat = g, vhat = g^2 -> delta = sign(g)
+    want = np.asarray([[1.0, 2.0]]) - 0.1 * np.sign([[0.5, -0.5]])
+    np.testing.assert_allclose(np.asarray(newp["w"]), want, rtol=1e-4)
+
+
+def test_adamw_weight_decay_skips_vectors():
+    opt = AdamW(lambda s: 0.1, weight_decay=0.5)
+    p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    g = jax.tree.map(jnp.zeros_like, p)
+    newp, _ = opt.update(g, opt.init(p), p)
+    assert float(newp["w"][0, 0]) < 1.0      # decayed
+    np.testing.assert_allclose(np.asarray(newp["b"]), 1.0)  # not decayed
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(100)) < float(s(50)) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(norm), 20.0, rtol=1e-5)
+
+
+def test_adafactor_reduces_loss():
+    from repro.train.optimizer import Adafactor
+    opt = Adafactor(lambda s: 0.1)
+    w = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, (8, 8)),
+                          jnp.float32)}
+    st = opt.init(w)
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    l0 = float(loss(w))
+    for _ in range(20):
+        g = jax.grad(loss)(w)
+        w, st = opt.update(g, st, w)
+    assert float(loss(w)) < l0 * 0.5
+
+
+# ----------------------------------------------------------------------
+# checkpoint
+# ----------------------------------------------------------------------
+
+def _tree(seed=0):
+    r = np.random.default_rng(seed)
+    return {"params": {"w": r.normal(0, 1, (4, 4)).astype(np.float32),
+                       "b": r.normal(0, 1, (4,)).astype(np.float32)},
+            "step": np.asarray(7, np.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    t = _tree()
+    cm.save(7, t)
+    got = cm.restore(jax.tree.map(np.zeros_like, t))
+    jax.tree.map(np.testing.assert_array_equal, got, t)
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        cm.save(s, _tree(s))
+    assert cm.list_steps() == [3, 4]
+    assert cm.latest_step() == 4
+
+
+def test_checkpoint_async_and_wait(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    t = _tree()
+    cm.save_async(5, t)
+    cm.wait()
+    assert cm.latest_step() == 5
+    got = cm.restore(jax.tree.map(np.zeros_like, t), step=5)
+    jax.tree.map(np.testing.assert_array_equal, got, t)
+
+
+def test_checkpoint_atomicity_ignores_partial(tmp_path):
+    cm = CheckpointManager(tmp_path)
+    cm.save(1, _tree())
+    # simulate a crashed mid-write directory (no manifest)
+    bad = tmp_path / "step_00000009"
+    bad.mkdir()
+    (bad / "params__w.npy").write_bytes(b"garbage")
+    assert cm.list_steps() == [1]
+    assert cm.latest_step() == 1
+
+
+def test_checkpoint_restores_into_jax_state(tmp_path):
+    from repro.configs import get_reduced_config
+    from repro.configs.base import TrainConfig
+    from repro.launch.steps import init_train_state
+    cfg = get_reduced_config("internlm2-1.8b")
+    tc = TrainConfig()
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tc)
+    cm = CheckpointManager(tmp_path)
+    cm.save(0, jax.device_get(state))
+    restored = cm.restore(state)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), jax.device_get(state), restored)
+
+
+# ----------------------------------------------------------------------
+# compression
+# ----------------------------------------------------------------------
+
+def test_int8_quantization_error_bounded():
+    comp = Int8ErrorFeedback()
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, (64, 64)),
+                          jnp.float32)}
+    ef = comp.init(g)
+    q, ef = comp.compress(g, ef)
+    back = comp.decompress(q)
+    err = np.abs(np.asarray(back["w"]) - np.asarray(g["w"])).max()
+    scale = float(np.abs(np.asarray(g["w"])).max()) / 127.0
+    assert err <= scale * 0.5 + 1e-7
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Sum of dequantised grads + final EF == sum of raw grads (exact
+    telescoping identity of error feedback)."""
+    comp = Int8ErrorFeedback()
+    rng = np.random.default_rng(1)
+    g0 = {"w": jnp.zeros((32,), jnp.float32)}
+    ef = comp.init(g0)
+    total_raw = np.zeros(32)
+    total_deq = np.zeros(32)
+    for step in range(20):
+        g = {"w": jnp.asarray(rng.normal(0, 1, (32,)), jnp.float32)}
+        q, ef = comp.compress(g, ef)
+        total_raw += np.asarray(g["w"])
+        total_deq += np.asarray(comp.decompress(q)["w"])
+    resid = np.asarray(ef["w"])
+    np.testing.assert_allclose(total_deq + resid, total_raw, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_compression_ratio():
+    g = {"w": jnp.zeros((1000,), jnp.float32)}
+    r = compression_ratio(g)
+    assert 0.24 < r < 0.27
+
+
+# ----------------------------------------------------------------------
+# data pipeline
+# ----------------------------------------------------------------------
+
+def test_token_source_deterministic():
+    dc = DataConfig(seq_len=32, global_batch=4, vocab_size=64, seed=5)
+    a = TokenSource(dc).batch(3)
+    b = TokenSource(dc).batch(3)
+    np.testing.assert_array_equal(a["inputs"], b["inputs"])
+    np.testing.assert_array_equal(a["targets"], b["targets"])
+
+
+def test_token_source_hosts_disjoint():
+    dc0 = DataConfig(seq_len=16, global_batch=8, num_hosts=2, host_id=0)
+    dc1 = DataConfig(seq_len=16, global_batch=8, num_hosts=2, host_id=1)
+    b0 = TokenSource(dc0).batch(0)
+    b1 = TokenSource(dc1).batch(0)
+    assert b0["inputs"].shape == (4, 16)
+    assert not np.array_equal(b0["inputs"], b1["inputs"])
+
+
+def test_token_targets_shifted():
+    dc = DataConfig(seq_len=16, global_batch=2)
+    b = TokenSource(dc).batch(0)
+    np.testing.assert_array_equal(b["inputs"][:, 1:], b["targets"][:, :-1])
+
+
+def test_prefetcher_order_and_resume():
+    dc = DataConfig(seq_len=8, global_batch=2, seed=1)
+    src = TokenSource(dc)
+    pf = Prefetcher(src, start_step=0)
+    got = [next(pf) for _ in range(4)]
+    pf.close()
+    pf2 = Prefetcher(src, start_step=2)    # resume at step 2
+    resumed = next(pf2)
+    pf2.close()
+    np.testing.assert_array_equal(resumed["inputs"], got[2]["inputs"])
+
+
+def test_patch_generator_labels_and_shapes():
+    data = generate_patches(PatchDatasetConfig(n_patches=64, patch_size=32,
+                                               seed=0))
+    assert data["images"].shape == (64, 32, 32, 3)
+    assert data["images"].min() >= 0 and data["images"].max() <= 1
+    assert set(np.unique(data["labels"])).issubset(set(range(len(CLASSES))))
+    # determinism
+    again = generate_patches(PatchDatasetConfig(n_patches=64, patch_size=32,
+                                                seed=0))
+    np.testing.assert_array_equal(data["images"], again["images"])
+
+
+def test_handcrafted_features_separate_classes():
+    data = generate_patches(PatchDatasetConfig(n_patches=400, seed=1))
+    f = handcrafted_features(data["images"])
+    y = data["labels"]
+    # water (3) vs background (0): means must differ significantly
+    if (y == 3).sum() > 3:
+        d = np.linalg.norm(f[y == 3].mean(0) - f[y == 0].mean(0))
+        assert d > 1.0, d
+
+
+# ----------------------------------------------------------------------
+# trainer end-to-end (reduced arch, CPU)
+# ----------------------------------------------------------------------
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    from repro.configs import get_reduced_config
+    from repro.configs.base import TrainConfig
+    from repro.train.trainer import Trainer
+    cfg = get_reduced_config("internlm2-1.8b", num_layers=2, d_model=64,
+                             d_ff=128, vocab_size=128)
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=20,
+                     z_loss=0.0)
+    dc = DataConfig(seq_len=32, global_batch=4, vocab_size=128)
+    tr = Trainer(cfg, tc, dc, checkpoint_dir=tmp_path, checkpoint_every=5,
+                 step_deadline_s=600)
+    state, report = tr.run(10, log_every=0)
+    assert report.steps_run == 10
+    assert np.isfinite(report.final_loss)
+    tr.ckpt.wait()
+    assert tr.ckpt.latest_step() == 10
+
+    # resume: next run starts from step 10 and reproduces the data order
+    tr2 = Trainer(cfg, tc, dc, checkpoint_dir=tmp_path, checkpoint_every=5,
+                  step_deadline_s=600)
+    state2, report2 = tr2.run(3, log_every=0)
+    assert report2.resumed_from == 10
+    assert report2.steps_run == 3
+
+
+def test_trainer_loss_decreases():
+    from repro.configs import get_reduced_config
+    from repro.configs.base import TrainConfig
+    from repro.train.trainer import Trainer
+    cfg = get_reduced_config("internlm2-1.8b", num_layers=2, d_model=64,
+                             d_ff=128, vocab_size=64)
+    tc = TrainConfig(learning_rate=3e-3, warmup_steps=5, total_steps=60,
+                     z_loss=0.0)
+    dc = DataConfig(seq_len=64, global_batch=8, vocab_size=64)
+    tr = Trainer(cfg, tc, dc, step_deadline_s=600)
+    _, report = tr.run(60, log_every=0)
+    first = np.mean(report.losses[:5])
+    last = np.mean(report.losses[-5:])
+    assert last < first - 0.3, (first, last)

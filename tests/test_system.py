@@ -1,0 +1,93 @@
+"""End-to-end system test: the full paper workflow on synthetic data.
+
+offline: generate catalog -> extract features -> build subsets+indexes
+online : label a handful of patches -> fit DBranch -> range queries ->
+         ranked results; compare quality + bytes against the scan models.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import SearchEngine
+from repro.data.synthetic import (CLASS_IDS, PatchDatasetConfig,
+                                  generate_patches, handcrafted_features)
+
+
+@pytest.fixture(scope="module")
+def workflow():
+    data = generate_patches(PatchDatasetConfig(n_patches=3000, seed=13))
+    feats = handcrafted_features(data["images"])
+    engine = SearchEngine(feats, n_subsets=24, subset_dim=6, block=128,
+                          seed=13)
+    return engine, data["labels"]
+
+
+def _labels_for(labels, cls, n_pos, n_neg, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.choice(np.nonzero(labels == cls)[0], n_pos, replace=False)
+    neg = rng.choice(np.nonzero(labels != cls)[0], n_neg, replace=False)
+    return pos, neg
+
+
+def test_search_by_classification_workflow(workflow):
+    engine, labels = workflow
+    cls = CLASS_IDS["forest"]
+    pos, neg = _labels_for(labels, cls, 20, 120, seed=1)
+
+    res = engine.query(pos, neg, model="dbens", n_models=15)
+    assert res.n_found > 0
+    precision = (labels[res.ids] == cls).mean()
+    base_rate = (labels == cls).mean()
+    assert precision > 4 * base_rate, (precision, base_rate)
+    assert res.stats["path"] == "index"
+
+
+def test_index_models_agree_with_scan_models_on_quality(workflow):
+    """Paper claim: DBranch quality ~ decision-tree quality. We assert
+    the F1 gap on the synthetic task stays bounded."""
+    engine, labels = workflow
+    cls = CLASS_IDS["forest"]
+    pos, neg = _labels_for(labels, cls, 25, 150, seed=2)
+    truth = labels == cls
+
+    def f1(res):
+        pred = np.zeros(len(labels), bool)
+        pred[res.ids] = True
+        tp = (pred & truth).sum()
+        if tp == 0:
+            return 0.0
+        p = tp / pred.sum()
+        r = tp / truth.sum()
+        return 2 * p * r / (p + r)
+
+    f1_db = f1(engine.query(pos, neg, model="dbens", n_models=15))
+    f1_rf = f1(engine.query(pos, neg, model="rforest", n_models=15))
+    assert f1_db > 0.2, f1_db
+    assert f1_db > f1_rf - 0.35, (f1_db, f1_rf)
+
+
+def test_refinement_loop(workflow):
+    """Paper §5: refining with more labels must not crash and should keep
+    or improve precision."""
+    engine, labels = workflow
+    cls = CLASS_IDS["water"]
+    pos, neg = _labels_for(labels, cls, 10, 60, seed=3)
+    res1 = engine.query(pos, neg, model="dbranch")
+    pos2, neg2 = _labels_for(labels, cls, 25, 150, seed=4)
+    res2 = engine.refine(res1, pos2, neg2, pos, neg)
+    assert res2.n_found >= 0
+    if res1.n_found and res2.n_found:
+        p1 = (labels[res1.ids] == cls).mean()
+        p2 = (labels[res2.ids] == cls).mean()
+        assert p2 > p1 - 0.25
+
+
+def test_query_time_index_beats_scan(workflow):
+    """The headline: index-aware query touches a small fraction of the
+    catalog bytes (the latency proxy that holds at any scale)."""
+    engine, labels = workflow
+    cls = CLASS_IDS["forest"]
+    pos, neg = _labels_for(labels, cls, 20, 120, seed=5)
+    res_idx = engine.query(pos, neg, model="dbranch")
+    res_scan = engine.query(pos, neg, model="dtree")
+    frac = res_idx.stats["bytes_touched"] / res_scan.stats["bytes_touched"]
+    assert frac < 0.6, f"index touched {frac:.1%} of scan bytes"

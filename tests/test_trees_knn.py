@@ -1,0 +1,63 @@
+"""Decision tree / random forest / kNN baseline tests."""
+import numpy as np
+import pytest
+
+from repro.core.index import build_index
+from repro.core.knn import knn_full, knn_subset, knn_vote
+from repro.core.trees import fit_decision_tree, fit_random_forest
+
+
+def test_decision_tree_fits_training_data(blob_data):
+    x, y = blob_data
+    t = fit_decision_tree(x, y, max_depth=20)
+    pred = t.predict_counts(x) > 0
+    acc = (pred == (y == 1)).mean()
+    assert acc > 0.97, acc
+
+
+def test_decision_tree_positive_leaves_are_boxes(blob_data):
+    x, y = blob_data
+    t = fit_decision_tree(x, y, max_depth=20)
+    assert t.lo.shape == t.hi.shape
+    assert t.lo.shape[1] == x.shape[1]
+    assert (t.lo <= t.hi).all()
+
+
+def test_random_forest_votes(blob_data):
+    x, y = blob_data
+    f = fit_random_forest(x, y, n_trees=9, seed=0)
+    votes = f.predict_counts(x)
+    assert votes.max() <= 9
+    acc = ((votes > 4) == (y == 1)).mean()
+    assert acc > 0.9, acc
+
+
+def test_forest_boxes_concatenate(blob_data):
+    x, y = blob_data
+    f = fit_random_forest(x, y, n_trees=5, seed=1)
+    lo, hi = f.boxes()
+    assert lo.shape == hi.shape and lo.shape[1] == x.shape[1]
+    assert len(lo) == sum(len(t.lo) for t in f.trees)
+
+
+def test_knn_full_exact(rng):
+    x = rng.normal(0, 1, (500, 16)).astype(np.float32)
+    q = x[:3] + 0.001
+    ids, d = knn_full(x, q, k=5)
+    assert (ids[np.arange(3), 0] == np.arange(3)).all()
+
+
+def test_knn_subset_uses_index_dims(rng):
+    x = rng.normal(0, 1, (800, 32)).astype(np.float32)
+    idx = build_index(x, np.asarray([1, 5, 9]), block=64)
+    ids, d = knn_subset(idx, x[:2], k=10)
+    assert ids.shape == (2, 10)
+    # the query row itself must be its own nearest neighbour (dist 0)
+    assert (ids[:, 0] == np.arange(2)).all()
+    assert np.allclose(d[:, 0], 0.0, atol=1e-5)
+
+
+def test_knn_vote_counts(rng):
+    ids = np.asarray([[0, 1, 2], [1, 2, 3]])
+    votes = knn_vote(ids, 5)
+    np.testing.assert_array_equal(votes, [1, 2, 2, 1, 0])
