@@ -10,8 +10,18 @@ prune fraction. Latency on this CPU container is indicative; the bytes
 ratio is the scale-free quantity (DESIGN.md §2) — on the paper's 90.4M x
 384 catalog, the scan moves 139 GB while DBranch moves the same *fraction*
 measured here.
+
+Extra modes (DESIGN.md §6):
+  --batched         8 concurrent dbranch queries through
+                    SearchEngine.query_batch (ONE fused device call per
+                    subset) vs the same 8 run sequentially — reports
+                    per-query latency for both on the same backend.
+  --capacity-sweep  query_index_fused latency/bytes across gather
+                    capacities, showing how to size ``capacity``.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -54,5 +64,102 @@ def run(verbose: bool = True):
     return rows
 
 
+def run_batched(batch: int = 8, n: int = 20_000, verbose: bool = True):
+    """Per-query latency: batch of concurrent dbranch queries through
+    query_batch (one fused device call per subset, ownership-map de-mux)
+    vs the same queries answered sequentially by query()."""
+    engine, labels = make_engine(n)
+    classes = [CLASS_IDS["forest"], CLASS_IDS["water"]]
+    reqs = []
+    for i in range(batch):
+        pos, neg = query_sets(labels, classes[i % len(classes)], 15, 80,
+                              seed=100 + i)
+        reqs.append({"pos_ids": pos, "neg_ids": neg, "model": "dbranch"})
+
+    def run_sequential():
+        return [engine.query(r["pos_ids"], r["neg_ids"], model="dbranch")
+                for r in reqs]
+
+    # warm both paths (jit compile + device upload), then measure
+    run_sequential()
+    engine.query_batch(reqs)
+    t0 = time.perf_counter()
+    seq = run_sequential()
+    seq_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bat = engine.query_batch(reqs)
+    bat_wall = time.perf_counter() - t0
+
+    seq_query_s = sum(r.query_time_s for r in seq)
+    bat_query_s = bat[0].query_time_s            # shared device phase
+    rows = [{
+        "name": f"query_time/batched/n{n}/b{batch}",
+        "us_per_call": round(1e6 * bat_wall / batch, 1),
+        "seq_us_per_query": round(1e6 * seq_wall / batch, 1),
+        "query_ms_per_query_batched": round(1e3 * bat_query_s / batch, 3),
+        "query_ms_per_query_seq": round(1e3 * seq_query_s / batch, 3),
+        "speedup_wall": round(seq_wall / max(bat_wall, 1e-9), 2),
+        "speedup_query_phase": round(seq_query_s / max(bat_query_s, 1e-9), 2),
+        "batch": batch,
+        "n_found_equal": int(all(np.array_equal(a.ids, b.ids)
+                                 for a, b in zip(seq, bat))),
+    }]
+    if verbose:
+        emit(rows, "query_time_batched")
+    return rows
+
+
+def run_capacity_sweep(n: int = 20_000, verbose: bool = True):
+    """How to size the fused gather capacity: latency + bytes touched per
+    capacity, against the host path and the number of actual survivors."""
+    from repro.core.dbranch import fit_dbranch_best_subset
+    from repro.core.index import query_index, query_index_fused
+
+    engine, labels = make_engine(n)
+    pos, neg = query_sets(labels, CLASS_IDS["forest"], 20, 120, seed=1)
+    bs = fit_dbranch_best_subset(engine.x[pos], engine.x[neg],
+                                 engine.subsets)
+    index = engine.indexes[bs.subset_id]
+    _, st_host = query_index(index, bs)
+    survivors = st_host["blocks_touched"]
+    nb = index.n_blocks
+    rows = []
+    caps = sorted({max(1, nb // 16), max(1, nb // 8), max(1, nb // 4),
+                   max(1, nb // 2), nb})
+    for cap in caps:
+        query_index_fused(index, bs, capacity=cap)          # warm
+        t0 = time.perf_counter()
+        iters = 5
+        for _ in range(iters):
+            c, st = query_index_fused(index, bs, capacity=cap)
+        dt = (time.perf_counter() - t0) / iters
+        rows.append({
+            "name": f"query_time/capacity/n{n}/c{cap}",
+            "us_per_call": round(1e6 * dt, 1),
+            "capacity": cap,
+            "blocks_total": nb,
+            "survivors": survivors,
+            "overflowed": int(st["overflowed"]),
+            "bytes_touched": st["bytes_touched"],
+        })
+    if verbose:
+        emit(rows, "query_time_capacity")
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batched", action="store_true",
+                    help="batched vs sequential per-query latency")
+    ap.add_argument("--capacity-sweep", action="store_true",
+                    help="fused-gather capacity sweep")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n", type=int, default=20_000)
+    args = ap.parse_args()
+    if args.batched:
+        run_batched(batch=args.batch, n=args.n)
+    elif args.capacity_sweep:
+        run_capacity_sweep(n=args.n)
+    else:
+        run()

@@ -1,0 +1,45 @@
+"""jax version-compatibility shims.
+
+The repo pins no single jax version; the distributed path must run on the
+whole support window (see DESIGN.md §8):
+
+  * jax >= 0.6 ships ``jax.shard_map`` with the ``check_vma`` kwarg;
+  * jax 0.4.x / 0.5.x only have ``jax.experimental.shard_map.shard_map``
+    with the older ``check_rep`` name for the same knob.
+
+Every shard_map call site in the repo goes through :func:`shard_map`
+below, which accepts either spelling of the kwarg and translates to
+whatever the installed jax expects. Nothing else about the call changes —
+``mesh`` / ``in_specs`` / ``out_specs`` are passed straight through.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+try:  # jax >= 0.6: public API, kwarg named check_vma
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax < 0.6: experimental API, kwarg named check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: bool | None = None,
+              check_rep: bool | None = None, **kwargs: Any) -> Callable:
+    """Version-portable ``shard_map``.
+
+    Accepts BOTH ``check_vma`` (new name) and ``check_rep`` (old name) for
+    the replication/varying-mesh-axes check and forwards whichever one the
+    installed jax understands. Passing both is an error; passing neither
+    keeps jax's default (True).
+    """
+    if check_vma is not None and check_rep is not None:
+        raise TypeError("pass either check_vma or check_rep, not both")
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None:
+        kwargs[_CHECK_KW] = check
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -30,7 +30,9 @@ import numpy as np
 from repro.core import knn as knn_mod
 from repro.core.boxes import BoxSet, merge_boxsets
 from repro.core.dbranch import fit_dbens, fit_dbranch_best_subset
-from repro.core.index import ZoneMapIndex, build_index, full_scan, query_index
+from repro.core.index import (ZoneMapIndex, build_index, full_scan,
+                              query_index, query_index_fused,
+                              query_index_fused_multi)
 from repro.core.subsets import make_subsets
 from repro.core.trees import fit_decision_tree, fit_random_forest
 
@@ -77,10 +79,16 @@ class SearchEngine:
         block: int = 1024,
         seed: int = 0,
         use_pallas: bool = True,
+        use_fused: bool = True,
+        capacity_frac: float = 0.25,
     ):
         self.x = np.ascontiguousarray(np.asarray(features, np.float32))
         self.n, self.d = self.x.shape
         self.use_pallas = use_pallas
+        # fused path: prune->gather->refine as one jit'd device program
+        # over the cached device mirror of each index (core/index.py)
+        self.use_fused = use_fused
+        self.capacity_frac = capacity_frac
         t0 = time.perf_counter()
         self.subsets = make_subsets(self.d, n_subsets, subset_dim, seed=seed)
         self.indexes: List[ZoneMapIndex] = [
@@ -124,12 +132,9 @@ class SearchEngine:
         xp, xn = self.x[pos_ids], self.x[neg_ids]
 
         t0 = time.perf_counter()
-        if model == "dbranch":
-            boxes = [fit_dbranch_best_subset(xp, xn, self.subsets,
-                                             max_depth=max_depth)]
-        elif model == "dbens":
-            boxes = fit_dbens(xp, xn, self.subsets, n_models=n_models,
-                              max_depth=max_depth, seed=seed)
+        if model in ("dbranch", "dbens"):
+            boxes = self._fit_boxes(model, xp, xn, max_depth=max_depth,
+                                    n_models=n_models, seed=seed)
         elif model == "dtree":
             xtr = np.concatenate([xp, xn])
             ytr = np.concatenate([np.ones(len(xp)), np.zeros(len(xn))])
@@ -165,24 +170,84 @@ class SearchEngine:
                      "n_boxes": int(len(lo))}
         t_query = time.perf_counter() - t0
 
-        found = np.nonzero(counts > 0)[0]
-        if not include_training:
-            found = found[~np.isin(found, np.concatenate([pos_ids, neg_ids]))]
-        order = np.argsort(-counts[found], kind="stable")
-        ids = found[order]
-        return QueryResult(model, ids, counts[ids].astype(np.float64),
-                           t_fit, t_query, stats)
+        ids, scores = self._rank(counts, pos_ids, neg_ids, include_training)
+        return QueryResult(model, ids, scores, t_fit, t_query, stats)
 
     # ------------------------------------------------------------------
+    def _fit_boxes(self, model: str, xp: np.ndarray, xn: np.ndarray, *,
+                   max_depth: int, n_models: int, seed: int) -> List[BoxSet]:
+        """Fit an index-path model; both query() and query_batch() go
+        through here so batched and sequential answers train identically."""
+        if model == "dbranch":
+            return [fit_dbranch_best_subset(xp, xn, self.subsets,
+                                            max_depth=max_depth)]
+        return fit_dbens(xp, xn, self.subsets, n_models=n_models,
+                         max_depth=max_depth, seed=seed)
+
+    @staticmethod
+    def _pow2ceil(v: int) -> int:
+        return 1 << max(int(v) - 1, 0).bit_length()
+
+    def _initial_capacity(self, index: ZoneMapIndex) -> int:
+        cap = max(1, int(index.n_blocks * self.capacity_frac))
+        return min(self._pow2ceil(cap), index.n_blocks)
+
+    def _fused_call(self, sid: int, merged: BoxSet,
+                    owner: Optional[np.ndarray] = None,
+                    n_queries: int = 1):
+        """Capacity-policy wrapper around the fused index path.
+
+        Starts from capacity_frac * n_blocks (rounded to a power of two so
+        the jit cache sees few distinct static capacities) and, on
+        overflow, re-runs once with capacity >= the observed survivor
+        count — results are therefore always exact while the common case
+        touches only capacity blocks."""
+        index = self.indexes[sid]
+        cap = self._initial_capacity(index)
+        while True:
+            if owner is None:
+                c, st = query_index_fused(index, merged, capacity=cap,
+                                          use_pallas=self.use_pallas)
+            else:
+                c, st = query_index_fused_multi(
+                    index, merged, owner, n_queries, capacity=cap,
+                    use_pallas=self.use_pallas)
+            if not st["overflowed"]:
+                return c, st
+            cap = min(self._pow2ceil(st["survivors"]), index.n_blocks)
+
+    @staticmethod
+    def _new_agg() -> Dict:
+        return {"blocks_touched": 0, "blocks_gathered": 0, "blocks_total": 0,
+                "bytes_touched": 0, "n_boxes": 0, "n_range_queries": 0}
+
+    @staticmethod
+    def _accumulate_agg(agg: Dict, st: Dict, n_boxes: int) -> None:
+        agg["blocks_touched"] += st["blocks_touched"]
+        # host path has no bounded gather: it reads exactly the survivors
+        agg["blocks_gathered"] += st.get("blocks_gathered",
+                                         st["blocks_touched"])
+        agg["blocks_total"] += st["blocks_total"]
+        agg["bytes_touched"] += st["bytes_touched"]
+        agg["n_boxes"] += n_boxes
+        agg["n_range_queries"] += n_boxes
+
+    def _finalize_agg(self, agg: Dict) -> Dict:
+        agg["scan_bytes_equiv"] = int(self.x.nbytes)
+        agg["bytes_saved_frac"] = 1.0 - agg["bytes_touched"] / max(
+            self.x.nbytes, 1)
+        return agg
+
     def _index_inference(self, boxsets: List[BoxSet]):
         """Range queries against the matching pre-built indexes.
 
         Boxes are grouped per subset (each group answered by ONE index),
         counts are summed across groups — every row's final score is its
-        total box-membership count across the ensemble."""
+        total box-membership count across the ensemble. With use_fused the
+        per-subset call is the device-resident fused pipeline; otherwise
+        the host prune/gather reference path."""
         counts = np.zeros(self.n, np.int64)
-        agg = {"blocks_touched": 0, "blocks_total": 0, "bytes_touched": 0,
-               "n_boxes": 0, "n_range_queries": 0}
+        agg = self._new_agg()
         by_subset: Dict[int, List[BoxSet]] = {}
         for bs in boxsets:
             by_subset.setdefault(bs.subset_id, []).append(bs)
@@ -190,18 +255,105 @@ class SearchEngine:
             merged = group[0]
             for g in group[1:]:
                 merged = merged.concatenate(g)
-            c, st = query_index(self.indexes[sid], merged,
-                                use_pallas=self.use_pallas)
+            if self.use_fused:
+                c, st = self._fused_call(sid, merged)
+            else:
+                c, st = query_index(self.indexes[sid], merged,
+                                    use_pallas=self.use_pallas)
             counts += c
-            agg["blocks_touched"] += st["blocks_touched"]
-            agg["blocks_total"] += st["blocks_total"]
-            agg["bytes_touched"] += st["bytes_touched"]
-            agg["n_boxes"] += merged.n_boxes
-            agg["n_range_queries"] += merged.n_boxes
-        agg["scan_bytes_equiv"] = int(self.x.nbytes)
-        agg["bytes_saved_frac"] = 1.0 - agg["bytes_touched"] / max(
-            self.x.nbytes, 1)
-        return counts, agg
+            self._accumulate_agg(agg, st, merged.n_boxes)
+        return counts, self._finalize_agg(agg)
+
+    # ------------------------------------------------------------------
+    def _rank(self, counts: np.ndarray, pos_ids: np.ndarray,
+              neg_ids: np.ndarray, include_training: bool):
+        """counts -> (ids ranked by confidence, scores); shared by the
+        sequential and batched paths so both rank identically."""
+        found = np.nonzero(counts > 0)[0]
+        if not include_training:
+            found = found[~np.isin(found,
+                                   np.concatenate([pos_ids, neg_ids]))]
+        order = np.argsort(-counts[found], kind="stable")
+        ids = found[order]
+        return ids, counts[ids].astype(np.float64)
+
+    def query_batch(self, requests: Sequence[Dict]) -> List:
+        """Answer MANY concurrent queries with ONE fused device call per
+        feature subset (the tentpole of the batched serving path).
+
+        Each request is a dict with ``pos_ids``/``neg_ids`` plus the same
+        optional keys query() accepts (model, max_depth, n_models, seed,
+        include_training, ...). Index-path models (dbranch/dbens) are
+        fitted per request, their boxes flattened with a per-box owner id,
+        grouped per subset, and every subset answered by a single
+        query_index_fused_multi call whose one-hot ownership map de-muxes
+        counts back per query ON DEVICE. Non-index models fall back to
+        sequential query().
+
+        Returns a list aligned with ``requests``; entries are QueryResult
+        on success or the raised Exception on per-request failure (the
+        batch itself never dies — serve-layer error isolation)."""
+        results: List = [None] * len(requests)
+        fitted = []     # (slot, model, boxsets, pos, neg, incl, t_fit)
+        for i, req in enumerate(requests):
+            try:
+                model = req.get("model", "dbranch")
+                if model not in MODELS:
+                    raise ValueError(
+                        f"unknown model {model!r}; choose from {MODELS}")
+                if model not in ("dbranch", "dbens"):
+                    kw = {k: v for k, v in req.items()
+                          if k not in ("pos_ids", "neg_ids", "model")}
+                    results[i] = self.query(req["pos_ids"], req["neg_ids"],
+                                            model=model, **kw)
+                    continue
+                pos = np.asarray(list(req["pos_ids"]), np.int64)
+                neg = np.asarray(list(req["neg_ids"]), np.int64)
+                t0 = time.perf_counter()
+                boxsets = self._fit_boxes(
+                    model, self.x[pos], self.x[neg],
+                    max_depth=req.get("max_depth", 12),
+                    n_models=req.get("n_models", 25),
+                    seed=req.get("seed", 0))
+                fitted.append((i, model, boxsets, pos, neg,
+                               req.get("include_training", False),
+                               time.perf_counter() - t0))
+            except Exception as e:  # noqa: BLE001 — per-request isolation
+                results[i] = e
+        if not fitted:
+            return results
+
+        # ---- ONE fused device call per subset over the whole batch -----
+        t0 = time.perf_counter()
+        nq = len(fitted)
+        counts = np.zeros((nq, self.n), np.int64)
+        agg = self._new_agg()
+        by_subset: Dict[int, List] = {}
+        for q, (_, _, boxsets, *_rest) in enumerate(fitted):
+            for bs in boxsets:
+                by_subset.setdefault(bs.subset_id, []).append((bs, q))
+        for sid, group in by_subset.items():
+            lo = np.concatenate([bs.lo for bs, _ in group])
+            hi = np.concatenate([bs.hi for bs, _ in group])
+            owner = np.concatenate(
+                [np.full(bs.n_boxes, q, np.int32) for bs, q in group])
+            merged = BoxSet(lo, hi, group[0][0].dims, sid)
+            c, st = self._fused_call(sid, merged, owner, nq)
+            counts += c
+            self._accumulate_agg(agg, st, merged.n_boxes)
+        t_query = time.perf_counter() - t0
+        self._finalize_agg(agg)
+
+        # ---- de-mux to per-request results -----------------------------
+        for q, (slot, model, boxsets, pos, neg, incl, t_fit) in enumerate(
+                fitted):
+            ids, scores = self._rank(counts[q], pos, neg, incl)
+            stats = {**agg, "path": "index",
+                     "n_boxes": int(sum(bs.n_boxes for bs in boxsets)),
+                     "batch_size": nq}
+            results[slot] = QueryResult(model, ids, scores, t_fit, t_query,
+                                        stats)
+        return results
 
     # ------------------------------------------------------------------
     def refine(self, result: QueryResult, extra_pos: Sequence[int],

@@ -16,7 +16,7 @@ each shard prunes/refines locally (distributed_query).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 import numpy as np
@@ -71,10 +71,24 @@ class ZoneMapIndex:
     block: int
     n_rows: int                   # real (unpadded) rows
     subset_id: int = -1
+    # lazily-populated device mirror: (rows3 [NB, block, d'], zlo, zhi)
+    _dev: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_blocks(self) -> int:
         return int(self.zlo.shape[0])
+
+    def device_arrays(self) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """(rows3 [NB, block, d'], zlo [NB, d'], zhi [NB, d']) as jax
+        arrays, uploaded ONCE and cached — every fused query reuses the
+        same device buffers, so no index bytes cross host<->device on the
+        online path (only the tiny boxes do)."""
+        if self._dev is None:
+            rows3 = jnp.asarray(self.rows).reshape(
+                self.n_blocks, self.block, -1)
+            self._dev = (rows3, jnp.asarray(self.zlo), jnp.asarray(self.zhi))
+        return self._dev
 
     def stats(self) -> dict:
         return {"blocks": self.n_blocks, "block_rows": self.block,
@@ -97,10 +111,13 @@ def build_index(x: np.ndarray, dims: np.ndarray, block: int = 1024,
         perm = np.concatenate([perm, np.full(pad, -1, perm.dtype)])
     nb = rows.shape[0] // block
     blocks = rows.reshape(nb, block, -1)
-    # padded +inf rows make zhi=+inf for the tail block; harmless (the
-    # rows themselves fail containment) but keep zlo tight
-    zlo = blocks.min(1)
-    zhi = blocks.max(1)
+    # zone maps over REAL rows only: padded +inf rows would otherwise leak
+    # into the tail block's zhi, making it overlap every box and inflating
+    # blocks_touched/bytes_touched (the tail block has >= 1 real row, so
+    # the masked reductions are never empty)
+    real = (np.arange(rows.shape[0]) < n).reshape(nb, block, 1)
+    zlo = np.where(real, blocks, np.inf).min(1)
+    zhi = np.where(real, blocks, -np.inf).max(1)
     return ZoneMapIndex(np.asarray(dims), perm, rows, zlo, zhi, block, n,
                         subset_id)
 
@@ -149,6 +166,132 @@ def query_index(index: ZoneMapIndex, boxes: BoxSet,
     return out, stats
 
 
+# ----------------------------------------------------------------------
+# fused device-resident query path
+# ----------------------------------------------------------------------
+
+_BOX_BUCKET = 8   # boxes padded to a multiple of this -> stable jit keys
+
+
+def _pad_boxes(lo: np.ndarray, hi: np.ndarray, owner: Optional[np.ndarray]):
+    """Pad the box count to a _BOX_BUCKET multiple with impossible boxes
+    (lo=+inf > hi=-inf): they survive no zone and contain no row, so
+    results are unchanged while the fused jit cache stays hot across
+    queries with varying box counts."""
+    b = lo.shape[0]
+    pad = (-b) % _BOX_BUCKET
+    if pad == 0:
+        return lo, hi, owner
+    d = lo.shape[1]
+    lo = np.concatenate([lo, np.full((pad, d), np.inf, np.float32)])
+    hi = np.concatenate([hi, np.full((pad, d), -np.inf, np.float32)])
+    if owner is not None:
+        owner = np.concatenate([owner, np.zeros(pad, owner.dtype)])
+    return lo, hi, owner
+
+
+def _fused_stats(index: ZoneMapIndex, n_hit: int, capacity: int,
+                 n_boxes: int) -> dict:
+    """blocks_touched counts surviving blocks actually refined (comparable
+    to query_index); the bytes/rows figures price the CAPACITY-sized
+    gather the device really performs — the fused path reads capacity
+    blocks regardless of how few survive, which is exactly why callers
+    size capacity just above the typical survivor count (DESIGN.md §6)."""
+    touched = min(n_hit, capacity)
+    return {
+        "blocks_touched": touched,
+        "blocks_gathered": capacity,
+        "blocks_total": index.n_blocks,
+        "rows_touched": int(capacity * index.block),
+        "bytes_touched": int(capacity * index.block * index.rows.shape[1] * 4),
+        "bytes_total": int(index.rows.nbytes),
+        "prune_fraction": 1.0 - capacity / max(index.n_blocks, 1),
+        "capacity": capacity,
+        "survivors": n_hit,
+        "overflowed": n_hit > capacity,
+        "n_boxes": n_boxes,
+    }
+
+
+def _scatter_fused(index: ZoneMapIndex, counts: np.ndarray,
+                   cand: np.ndarray, n_hit: int, capacity: int,
+                   n_queries: int) -> np.ndarray:
+    """Host-side de-mux of the fused result: counts [C, block, Q] for the
+    gathered blocks -> [n_queries, n_rows] in ORIGINAL row order. Only the
+    capacity-sized slice ever crosses device->host; all untouched blocks
+    are zero by construction."""
+    out = np.zeros((n_queries, index.n_rows), np.int32)
+    k = min(n_hit, capacity)
+    if k:
+        perm_blocks = index.perm.reshape(index.n_blocks, index.block)[cand[:k]]
+        flat_perm = perm_blocks.reshape(-1)                  # [k * block]
+        flat_counts = counts[:k].reshape(k * index.block, -1)
+        real = flat_perm >= 0
+        out[:, flat_perm[real]] = flat_counts[real].T
+    return out
+
+
+def _resolve_capacity(index: ZoneMapIndex, capacity: Optional[int]) -> int:
+    if capacity is None:
+        capacity = index.n_blocks            # always-exact default
+    return int(min(max(capacity, 1), index.n_blocks))
+
+
+def query_index_fused(index: ZoneMapIndex, boxes: BoxSet, *,
+                      capacity: Optional[int] = None,
+                      use_pallas: bool = True) -> Tuple[np.ndarray, dict]:
+    """Device-resident counterpart of query_index: zone-prune -> bounded
+    block gather -> refine run as ONE jit'd device program (kops.
+    fused_query) over the cached device mirror of the index. Identical
+    counts to query_index whenever ``capacity`` covers the survivors
+    (default: n_blocks, i.e. always); with a smaller capacity, survivors
+    past the bound are dropped and stats["overflowed"] is set."""
+    assert np.array_equal(index.dims, boxes.dims), "box subset != index subset"
+    capacity = _resolve_capacity(index, capacity)
+    rows3, zlo, zhi = index.device_arrays()
+    lo, hi, _ = _pad_boxes(boxes.lo, boxes.hi, None)
+    onehot = jnp.ones((lo.shape[0], 1), jnp.float32)
+    counts_dev, cand_dev, n_hit_dev = kops.fused_query(
+        rows3, zlo, zhi, jnp.asarray(lo), jnp.asarray(hi), onehot,
+        capacity=capacity, use_pallas=use_pallas)
+    n_hit = int(n_hit_dev)
+    out = _scatter_fused(index, np.asarray(counts_dev), np.asarray(cand_dev),
+                         n_hit, capacity, 1)[0]
+    return out, _fused_stats(index, n_hit, capacity, boxes.n_boxes)
+
+
+def query_index_fused_multi(index: ZoneMapIndex, boxes: BoxSet,
+                            owner: np.ndarray, n_queries: int, *,
+                            capacity: Optional[int] = None,
+                            use_pallas: bool = True
+                            ) -> Tuple[np.ndarray, dict]:
+    """Answer MANY concurrent queries' boxes on one index with ONE fused
+    device call. ``owner[b]`` maps box b to its query; the box->query
+    one-hot rides into the refine kernel, which de-muxes membership into
+    per-query counts on device (box_scan_seg). Returns
+    (counts [n_queries, n_rows] int32 in ORIGINAL row order, stats).
+
+    Each query's counts are bitwise-identical to running query_index on
+    its own boxes, provided capacity covers the UNION's survivors."""
+    assert np.array_equal(index.dims, boxes.dims), "box subset != index subset"
+    assert owner.shape == (boxes.n_boxes,)
+    capacity = _resolve_capacity(index, capacity)
+    rows3, zlo, zhi = index.device_arrays()
+    lo, hi, owner_p = _pad_boxes(boxes.lo, boxes.hi,
+                                 np.asarray(owner, np.int32))
+    # pad boxes are impossible (contain nothing), so their owner-0 rows in
+    # the one-hot contribute zero counts
+    onehot = jnp.asarray(
+        (owner_p[:, None] == np.arange(n_queries)[None]).astype(np.float32))
+    counts_dev, cand_dev, n_hit_dev = kops.fused_query(
+        rows3, zlo, zhi, jnp.asarray(lo), jnp.asarray(hi), onehot,
+        capacity=capacity, use_pallas=use_pallas)
+    n_hit = int(n_hit_dev)
+    out = _scatter_fused(index, np.asarray(counts_dev), np.asarray(cand_dev),
+                         n_hit, capacity, n_queries)
+    return out, _fused_stats(index, n_hit, capacity, boxes.n_boxes)
+
+
 def full_scan(x: np.ndarray, lo: np.ndarray, hi: np.ndarray,
               use_pallas: bool = True) -> np.ndarray:
     """Scan baseline over the FULL feature matrix (what DT/RF must do)."""
@@ -173,8 +316,9 @@ def distributed_query(index_rows: jax.Array, zlo: jax.Array, zhi: jax.Array,
     prunes its own zones and refines only its shard's rows — no
     collectives until the caller gathers ids, exactly how the engine runs
     on a pod (queries fan out, id lists gather back)."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     def local(rows, lo_z, hi_z, lo_b, hi_b):
         m = kref.zone_prune_ref(lo_z, hi_z, lo_b, hi_b).any(1)     # [nb_local]
@@ -203,7 +347,8 @@ def distributed_query_pruned(index_rows: jax.Array, zlo: jax.Array,
     callers size capacity from the zone-prune mask (or re-run with 2x).
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    from repro.compat import shard_map
 
     def local(rows, lo_z, hi_z, lo_b, hi_b):
         nb_loc = rows.shape[0]

@@ -51,3 +51,46 @@ def box_scan_pallas(x: jax.Array, lo: jax.Array, hi: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
         interpret=interpret,
     )(x, lo, hi)
+
+
+def _box_scan_seg_kernel(x_ref, lo_ref, hi_ref, oh_ref, out_ref):
+    """Segmented variant for batched multi-query refine.
+
+    x: [TN, D]; lo/hi: [B, D]; oh: [B, Q] box->segment one-hot;
+    out: [TN, Q] int32 per-segment counts. The [TN, B] membership mask is
+    reduced per segment by a 0/1 matmul (MXU) instead of a plain sum —
+    exact in f32 for any realistic box count (< 2^24 boxes/segment)."""
+    x = x_ref[...]                                   # [TN, D]
+    lo = lo_ref[...]                                 # [B, D]
+    hi = hi_ref[...]
+    oh = oh_ref[...]                                 # [B, Q]
+    inside = (x[:, None, :] > lo[None]) & (x[:, None, :] <= hi[None])
+    member = jnp.all(inside, axis=-1).astype(jnp.float32)       # [TN, B]
+    counts = jnp.dot(member, oh, preferred_element_type=jnp.float32)
+    out_ref[...] = counts.astype(jnp.int32)          # [TN, Q]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def box_scan_seg_pallas(x: jax.Array, lo: jax.Array, hi: jax.Array,
+                        onehot: jax.Array, *, tile_n: int = 1024,
+                        interpret: bool = True) -> jax.Array:
+    """x: [N, D] f32 (N % tile_n == 0, D % 128 == 0); lo/hi: [B, D];
+    onehot: [B, Q] f32 (Q % 128 == 0 — see ops.py). Returns [N, Q] int32
+    per-segment membership counts."""
+    n, d = x.shape
+    b = lo.shape[0]
+    q = onehot.shape[1]
+    grid = (n // tile_n,)
+    return pl.pallas_call(
+        _box_scan_seg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),   # row tile -> VMEM
+            pl.BlockSpec((b, d), lambda i: (0, 0)),        # boxes resident
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((b, q), lambda i: (0, 0)),        # ownership map
+        ],
+        out_specs=pl.BlockSpec((tile_n, q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, q), jnp.int32),
+        interpret=interpret,
+    )(x, lo, hi, onehot)

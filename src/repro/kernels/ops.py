@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.box_scan import box_scan_pallas
+from repro.kernels import ref as kref
+from repro.kernels.box_scan import box_scan_pallas, box_scan_seg_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.l2dist import l2dist_pallas
 from repro.kernels.zone_prune import zone_prune_pallas
@@ -72,6 +73,74 @@ def zone_prune(zlo: jax.Array, zhi: jax.Array, blo: jax.Array, bhi: jax.Array,
     out = zone_prune_pallas(zlop, zhip, blop, bhip,
                             tile_z=tile_z, interpret=interpret)
     return out[:nz]
+
+
+def box_scan_seg(x: jax.Array, lo: jax.Array, hi: jax.Array,
+                 onehot: jax.Array, *, tile_n: int = 1024,
+                 interpret: bool | None = None) -> jax.Array:
+    """Per-segment membership counts [N, Q]: counts[i, q] = number of
+    boxes b with onehot[b, q] == 1 that contain row i.
+
+    Same padding hygiene as box_scan, plus the segment axis padded to a
+    lane multiple with all-zero columns (they count nothing)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = x.shape[0]
+    nq = onehot.shape[1]
+    xp = _pad_dim(_pad_rows(x, tile_n, float("inf")), 128, 0.0)
+    lop = _pad_dim(lo, 128, -float("inf"))
+    hip = _pad_dim(hi, 128, float("inf"))
+    ohp = _pad_dim(onehot.astype(jnp.float32), 128, 0.0)
+    out = box_scan_seg_pallas(xp, lop, hip, ohp, tile_n=tile_n,
+                              interpret=interpret)
+    return out[:n, :nq]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "use_pallas", "interpret"))
+def fused_query(rows3: jax.Array, zlo: jax.Array, zhi: jax.Array,
+                blo: jax.Array, bhi: jax.Array, onehot: jax.Array,
+                *, capacity: int, use_pallas: bool = True,
+                interpret: bool | None = None):
+    """Device-resident prune -> gather -> segmented refine, ONE jit.
+
+    rows3: [NB, block, d'] Morton-ordered index rows (resident on device —
+    callers upload once via ZoneMapIndex.device_arrays); zlo/zhi: [NB, d']
+    zone maps; blo/bhi: [B, d'] boxes; onehot: [B, Q] box->query ownership
+    map (Q == 1 with an all-ones column collapses to single-query counts).
+
+    ``capacity`` statically bounds the surviving-block gather
+    (``jnp.nonzero(size=capacity)`` — the padded-result idiom, mirroring
+    distributed_query_pruned): every quantity that leaves the device —
+    the refined counts and the gathered-block ids — is sized by capacity,
+    not catalog size, and shapes stay static so the whole pipeline
+    compiles to one device program with zero host round-trips. Survivors
+    beyond capacity are dropped; callers detect overflow via n_hit.
+
+    Returns (counts [capacity, block, Q] int32 — per gathered block, slot
+             i holding block cand[i]'s counts (slots >= n_hit zeroed),
+             cand [capacity] int32 — gathered block ids (zone order,
+             0-filled past n_hit),
+             n_hit scalar int32 — TOTAL surviving blocks, pre-capacity).
+    """
+    nb, block, dd = rows3.shape
+    if use_pallas:
+        mask = zone_prune(zlo, zhi, blo, bhi, interpret=interpret)
+    else:
+        mask = kref.zone_prune_ref(zlo, zhi, blo, bhi)       # [NB, B]
+    hit = mask.any(1)
+    n_hit = hit.sum().astype(jnp.int32)
+    cand, = jnp.nonzero(hit, size=capacity, fill_value=0)    # [C]
+    valid = jnp.arange(capacity) < n_hit
+    sel = rows3[cand]                                        # [C, block, d']
+    flat = sel.reshape(capacity * block, dd)
+    if use_pallas:
+        counts = box_scan_seg(flat, blo, bhi, onehot, interpret=interpret)
+    else:
+        counts = kref.box_scan_seg_ref(flat, blo, bhi,
+                                       onehot.astype(jnp.float32))
+    counts = counts.reshape(capacity, block, -1) * valid[:, None, None]
+    return counts, cand.astype(jnp.int32), n_hit
 
 
 def l2dist(x: jax.Array, q: jax.Array,

@@ -12,6 +12,15 @@ def box_scan_ref(x: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
     return jnp.all(inside, axis=-1).sum(-1).astype(jnp.int32)
 
 
+def box_scan_seg_ref(x: jax.Array, lo: jax.Array, hi: jax.Array,
+                     onehot: jax.Array) -> jax.Array:
+    """x: [N, D]; lo/hi: [B, D]; onehot: [B, Q] box->segment map ->
+    [N, Q] int32 per-segment membership counts."""
+    inside = (x[:, None, :] > lo[None]) & (x[:, None, :] <= hi[None])
+    member = jnp.all(inside, axis=-1).astype(jnp.float32)       # [N, B]
+    return (member @ onehot).astype(jnp.int32)
+
+
 def zone_prune_ref(zlo, zhi, blo, bhi) -> jax.Array:
     """[NZ, D] zones x [B, D] boxes -> [NZ, B] bool interval overlap."""
     ov = (zhi[:, None, :] > blo[None]) & (zlo[:, None, :] <= bhi[None])

@@ -8,8 +8,11 @@ HTTP layer (swappable transport), so serving-path tests and benchmarks
 measure exactly what production would.
 
 Production notes:
-  * queries are independent → batching is for device efficiency
-    (box_scan over the union of all queries' boxes), not semantics;
+  * queries are independent → batching is for device efficiency, not
+    semantics: handle_batch routes the window through
+    SearchEngine.query_batch (ONE fused prune/gather/refine call per
+    feature subset, per-box ownership map de-muxing counts per query —
+    DESIGN.md §6);
   * the feature DB / indexes shard over hosts; each host runs one
     QueryServer on its shard and a stateless front end merges id lists;
   * per-request deadline + error isolation: one bad query never takes
@@ -58,7 +61,7 @@ class QueryServer:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.stats = {"served": 0, "errors": 0, "batches": 0,
-                      "latency_sum": 0.0}
+                      "batched_queries": 0, "latency_sum": 0.0}
 
     # ------------------------------------------------------------------
     def handle(self, req: QueryRequest) -> QueryResponse:
@@ -77,8 +80,41 @@ class QueryServer:
         return resp
 
     def handle_batch(self, reqs: List[QueryRequest]) -> List[QueryResponse]:
+        """Answer a batching-window's worth of requests together.
+
+        Multi-request batches go through SearchEngine.query_batch: all
+        concurrent index-path queries share ONE fused device call per
+        feature subset (per-box ownership map de-muxes counts per query),
+        so the batching window buys device efficiency instead of just
+        queueing. Per-request error isolation is preserved — query_batch
+        returns the raised exception for a failed request — and an
+        unexpected batch-wide failure falls back to sequential handling.
+        """
         self.stats["batches"] += 1
-        return [self.handle(r) for r in reqs]
+        if len(reqs) == 1:
+            return [self.handle(reqs[0])]
+        t0 = time.perf_counter()
+        batch = [{"pos_ids": r.pos_ids, "neg_ids": r.neg_ids,
+                  "model": r.model, **r.kwargs} for r in reqs]
+        try:
+            outs = self.engine.query_batch(batch)
+        except Exception:  # noqa: BLE001 — never take down the batch
+            return [self.handle(r) for r in reqs]
+        wall = time.perf_counter() - t0
+        resps = []
+        for r, out in zip(reqs, outs):
+            if isinstance(out, Exception):
+                resp = QueryResponse(r.request_id, False, None, f"{out}",
+                                     wall)
+            else:
+                resp = QueryResponse(r.request_id, True, out,
+                                     latency_s=wall)
+            self.stats["served"] += 1
+            self.stats["errors"] += 0 if resp.ok else 1
+            self.stats["latency_sum"] += resp.latency_s
+            resps.append(resp)
+        self.stats["batched_queries"] += len(reqs)
+        return resps
 
     # ------------------------------------------------------------------
     # threaded front end

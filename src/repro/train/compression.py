@@ -79,8 +79,9 @@ def compressed_cross_pod_mean(grads: PyTree, ef: PyTree, mesh,
     psums the int8 payload (as int32 accumulator) + the scales, then
     dequantises with the summed scale — exact for the sum of quantised
     values, with the per-pod residual folded into error feedback."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     comp = Int8ErrorFeedback()
     qtree, ef = comp.compress(grads, ef)

@@ -7,7 +7,10 @@ negatives; k-d tree oracle agrees with both.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="dev dependency (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.boxes import BoxSet, boxes_contain
 from repro.core.dbranch import fit_dbranch

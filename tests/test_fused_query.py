@@ -1,0 +1,228 @@
+"""Fused device-resident query path + batched engine equivalence.
+
+The contract (ISSUE 1 / DESIGN.md §6): query_index_fused and
+SearchEngine.query_batch must return BITWISE-identical counts to the
+per-query host path (query_index / query) — the fused pipeline changes
+where the work runs (one jit, zero host<->device row traffic), never the
+answer. Capacity bounds the gather; overflow drops survivors past the
+bound in zone order, which these tests pin down explicitly.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.boxes import BoxSet, boxes_contain
+from repro.core.engine import SearchEngine
+from repro.core.index import (build_index, query_index, query_index_fused,
+                              query_index_fused_multi)
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _random_boxes(rng, x, b, width=0.3):
+    centers = x[rng.integers(0, len(x), b)]
+    lo = (centers - width).astype(np.float32)
+    hi = (centers + width).astype(np.float32)
+    return lo, hi
+
+
+# ----------------------------------------------------------------------
+# box_scan_seg kernel
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,b,q", [(300, 6, 7, 3), (1024, 4, 16, 1),
+                                     (513, 17, 5, 9)])
+def test_box_scan_seg_matches_ref(n, d, b, q):
+    rng = np.random.default_rng(n + d + b + q)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    lo, hi = _random_boxes(rng, x, b)
+    seg = rng.integers(0, q, b)
+    onehot = (seg[:, None] == np.arange(q)[None]).astype(np.float32)
+    got = np.asarray(kops.box_scan_seg(jnp.asarray(x), jnp.asarray(lo),
+                                       jnp.asarray(hi), jnp.asarray(onehot)))
+    want = np.asarray(kref.box_scan_seg_ref(jnp.asarray(x), jnp.asarray(lo),
+                                            jnp.asarray(hi),
+                                            jnp.asarray(onehot)))
+    np.testing.assert_array_equal(got, want)
+    # per-segment counts must also sum to the plain box_scan counts
+    total = np.asarray(kops.box_scan(jnp.asarray(x), jnp.asarray(lo),
+                                     jnp.asarray(hi)))
+    np.testing.assert_array_equal(got.sum(1), total)
+
+
+# ----------------------------------------------------------------------
+# query_index_fused oracle
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,n,b", [(0, 3000, 1), (1, 5000, 4),
+                                      (2, 2000, 9)])
+def test_fused_equals_host_path_and_oracle(seed, n, b):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, 4)).astype(np.float32)
+    idx = build_index(x, np.arange(4), block=128)
+    lo, hi = _random_boxes(rng, x, b)
+    bs = BoxSet(lo, hi, np.arange(4))
+    host, st_host = query_index(idx, bs)
+    fused, st_fused = query_index_fused(idx, bs)
+    np.testing.assert_array_equal(fused, host)
+    np.testing.assert_array_equal(fused, boxes_contain(x, lo, hi))
+    assert not st_fused["overflowed"]
+    assert st_fused["blocks_touched"] == st_host["blocks_touched"]
+
+
+def test_fused_capacity_overflow_drops_tail_survivors():
+    """capacity < survivors: exactly the first-capacity surviving blocks
+    (zone order) are refined, the rest are dropped; the overflow is
+    reported so callers can re-run with a larger capacity."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(0, 1, (4000, 4)).astype(np.float32)
+    idx = build_index(x, np.arange(4), block=128)
+    lo, hi = _random_boxes(rng, x, 2, width=0.5)
+    bs = BoxSet(lo, hi, np.arange(4))
+    mask = np.asarray(kops.zone_prune(jnp.asarray(idx.zlo),
+                                      jnp.asarray(idx.zhi),
+                                      jnp.asarray(lo), jnp.asarray(hi)))
+    hit_ids = np.nonzero(mask.any(1))[0]
+    assert len(hit_ids) >= 3, "test needs several survivors"
+    cap = len(hit_ids) // 2
+    got, st = query_index_fused(idx, bs, capacity=cap)
+    assert st["overflowed"] and st["survivors"] == len(hit_ids)
+    assert st["blocks_touched"] == cap
+    # reference over the first-capacity surviving blocks only
+    rows3 = idx.rows.reshape(idx.n_blocks, idx.block, -1)
+    counts = np.zeros(idx.rows.shape[0], np.int32)
+    for bi in hit_ids[:cap]:
+        c = np.asarray(kref.box_scan_ref(jnp.asarray(rows3[bi]),
+                                         jnp.asarray(lo), jnp.asarray(hi)))
+        counts[bi * idx.block:(bi + 1) * idx.block] = c
+    want = np.zeros(idx.n_rows, np.int32)
+    valid = idx.perm >= 0
+    want[idx.perm[valid]] = counts[valid]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fused_empty_survivors():
+    """A box overlapping no zone: zero counts, zero blocks touched."""
+    rng = np.random.default_rng(4)
+    x = rng.normal(0, 1, (2000, 4)).astype(np.float32)
+    idx = build_index(x, np.arange(4), block=128)
+    far = BoxSet(np.full((1, 4), 50.0, np.float32),
+                 np.full((1, 4), 51.0, np.float32), np.arange(4))
+    got, st = query_index_fused(idx, far)
+    assert (got == 0).all()
+    assert st["survivors"] == 0 and st["blocks_touched"] == 0
+    assert not st["overflowed"]
+
+
+def test_fused_multi_equals_per_query():
+    """One fused multi call with an ownership map == per-query host path."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(0, 1, (6000, 5)).astype(np.float32)
+    idx = build_index(x, np.arange(5), block=128)
+    n_queries = 4
+    los, his, owner = [], [], []
+    for q in range(n_queries):
+        b = int(rng.integers(1, 5))
+        lo, hi = _random_boxes(rng, x, b)
+        los.append(lo)
+        his.append(hi)
+        owner.append(np.full(b, q, np.int32))
+    merged = BoxSet(np.concatenate(los), np.concatenate(his), np.arange(5))
+    owner = np.concatenate(owner)
+    got, st = query_index_fused_multi(idx, merged, owner, n_queries)
+    assert got.shape == (n_queries, idx.n_rows)
+    for q in range(n_queries):
+        want, _ = query_index(idx, BoxSet(los[q], his[q], np.arange(5)))
+        np.testing.assert_array_equal(got[q], want)
+
+
+def test_build_index_pad_rows_do_not_leak_into_zones():
+    """The tail block's zone map covers REAL rows only — a query box far
+    from the data must not touch the tail block (stats were previously
+    inflated by the padded +inf rows leaking into zhi)."""
+    rng = np.random.default_rng(6)
+    x = rng.normal(0, 1, (1000, 3)).astype(np.float32)   # 1000 % 128 != 0
+    idx = build_index(x, np.arange(3), block=128)
+    assert np.isfinite(idx.zhi).all() and np.isfinite(idx.zlo).all()
+    far = BoxSet(np.full((1, 3), 40.0, np.float32),
+                 np.full((1, 3), 41.0, np.float32), np.arange(3))
+    _, st = query_index(idx, far)
+    assert st["blocks_touched"] == 0, st
+
+
+# ----------------------------------------------------------------------
+# SearchEngine.query_batch
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_and_labels(catalog):
+    feats, labels = catalog
+    eng = SearchEngine(feats, n_subsets=12, subset_dim=6, block=128, seed=0)
+    return eng, labels
+
+
+def _request(labels, cls, n_pos, n_neg, seed, **kw):
+    rng = np.random.default_rng(seed)
+    pos = rng.choice(np.nonzero(labels == cls)[0], n_pos, replace=False)
+    neg = rng.choice(np.nonzero(labels != cls)[0], n_neg, replace=False)
+    return {"pos_ids": pos, "neg_ids": neg, **kw}
+
+
+def test_query_batch_equals_sequential(engine_and_labels):
+    eng, labels = engine_and_labels
+    reqs = [
+        _request(labels, 1, 10, 40, seed=0, model="dbranch"),
+        _request(labels, 2, 12, 50, seed=1, model="dbens", n_models=5),
+        _request(labels, 2, 10, 40, seed=2, model="dbranch"),
+        _request(labels, 3, 10, 40, seed=3, model="dbranch",
+                 include_training=True),
+    ]
+    batch = eng.query_batch(reqs)
+    for res, req in zip(batch, reqs):
+        kw = {k: v for k, v in req.items()
+              if k not in ("pos_ids", "neg_ids", "model")}
+        seq = eng.query(req["pos_ids"], req["neg_ids"], model=req["model"],
+                        **kw)
+        np.testing.assert_array_equal(res.ids, seq.ids)
+        np.testing.assert_array_equal(res.scores, seq.scores)
+        assert res.stats["path"] == "index"
+        assert res.stats["batch_size"] == len(reqs)
+
+
+def test_query_batch_isolates_bad_request(engine_and_labels):
+    eng, labels = engine_and_labels
+    good = _request(labels, 2, 10, 40, seed=7, model="dbranch")
+    bad = {"pos_ids": [1], "neg_ids": [2], "model": "not_a_model"}
+    out = eng.query_batch([good, bad, good])
+    assert isinstance(out[1], Exception) and "not_a_model" in str(out[1])
+    np.testing.assert_array_equal(out[0].ids, out[2].ids)
+
+
+def test_query_batch_mixed_models_fall_back(engine_and_labels):
+    """Non-index models inside a batch are answered sequentially but the
+    batch still returns aligned results."""
+    eng, labels = engine_and_labels
+    reqs = [_request(labels, 2, 10, 40, seed=9, model="dbranch"),
+            _request(labels, 2, 10, 40, seed=9, model="dtree")]
+    out = eng.query_batch(reqs)
+    assert out[0].model == "dbranch" and out[1].model == "dtree"
+    assert out[0].stats["path"] == "index"
+    assert out[1].stats["path"] == "scan"
+
+
+def test_server_batch_uses_fused_path(engine_and_labels):
+    from repro.serve.engine import QueryRequest, QueryServer
+    eng, labels = engine_and_labels
+    srv = QueryServer(eng)
+    reqs = []
+    for i in range(3):
+        r = _request(labels, 2, 8, 30, seed=i)
+        reqs.append(QueryRequest(i, r["pos_ids"], r["neg_ids"], "dbranch"))
+    resps = srv.handle_batch(reqs)
+    assert all(r.ok for r in resps)
+    assert srv.stats["batched_queries"] == 3
+    assert srv.stats["served"] == 3
+    # same answers as the sequential front door
+    solo = srv.handle(QueryRequest(9, reqs[0].pos_ids, reqs[0].neg_ids))
+    np.testing.assert_array_equal(resps[0].result.ids, solo.result.ids)
