@@ -1,6 +1,7 @@
-"""Shared benchmark utilities: catalog construction + CSV emission."""
+"""Shared benchmark utilities: catalog construction + CSV/JSON emission."""
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Dict, List, Tuple
 
@@ -59,3 +60,10 @@ def emit(rows: List[Dict], name: str) -> None:
         derived = ";".join(f"{k}={v}" for k, v in r.items()
                            if k not in ("name", "us_per_call"))
         print(f"{r.get('name', name)},{us},{derived}")
+
+
+def emit_json(rows: List[Dict], path: str) -> None:
+    """Write the same rows as a JSON artifact (CI uploads these)."""
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"wrote {path} ({len(rows)} rows)")

@@ -11,13 +11,18 @@ ratio is the scale-free quantity (DESIGN.md §2) — on the paper's 90.4M x
 384 catalog, the scan moves 139 GB while DBranch moves the same *fraction*
 measured here.
 
-Extra modes (DESIGN.md §6):
+Extra modes (DESIGN.md §6, §9):
   --batched         8 concurrent dbranch queries through
                     SearchEngine.query_batch (ONE fused device call per
                     subset) vs the same 8 run sequentially — reports
                     per-query latency for both on the same backend.
   --capacity-sweep  query_index_fused latency/bytes across gather
                     capacities, showing how to size ``capacity``.
+  --ranked          device-resident ranked path (max_results=k, O(k)
+                    host traffic) vs the legacy per-subset scatter +
+                    host-rank path, per-query latency + measured
+                    device->host bytes at n in {20k, 50k}; emits
+                    BENCH_query_time.json for the CI artifact.
 """
 from __future__ import annotations
 
@@ -25,7 +30,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, make_engine, query_sets
+from benchmarks.common import emit, emit_json, make_engine, query_sets
 from repro.data.synthetic import CLASS_IDS
 
 DB_SIZES = (5_000, 20_000, 50_000)
@@ -109,6 +114,124 @@ def run_batched(batch: int = 8, n: int = 20_000, verbose: bool = True):
     return rows
 
 
+def _scatter_batch(engine, reqs):
+    """The pre-ranking formulation, kept as the benchmark baseline: ONE
+    fused device call per subset, then a [Q, n_rows] HOST scatter
+    (query_index_fused_multi) and a host rank over all N rows per query.
+    Returns (ranked results, measured device->host bytes, fit seconds,
+    query-phase seconds)."""
+    from repro.core.index import query_index_fused_multi
+
+    t0 = time.perf_counter()
+    fitted = []
+    for r in reqs:
+        pos = np.asarray(list(r["pos_ids"]), np.int64)
+        neg = np.asarray(list(r["neg_ids"]), np.int64)
+        bs = engine._fit_boxes("dbranch", engine.x[pos], engine.x[neg],
+                               max_depth=12, n_models=25, seed=0)
+        fitted.append((bs, pos, neg))
+    t_fit = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    nq = len(reqs)
+    counts = np.zeros((nq, engine.n), np.int64)
+    host_bytes = 0
+    jobs, _ = engine._make_jobs(
+        [(b, q) for q, (boxsets, _, _) in enumerate(fitted)
+         for b in boxsets], nq)
+    for sid, merged, owner in jobs:
+        index = engine.indexes[sid]
+        # the pre-ranking engine's fixed cold-start policy (no survivor
+        # hints): capacity_frac * n_blocks, pow2-rounded, retry on overflow
+        cap = min(engine._pow2ceil(
+            max(1, int(index.n_blocks * engine.capacity_frac))),
+            index.n_blocks)
+        while True:
+            c, st = query_index_fused_multi(index, merged, owner, nq,
+                                            capacity=cap,
+                                            use_pallas=engine.use_pallas)
+            # counts [C, block, Q] + cand [C] + n_hit cross per attempt
+            host_bytes += (st["capacity"] * index.block * nq * 4
+                           + st["capacity"] * 4 + 4)
+            if not st["overflowed"]:
+                break
+            cap = min(engine._pow2ceil(st["survivors"]), index.n_blocks)
+        counts += c
+    results = [engine._rank(counts[q], pos, neg, False)
+               for q, (_, pos, neg) in enumerate(fitted)]
+    return results, host_bytes, t_fit, time.perf_counter() - t0
+
+
+def run_ranked(batch: int = 8, sizes=(20_000, 50_000), k: int = 100,
+               verbose: bool = True, out_json: str = "BENCH_query_time.json"):
+    """Ranked device-resident path vs legacy scatter path (DESIGN.md §9).
+
+    The quantity under test is per-query device->host traffic: the
+    scatter path moves O(capacity * block) count bytes per subset plus a
+    full host rank over N rows, while the ranked path moves O(k) ids +
+    scores regardless of DB size — the JSON rows make the flat-vs-growing
+    byte curves explicit. Raises if ranked and scatter ids ever disagree,
+    so the CI quick-bench step fails loudly on a ranking regression."""
+    rows = []
+    for n in sizes:
+        engine, labels = make_engine(n)
+        classes = [CLASS_IDS["forest"], CLASS_IDS["water"]]
+        reqs = []
+        for i in range(batch):
+            pos, neg = query_sets(labels, classes[i % len(classes)], 15, 80,
+                                  seed=100 + i)
+            reqs.append({"pos_ids": pos, "neg_ids": neg, "model": "dbranch",
+                         "max_results": k})
+
+        # warm both paths (jit compile + device upload), then take the
+        # best of a few iterations (single runs are noisy at the ms scale)
+        _scatter_batch(engine, reqs)
+        engine.query_batch(reqs)
+
+        iters = 3
+        scat_wall = rank_wall = scat_query = rank_query = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            scat, scat_bytes, scat_fit, sq = _scatter_batch(engine, reqs)
+            scat_wall = min(scat_wall, time.perf_counter() - t0)
+            scat_query = min(scat_query, sq)
+            t0 = time.perf_counter()
+            ranked = engine.query_batch(reqs)
+            rank_wall = min(rank_wall, time.perf_counter() - t0)
+            rank_query = min(rank_query, ranked[0].query_time_s)
+
+        rank_bytes = ranked[0].stats["batch_host_bytes_transferred"]
+        agree = int(all(np.array_equal(r.ids, ids[:k])
+                        for r, (ids, _) in zip(ranked, scat)))
+        if not agree:
+            raise AssertionError(
+                f"ranked ids != scatter top-{k} at n={n} — device ranking "
+                "regressed against the host oracle")
+        # the model fit is identical on both paths; the query phase is
+        # where scatter-vs-ranked differ, so that's the headline speedup
+        rows.append({
+            "name": f"query_time/ranked/n{n}/b{batch}/k{k}",
+            "us_per_call": round(1e6 * rank_query / batch, 1),
+            "scatter_us_per_query": round(1e6 * scat_query / batch, 1),
+            "speedup_query_phase": round(
+                scat_query / max(rank_query, 1e-9), 2),
+            "wall_us_per_query": round(1e6 * rank_wall / batch, 1),
+            "scatter_wall_us_per_query": round(1e6 * scat_wall / batch, 1),
+            "speedup_wall": round(scat_wall / max(rank_wall, 1e-9), 2),
+            "fit_ms": round(1e3 * scat_fit, 1),
+            "host_bytes_ranked_per_query": rank_bytes // batch,
+            "host_bytes_scatter_per_query": scat_bytes // batch,
+            "n": n,
+            "batch": batch,
+            "k": k,
+            "ids_agree": agree,
+        })
+    if verbose:
+        emit(rows, "query_time_ranked")
+        emit_json(rows, out_json)
+    return rows
+
+
 def run_capacity_sweep(n: int = 20_000, verbose: bool = True):
     """How to size the fused gather capacity: latency + bytes touched per
     capacity, against the host path and the number of actual survivors."""
@@ -154,12 +277,18 @@ if __name__ == "__main__":
                     help="batched vs sequential per-query latency")
     ap.add_argument("--capacity-sweep", action="store_true",
                     help="fused-gather capacity sweep")
+    ap.add_argument("--ranked", action="store_true",
+                    help="device-ranked vs legacy scatter path")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--sizes", type=int, nargs="+", default=[20_000, 50_000])
+    ap.add_argument("--k", type=int, default=100)
     args = ap.parse_args()
     if args.batched:
         run_batched(batch=args.batch, n=args.n)
     elif args.capacity_sweep:
         run_capacity_sweep(n=args.n)
+    elif args.ranked:
+        run_ranked(batch=args.batch, sizes=tuple(args.sizes), k=args.k)
     else:
         run()

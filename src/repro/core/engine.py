@@ -18,25 +18,38 @@ Five search models (paper §4.1), all returning the same QueryResult:
 The scan-based models reuse the same box_scan kernel over the FULL
 feature matrix — the latency difference against the index path is purely
 which bytes each model touches, which is the paper's headline claim.
+
+The index path is device-resident END TO END (DESIGN.md §9): per-subset
+fused queries accumulate into one persistent [N, Q] device score buffer
+in original row order (kernels/ops.accumulate_scores), overflow checks
+are deferred to ONE batched host sync per round, and with ``max_results``
+set the ranking itself runs on device (kernels/ops.rank_topk) so only
+[Q, k] ids/scores ever cross to the host — per-query device->host
+traffic is O(k), independent of catalog size.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.core import knn as knn_mod
-from repro.core.boxes import BoxSet, merge_boxsets
+from repro.core.boxes import BoxSet
 from repro.core.dbranch import fit_dbens, fit_dbranch_best_subset
 from repro.core.index import (ZoneMapIndex, build_index, full_scan,
-                              query_index, query_index_fused,
-                              query_index_fused_multi)
+                              fused_stats, pad_boxes, query_index)
 from repro.core.subsets import make_subsets
 from repro.core.trees import fit_decision_tree, fit_random_forest
+from repro.kernels import ops as kops
 
 MODELS = ("dbranch", "dbens", "dtree", "rforest", "knn")
+
+# sentinel: "no per-call override — use the engine default"
+_UNSET = object()
 
 
 @dataclass
@@ -68,6 +81,11 @@ class SearchEngine:
     queries fan out (boxes are tiny); see serve/engine.py for the batched
     multi-query front end and core/index.distributed_query for the
     shard_map'd device path.
+
+    ``max_results`` (constructor default, overridable per query) caps how
+    many ranked ids a query returns AND switches ranking to the device
+    top-k stage: only [Q, k] crosses device->host. With max_results=None
+    the full ranked result list is returned via the host ranking oracle.
     """
 
     def __init__(
@@ -81,6 +99,7 @@ class SearchEngine:
         use_pallas: bool = True,
         use_fused: bool = True,
         capacity_frac: float = 0.25,
+        max_results: Optional[int] = None,
     ):
         self.x = np.ascontiguousarray(np.asarray(features, np.float32))
         self.n, self.d = self.x.shape
@@ -89,6 +108,11 @@ class SearchEngine:
         # over the cached device mirror of each index (core/index.py)
         self.use_fused = use_fused
         self.capacity_frac = capacity_frac
+        self.max_results = max_results
+        # survivor counts observed by _device_scores, keyed by
+        # (subset, box-count bucket); sizes the next like-shaped fused
+        # gather so steady-state queries never overflow-retry
+        self._cap_hints: Dict = {}
         t0 = time.perf_counter()
         self.subsets = make_subsets(self.d, n_subsets, subset_dim, seed=seed)
         self.indexes: List[ZoneMapIndex] = [
@@ -123,10 +147,16 @@ class SearchEngine:
         n_models: int = 25,
         seed: int = 0,
         include_training: bool = False,
+        max_results=_UNSET,
     ) -> QueryResult:
-        """One user query: label sets in, ranked ids out."""
+        """One user query: label sets in, ranked ids out.
+
+        ``max_results=k`` truncates the ranked list to its top k entries
+        and, on the fused index path, runs the ranking on device so the
+        host receives O(k) bytes instead of the full score vector."""
         if model not in MODELS:
             raise ValueError(f"unknown model {model!r}; choose from {MODELS}")
+        mr = self.max_results if max_results is _UNSET else max_results
         pos_ids = np.asarray(list(pos_ids), np.int64)
         neg_ids = np.asarray(list(neg_ids), np.int64)
         xp, xn = self.x[pos_ids], self.x[neg_ids]
@@ -146,11 +176,12 @@ class SearchEngine:
                                        max_depth=max_depth, seed=seed)
         t_fit = time.perf_counter() - t0
 
-        # ---- inference ------------------------------------------------
+        # ---- inference + ranking --------------------------------------
         t0 = time.perf_counter()
         stats: Dict = {}
         if model in ("dbranch", "dbens"):
-            counts, stats = self._index_inference(boxes)
+            ids, scores, stats = self._run_index_path(
+                boxes, pos_ids, neg_ids, include_training, mr)
             stats["path"] = "index"
         elif model == "knn":
             k = min(k_neighbors, self.n)
@@ -159,6 +190,8 @@ class SearchEngine:
             stats = {"path": "index", "bytes_touched": int(
                 self.indexes[0].rows.nbytes)}
             t_fit = 0.0
+            ids, scores = self._rank(counts, pos_ids, neg_ids,
+                                     include_training)
         else:
             lo, hi = (tree.lo, tree.hi) if model == "dtree" else forest.boxes()
             if len(lo) == 0:
@@ -168,9 +201,12 @@ class SearchEngine:
                                               use_pallas=self.use_pallas))
             stats = {"path": "scan", "bytes_touched": int(self.x.nbytes),
                      "n_boxes": int(len(lo))}
+            ids, scores = self._rank(counts, pos_ids, neg_ids,
+                                     include_training)
+        if mr is not None:      # device-ranked results are already <= mr
+            ids, scores = ids[:mr], scores[:mr]
         t_query = time.perf_counter() - t0
 
-        ids, scores = self._rank(counts, pos_ids, neg_ids, include_training)
         return QueryResult(model, ids, scores, t_fit, t_query, stats)
 
     # ------------------------------------------------------------------
@@ -188,38 +224,36 @@ class SearchEngine:
     def _pow2ceil(v: int) -> int:
         return 1 << max(int(v) - 1, 0).bit_length()
 
-    def _initial_capacity(self, index: ZoneMapIndex) -> int:
+    def _cap_key(self, sid: int, n_boxes: int):
+        """Hints are keyed by (subset, pow2-bucketed box count): survivor
+        counts scale with the merged boxset's surface, so a single query
+        (few boxes) and a batch window's union (many boxes) must not
+        poison each other's capacity sizing."""
+        return (sid, self._pow2ceil(max(int(n_boxes), 1)))
+
+    def _initial_capacity(self, index: ZoneMapIndex,
+                          n_boxes: Optional[int] = None) -> int:
+        """Gather capacity for a subset's fused call: the last observed
+        survivor count for a like-sized boxset when one is known (the
+        deferred-sync rounds report it for free — DESIGN.md §6 says to
+        size capacity just above the typical survivor count, and now the
+        engine does it itself), otherwise the capacity_frac cold-start
+        policy. Results stay exact either way: an under-sized guess is
+        caught by the batched overflow check and retried."""
+        if n_boxes is not None:
+            hint = self._cap_hints.get(self._cap_key(index.subset_id,
+                                                     n_boxes))
+            if hint is not None:
+                return min(self._pow2ceil(max(hint, 1)), index.n_blocks)
         cap = max(1, int(index.n_blocks * self.capacity_frac))
         return min(self._pow2ceil(cap), index.n_blocks)
-
-    def _fused_call(self, sid: int, merged: BoxSet,
-                    owner: Optional[np.ndarray] = None,
-                    n_queries: int = 1):
-        """Capacity-policy wrapper around the fused index path.
-
-        Starts from capacity_frac * n_blocks (rounded to a power of two so
-        the jit cache sees few distinct static capacities) and, on
-        overflow, re-runs once with capacity >= the observed survivor
-        count — results are therefore always exact while the common case
-        touches only capacity blocks."""
-        index = self.indexes[sid]
-        cap = self._initial_capacity(index)
-        while True:
-            if owner is None:
-                c, st = query_index_fused(index, merged, capacity=cap,
-                                          use_pallas=self.use_pallas)
-            else:
-                c, st = query_index_fused_multi(
-                    index, merged, owner, n_queries, capacity=cap,
-                    use_pallas=self.use_pallas)
-            if not st["overflowed"]:
-                return c, st
-            cap = min(self._pow2ceil(st["survivors"]), index.n_blocks)
 
     @staticmethod
     def _new_agg() -> Dict:
         return {"blocks_touched": 0, "blocks_gathered": 0, "blocks_total": 0,
-                "bytes_touched": 0, "n_boxes": 0, "n_range_queries": 0}
+                "bytes_touched": 0, "n_boxes": 0, "n_range_queries": 0,
+                "host_bytes_transferred": 0, "n_host_syncs": 0,
+                "retried_subsets": 0}
 
     @staticmethod
     def _accumulate_agg(agg: Dict, st: Dict, n_boxes: int) -> None:
@@ -238,14 +272,102 @@ class SearchEngine:
             self.x.nbytes, 1)
         return agg
 
-    def _index_inference(self, boxsets: List[BoxSet]):
-        """Range queries against the matching pre-built indexes.
+    # ------------------------------------------------------------------
+    # device-resident scoring (the online hot path, DESIGN.md §9)
+    # ------------------------------------------------------------------
+    def _make_jobs(self, pairs: Sequence[Tuple[BoxSet, int]], nq: int):
+        """Group (BoxSet, owner-query) pairs per subset.
 
-        Boxes are grouped per subset (each group answered by ONE index),
-        counts are summed across groups — every row's final score is its
-        total box-membership count across the ensemble. With use_fused the
-        per-subset call is the device-resident fused pipeline; otherwise
-        the host prune/gather reference path."""
+        Returns ([(sid, merged BoxSet, owner [B] int32)] — one fused
+        device call each — and the max per-query total box count, the
+        score upper bound the device ranking needs for its id-composed
+        keys)."""
+        by_subset: Dict[int, List[Tuple[BoxSet, int]]] = {}
+        for bs, q in pairs:
+            by_subset.setdefault(bs.subset_id, []).append((bs, q))
+        jobs = []
+        totals = np.zeros(nq, np.int64)
+        for sid, group in by_subset.items():
+            lo = np.concatenate([bs.lo for bs, _ in group])
+            hi = np.concatenate([bs.hi for bs, _ in group])
+            owner = np.concatenate([np.full(bs.n_boxes, q, np.int32)
+                                    for bs, q in group])
+            jobs.append((sid, BoxSet(lo, hi, group[0][0].dims, sid), owner))
+            totals += np.bincount(owner, minlength=nq)
+        return jobs, (int(totals.max()) if jobs else 0)
+
+    def _device_scores(self, jobs, nq: int):
+        """Answer every subset's boxes and accumulate all counts into ONE
+        persistent [n, nq] device score buffer in ORIGINAL row order
+        (row-major so each block's scatter update is contiguous).
+
+        Per round: launch every pending subset's fused query (async
+        dispatch, no blocking), then ONE batched device->host sync reads
+        all survivor counts together. Subsets whose survivors exceeded
+        capacity are re-queued with capacity >= the observed count and are
+        the ONLY work the next round re-runs; everything else scatter-adds
+        into the score buffer on device (kops.accumulate_scores). The
+        common case is exactly one sync of a few int32s per query batch —
+        the per-subset blocking int(n_hit) round-trips of the old path
+        are gone."""
+        scores = jnp.zeros((self.n, nq), jnp.int32)
+        agg = self._new_agg()
+        pending = [(sid, merged, owner,
+                    self._initial_capacity(self.indexes[sid],
+                                           merged.n_boxes))
+                   for sid, merged, owner in jobs]
+        while pending:
+            launched = []
+            for sid, merged, owner, cap in pending:
+                index = self.indexes[sid]
+                rows3, zlo, zhi = index.device_arrays()
+                lo, hi, owner_p = pad_boxes(merged.lo, merged.hi, owner)
+                onehot = jnp.asarray(
+                    (owner_p[:, None] == np.arange(nq)[None]
+                     ).astype(np.float32))
+                counts, cand, n_hit = kops.fused_query(
+                    rows3, zlo, zhi, jnp.asarray(lo), jnp.asarray(hi),
+                    onehot, capacity=cap, use_pallas=self.use_pallas)
+                launched.append((sid, merged, owner, cap, counts, cand,
+                                 n_hit))
+            # ONE batched sync covers the whole round's overflow checks
+            n_hits = np.asarray(jnp.stack([l[6] for l in launched]))
+            agg["n_host_syncs"] += 1
+            agg["host_bytes_transferred"] += int(n_hits.nbytes)
+            pending = []
+            for (sid, merged, owner, cap, counts, cand, _), nh in zip(
+                    launched, n_hits):
+                index = self.indexes[sid]
+                nh = int(nh)
+                # size the NEXT like-shaped query right: rise to a new
+                # peak instantly, decay old peaks slowly so one light
+                # query can't make the next heavy one overflow-retry
+                key = self._cap_key(sid, merged.n_boxes)
+                self._cap_hints[key] = max(
+                    nh, (self._cap_hints.get(key, 0) * 3) // 4)
+                if nh > cap:
+                    # the failed attempt still gathered (and priced) cap
+                    # blocks of device traffic; count it so bytes_touched
+                    # reflects every gather the device really performed
+                    agg["blocks_gathered"] += cap
+                    agg["bytes_touched"] += int(
+                        cap * index.block * index.rows.shape[1] * 4)
+                    pending.append((sid, merged, owner,
+                                    min(self._pow2ceil(nh), index.n_blocks)))
+                    continue
+                scores = kops.accumulate_scores(scores, counts, cand,
+                                                index.device_inv_perm(),
+                                                nb=index.n_blocks)
+                self._accumulate_agg(
+                    agg, fused_stats(index, nh, cap, merged.n_boxes),
+                    merged.n_boxes)
+            agg["retried_subsets"] += len(pending)
+        return scores, self._finalize_agg(agg)
+
+    def _index_inference(self, boxsets: List[BoxSet]):
+        """Host/oracle range-query path (use_fused=False): per-subset
+        query_index with the host prune/gather reference implementation.
+        Kept as the correctness oracle for the device-resident path."""
         counts = np.zeros(self.n, np.int64)
         agg = self._new_agg()
         by_subset: Dict[int, List[BoxSet]] = {}
@@ -255,20 +377,42 @@ class SearchEngine:
             merged = group[0]
             for g in group[1:]:
                 merged = merged.concatenate(g)
-            if self.use_fused:
-                c, st = self._fused_call(sid, merged)
-            else:
-                c, st = query_index(self.indexes[sid], merged,
-                                    use_pallas=self.use_pallas)
+            c, st = query_index(self.indexes[sid], merged,
+                                use_pallas=self.use_pallas)
             counts += c
             self._accumulate_agg(agg, st, merged.n_boxes)
         return counts, self._finalize_agg(agg)
 
+    def _run_index_path(self, boxsets: List[BoxSet], pos_ids, neg_ids,
+                        include_training: bool, mr: Optional[int]):
+        """Single-query index inference + ranking; fused engines score on
+        device and, with ``mr`` set, rank on device too."""
+        if not self.use_fused:
+            counts, stats = self._index_inference(boxsets)
+            ids, scores = self._rank(counts, pos_ids, neg_ids,
+                                     include_training)
+            return ids, scores, stats    # query() applies the mr cut
+        jobs, bound = self._make_jobs([(bs, 0) for bs in boxsets], 1)
+        scores_dev, stats = self._device_scores(jobs, 1)
+        if mr is None:
+            counts = np.asarray(scores_dev)[:, 0]
+            stats["host_bytes_transferred"] += int(counts.nbytes)
+            ids, scores = self._rank(counts, pos_ids, neg_ids,
+                                     include_training)
+        else:
+            ranked, hb = self._rank_device(
+                scores_dev, [(pos_ids, neg_ids, include_training)], mr,
+                bound)
+            stats["host_bytes_transferred"] += hb
+            ids, scores = ranked[0]
+        return ids, scores, stats
+
     # ------------------------------------------------------------------
     def _rank(self, counts: np.ndarray, pos_ids: np.ndarray,
               neg_ids: np.ndarray, include_training: bool):
-        """counts -> (ids ranked by confidence, scores); shared by the
-        sequential and batched paths so both rank identically."""
+        """counts -> (ids ranked by confidence, scores) on the HOST — the
+        ranking oracle the device stage must reproduce exactly: stable
+        argsort of -counts == descending score, ascending id on ties."""
         found = np.nonzero(counts > 0)[0]
         if not include_training:
             found = found[~np.isin(found,
@@ -277,31 +421,70 @@ class SearchEngine:
         ids = found[order]
         return ids, counts[ids].astype(np.float64)
 
+    def _rank_device(self, scores_dev, masks, k: int, score_bound: int):
+        """Device ranking (kops.rank_topk) over the [N, Q] device score
+        buffer; only [Q, k] ids/scores plus [Q] valid counts cross to the
+        host. masks: per-query (pos, neg, include_training). Returns
+        ([(ids, scores)] aligned with masks, host bytes transferred)."""
+        n, nq = int(scores_dev.shape[0]), int(scores_dev.shape[1])
+        # k is a static jit arg: pow2-bucket it (like capacities and the
+        # tmax pad) so varied per-request max_results share compilations;
+        # callers slice the valid prefix down to their own k
+        kk = min(self._pow2ceil(max(int(k), 1)), n)
+        tmax = max([1] + [len(p) + len(ng) for p, ng, inc in masks
+                          if not inc])
+        tmax = -(-tmax // 16) * 16      # bucket -> few distinct jit keys
+        tids = np.full((nq, tmax), n, np.int32)   # N pads are dropped
+        for q, (pos, neg, inc) in enumerate(masks):
+            if not inc:
+                tr = np.concatenate([pos, neg])
+                tids[q, :len(tr)] = tr
+        ids_k, scores_k, n_valid = kops.rank_topk(
+            scores_dev, jnp.asarray(tids), k=kk, score_bound=score_bound,
+            scores_transposed=True)
+        ids_k = np.asarray(ids_k)
+        scores_k = np.asarray(scores_k)
+        n_valid = np.asarray(n_valid)
+        hb = int(ids_k.nbytes + scores_k.nbytes + n_valid.nbytes)
+        out = []
+        for q in range(nq):
+            nv = int(n_valid[q])
+            out.append((ids_k[q, :nv].astype(np.int64),
+                        scores_k[q, :nv].astype(np.float64)))
+        return out, hb
+
     def query_batch(self, requests: Sequence[Dict]) -> List:
         """Answer MANY concurrent queries with ONE fused device call per
-        feature subset (the tentpole of the batched serving path).
+        feature subset, all accumulating into ONE [N, Q] device score
+        buffer (the tentpole of the batched serving path).
 
         Each request is a dict with ``pos_ids``/``neg_ids`` plus the same
         optional keys query() accepts (model, max_depth, n_models, seed,
-        include_training, ...). Index-path models (dbranch/dbens) are
-        fitted per request, their boxes flattened with a per-box owner id,
-        grouped per subset, and every subset answered by a single
-        query_index_fused_multi call whose one-hot ownership map de-muxes
-        counts back per query ON DEVICE. Non-index models fall back to
-        sequential query().
+        include_training, max_results, ...). Index-path models
+        (dbranch/dbens) are fitted per request, their boxes flattened with
+        a per-box owner id, grouped per subset, and every subset answered
+        by a single fused device call whose one-hot ownership map de-muxes
+        counts per query ON DEVICE. When every request in the batch sets
+        ``max_results`` the ranking runs on device too and only [Q, k]
+        crosses to the host. Non-index models fall back to sequential
+        query().
 
         Returns a list aligned with ``requests``; entries are QueryResult
         on success or the raised Exception on per-request failure (the
-        batch itself never dies — serve-layer error isolation)."""
+        batch itself never dies — serve-layer error isolation).
+
+        Stats: batch-wide aggregates describe the SHARED device phase and
+        are namespaced ``batch_*``; the only per-request figure is
+        ``n_boxes`` (that request's own box count)."""
         results: List = [None] * len(requests)
-        fitted = []     # (slot, model, boxsets, pos, neg, incl, t_fit)
+        fitted = []   # (slot, model, boxsets, pos, neg, incl, mr, t_fit)
         for i, req in enumerate(requests):
             try:
                 model = req.get("model", "dbranch")
                 if model not in MODELS:
                     raise ValueError(
                         f"unknown model {model!r}; choose from {MODELS}")
-                if model not in ("dbranch", "dbens"):
+                if model not in ("dbranch", "dbens") or not self.use_fused:
                     kw = {k: v for k, v in req.items()
                           if k not in ("pos_ids", "neg_ids", "model")}
                     results[i] = self.query(req["pos_ids"], req["neg_ids"],
@@ -315,43 +498,57 @@ class SearchEngine:
                     max_depth=req.get("max_depth", 12),
                     n_models=req.get("n_models", 25),
                     seed=req.get("seed", 0))
+                mr = (req["max_results"] if "max_results" in req
+                      else self.max_results)
                 fitted.append((i, model, boxsets, pos, neg,
-                               req.get("include_training", False),
+                               req.get("include_training", False), mr,
                                time.perf_counter() - t0))
             except Exception as e:  # noqa: BLE001 — per-request isolation
                 results[i] = e
         if not fitted:
             return results
 
-        # ---- ONE fused device call per subset over the whole batch -----
+        # ---- ONE fused device call per subset, ONE deferred sync -------
         t0 = time.perf_counter()
         nq = len(fitted)
-        counts = np.zeros((nq, self.n), np.int64)
-        agg = self._new_agg()
-        by_subset: Dict[int, List] = {}
-        for q, (_, _, boxsets, *_rest) in enumerate(fitted):
-            for bs in boxsets:
-                by_subset.setdefault(bs.subset_id, []).append((bs, q))
-        for sid, group in by_subset.items():
-            lo = np.concatenate([bs.lo for bs, _ in group])
-            hi = np.concatenate([bs.hi for bs, _ in group])
-            owner = np.concatenate(
-                [np.full(bs.n_boxes, q, np.int32) for bs, q in group])
-            merged = BoxSet(lo, hi, group[0][0].dims, sid)
-            c, st = self._fused_call(sid, merged, owner, nq)
-            counts += c
-            self._accumulate_agg(agg, st, merged.n_boxes)
+        pairs = [(bs, q) for q, (_, _, boxsets, *_r) in enumerate(fitted)
+                 for bs in boxsets]
+        jobs, bound = self._make_jobs(pairs, nq)
+        scores_dev, agg = self._device_scores(jobs, nq)
+
+        # ---- ranking ---------------------------------------------------
+        mrs = [f[6] for f in fitted]
+        if all(m is not None for m in mrs):
+            masks = [(pos, neg, incl)
+                     for (_, _, _, pos, neg, incl, _, _) in fitted]
+            ranked, hb = self._rank_device(scores_dev, masks, max(mrs),
+                                           bound)
+            agg["host_bytes_transferred"] += hb
+            ranked = [(ids[:m], sc[:m]) for (ids, sc), m in zip(ranked, mrs)]
+        else:
+            # any full-result request forces the score buffer to the host
+            # ONCE; ranking shares the oracle so truncated requests still
+            # see the exact device-ranking prefix
+            counts = np.ascontiguousarray(np.asarray(scores_dev).T)
+            agg["host_bytes_transferred"] += int(counts.nbytes)
+            ranked = []
+            for q, (_, _, _, pos, neg, incl, m, _) in enumerate(fitted):
+                ids, sc = self._rank(counts[q], pos, neg, incl)
+                if m is not None:
+                    ids, sc = ids[:m], sc[:m]
+                ranked.append((ids, sc))
         t_query = time.perf_counter() - t0
-        self._finalize_agg(agg)
 
         # ---- de-mux to per-request results -----------------------------
-        for q, (slot, model, boxsets, pos, neg, incl, t_fit) in enumerate(
+        base = {f"batch_{k}": v for k, v in agg.items()}
+        base["path"] = "index"
+        base["batch_size"] = nq
+        for q, (slot, model, boxsets, pos, neg, incl, m, t_fit) in enumerate(
                 fitted):
-            ids, scores = self._rank(counts[q], pos, neg, incl)
-            stats = {**agg, "path": "index",
-                     "n_boxes": int(sum(bs.n_boxes for bs in boxsets)),
-                     "batch_size": nq}
-            results[slot] = QueryResult(model, ids, scores, t_fit, t_query,
+            ids, sc = ranked[q]
+            stats = {**base,
+                     "n_boxes": int(sum(bs.n_boxes for bs in boxsets))}
+            results[slot] = QueryResult(model, ids, sc, t_fit, t_query,
                                         stats)
         return results
 

@@ -50,8 +50,12 @@ def morton_code(x: np.ndarray, nbits: int = 8) -> np.ndarray:
     nbits = min(nbits, 64 // max(d, 1))
     code = np.zeros(n, np.uint64)
     levels = 1 << nbits
+    ranks = np.empty(n, np.int64)
     for j in range(d):
-        ranks = np.argsort(np.argsort(x[:, j], kind="stable"), kind="stable")
+        # rank = inverse of the sort permutation; one argsort + scatter
+        # instead of argsort(argsort(.)) halves the build-path sort work
+        order = np.argsort(x[:, j], kind="stable")
+        ranks[order] = np.arange(n, dtype=np.int64)
         q = (ranks * levels // max(n, 1)).astype(np.uint64)
         code |= _part_bits(q, d, nbits) << j
     return code
@@ -74,6 +78,9 @@ class ZoneMapIndex:
     # lazily-populated device mirror: (rows3 [NB, block, d'], zlo, zhi)
     _dev: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = field(
         default=None, repr=False, compare=False)
+    # lazily-populated device inverse-permutation mirror [n_rows] int32
+    _dev_inv_perm: Optional[jax.Array] = field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_blocks(self) -> int:
@@ -89,6 +96,20 @@ class ZoneMapIndex:
                 self.n_blocks, self.block, -1)
             self._dev = (rows3, jnp.asarray(self.zlo), jnp.asarray(self.zhi))
         return self._dev
+
+    def device_inv_perm(self) -> jax.Array:
+        """[n_rows] int32 inverse permutation (ORIGINAL row id -> Morton
+        position), uploaded ONCE and cached alongside the device mirror.
+        Device-resident score accumulation (kernels/ops.accumulate_scores)
+        gathers through it to convert Morton-order counts into original
+        row order without any host de-mux; padded Morton slots are never
+        gathered because only the n_rows real rows appear here."""
+        if self._dev_inv_perm is None:
+            valid = self.perm >= 0
+            inv = np.empty(self.n_rows, np.int32)
+            inv[self.perm[valid]] = np.nonzero(valid)[0].astype(np.int32)
+            self._dev_inv_perm = jnp.asarray(inv)
+        return self._dev_inv_perm
 
     def stats(self) -> dict:
         return {"blocks": self.n_blocks, "block_rows": self.block,
@@ -173,7 +194,7 @@ def query_index(index: ZoneMapIndex, boxes: BoxSet,
 _BOX_BUCKET = 8   # boxes padded to a multiple of this -> stable jit keys
 
 
-def _pad_boxes(lo: np.ndarray, hi: np.ndarray, owner: Optional[np.ndarray]):
+def pad_boxes(lo: np.ndarray, hi: np.ndarray, owner: Optional[np.ndarray]):
     """Pad the box count to a _BOX_BUCKET multiple with impossible boxes
     (lo=+inf > hi=-inf): they survive no zone and contain no row, so
     results are unchanged while the fused jit cache stays hot across
@@ -190,8 +211,8 @@ def _pad_boxes(lo: np.ndarray, hi: np.ndarray, owner: Optional[np.ndarray]):
     return lo, hi, owner
 
 
-def _fused_stats(index: ZoneMapIndex, n_hit: int, capacity: int,
-                 n_boxes: int) -> dict:
+def fused_stats(index: ZoneMapIndex, n_hit: int, capacity: int,
+                n_boxes: int) -> dict:
     """blocks_touched counts surviving blocks actually refined (comparable
     to query_index); the bytes/rows figures price the CAPACITY-sized
     gather the device really performs — the fused path reads capacity
@@ -249,7 +270,7 @@ def query_index_fused(index: ZoneMapIndex, boxes: BoxSet, *,
     assert np.array_equal(index.dims, boxes.dims), "box subset != index subset"
     capacity = _resolve_capacity(index, capacity)
     rows3, zlo, zhi = index.device_arrays()
-    lo, hi, _ = _pad_boxes(boxes.lo, boxes.hi, None)
+    lo, hi, _ = pad_boxes(boxes.lo, boxes.hi, None)
     onehot = jnp.ones((lo.shape[0], 1), jnp.float32)
     counts_dev, cand_dev, n_hit_dev = kops.fused_query(
         rows3, zlo, zhi, jnp.asarray(lo), jnp.asarray(hi), onehot,
@@ -257,7 +278,7 @@ def query_index_fused(index: ZoneMapIndex, boxes: BoxSet, *,
     n_hit = int(n_hit_dev)
     out = _scatter_fused(index, np.asarray(counts_dev), np.asarray(cand_dev),
                          n_hit, capacity, 1)[0]
-    return out, _fused_stats(index, n_hit, capacity, boxes.n_boxes)
+    return out, fused_stats(index, n_hit, capacity, boxes.n_boxes)
 
 
 def query_index_fused_multi(index: ZoneMapIndex, boxes: BoxSet,
@@ -277,8 +298,8 @@ def query_index_fused_multi(index: ZoneMapIndex, boxes: BoxSet,
     assert owner.shape == (boxes.n_boxes,)
     capacity = _resolve_capacity(index, capacity)
     rows3, zlo, zhi = index.device_arrays()
-    lo, hi, owner_p = _pad_boxes(boxes.lo, boxes.hi,
-                                 np.asarray(owner, np.int32))
+    lo, hi, owner_p = pad_boxes(boxes.lo, boxes.hi,
+                                np.asarray(owner, np.int32))
     # pad boxes are impossible (contain nothing), so their owner-0 rows in
     # the one-hot contribute zero counts
     onehot = jnp.asarray(
@@ -289,7 +310,7 @@ def query_index_fused_multi(index: ZoneMapIndex, boxes: BoxSet,
     n_hit = int(n_hit_dev)
     out = _scatter_fused(index, np.asarray(counts_dev), np.asarray(cand_dev),
                          n_hit, capacity, n_queries)
-    return out, _fused_stats(index, n_hit, capacity, boxes.n_boxes)
+    return out, fused_stats(index, n_hit, capacity, boxes.n_boxes)
 
 
 def full_scan(x: np.ndarray, lo: np.ndarray, hi: np.ndarray,

@@ -1,8 +1,13 @@
 """jit'd public wrappers around the Pallas kernels.
 
 Handles TPU-shape hygiene (row-tile padding, lane-multiple feature
-padding with open bounds) and falls back to interpret mode off-TPU so the
-same call sites work everywhere. The pure-jnp oracles live in ref.py.
+padding with open bounds). Backend dispatch (``interpret=None``): on TPU
+the compiled Pallas kernel runs; on any other backend the wrapper routes
+to the jit'd pure-jnp oracle from ref.py — interpret-mode Pallas is a
+KERNEL-DEBUGGING tool (it emulates the kernel ~25x slower than the jnp
+graph on CPU) and is only used when a caller explicitly passes
+``interpret=True`` (the kernel test-suite does, to verify the Pallas
+implementations against the oracles everywhere).
 """
 from __future__ import annotations
 
@@ -23,6 +28,13 @@ _BIG = jnp.float32(3.4e38)
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# jit'd oracle fallbacks — the off-TPU serving path
+_box_scan_ref_jit = jax.jit(kref.box_scan_ref)
+_box_scan_seg_ref_jit = jax.jit(kref.box_scan_seg_ref)
+_zone_prune_ref_jit = jax.jit(kref.zone_prune_ref)
+_l2dist_ref_jit = jax.jit(kref.l2dist_ref)
 
 
 def _pad_rows(a: jax.Array, mult: int, fill: float) -> jax.Array:
@@ -50,7 +62,9 @@ def box_scan(x: jax.Array, lo: jax.Array, hi: jax.Array,
     Feature padding uses (lo=-BIG, hi=+BIG) so padded dims always pass;
     row padding uses +2*BIG rows that can never be inside any box."""
     if interpret is None:
-        interpret = not _on_tpu()
+        if not _on_tpu():
+            return _box_scan_ref_jit(x, lo, hi)
+        interpret = False
     n = x.shape[0]
     xp = _pad_dim(_pad_rows(x, tile_n, float("inf")), 128, 0.0)
     lop = _pad_dim(lo, 128, -float("inf"))
@@ -64,7 +78,9 @@ def zone_prune(zlo: jax.Array, zhi: jax.Array, blo: jax.Array, bhi: jax.Array,
     """Overlap mask [NZ, B]. Padded zones are empty intervals (lo > hi)
     that overlap nothing; padded dims are full intervals."""
     if interpret is None:
-        interpret = not _on_tpu()
+        if not _on_tpu():
+            return _zone_prune_ref_jit(zlo, zhi, blo, bhi)
+        interpret = False
     nz = zlo.shape[0]
     zlop = _pad_dim(_pad_rows(zlo, tile_z, float("inf")), 128, -float("inf"))
     zhip = _pad_dim(_pad_rows(zhi, tile_z, -float("inf")), 128, float("inf"))
@@ -84,7 +100,10 @@ def box_scan_seg(x: jax.Array, lo: jax.Array, hi: jax.Array,
     Same padding hygiene as box_scan, plus the segment axis padded to a
     lane multiple with all-zero columns (they count nothing)."""
     if interpret is None:
-        interpret = not _on_tpu()
+        if not _on_tpu():
+            return _box_scan_seg_ref_jit(x, lo, hi,
+                                         onehot.astype(jnp.float32))
+        interpret = False
     n = x.shape[0]
     nq = onehot.shape[1]
     xp = _pad_dim(_pad_rows(x, tile_n, float("inf")), 128, 0.0)
@@ -143,11 +162,214 @@ def fused_query(rows3: jax.Array, zlo: jax.Array, zhi: jax.Array,
     return counts, cand.astype(jnp.int32), n_hit
 
 
+@functools.partial(jax.jit, static_argnames=("nb",))
+def accumulate_scores(scores: jax.Array, counts: jax.Array, cand: jax.Array,
+                      inv_perm: jax.Array, *, nb: int) -> jax.Array:
+    """Add one subset's fused counts into the persistent per-query score
+    buffer, ON DEVICE and in ORIGINAL row order.
+
+    scores: [N, Q] int32 running scores; counts: [C, block, Q] from
+    fused_query (overflow slots already zeroed); cand: [C] gathered block
+    ids; inv_perm: [N] int32 original-row -> Morton-position map
+    (ZoneMapIndex.device_inv_perm); nb: the index's block count (static).
+
+    Formulated as a GATHER, not a scatter: a tiny [nb] block->slot table
+    (C-element scatter — nonzero emits survivors in ascending block
+    order, so a genuine survivor's slot always beats the zero-count fill
+    slots that alias block 0 under min) lets every original row pull its
+    own count straight out of the compact fused result through the
+    inverse permutation — one dense vectorised pass, no row-granular
+    scatter. Blocks absent from ``cand`` resolve out of range and gather
+    0 (mode="fill"). Nothing here ever touches the host — this replaces
+    the old [Q, n_rows] host scatter."""
+    c, block, q = counts.shape
+    slot = jnp.full((nb,), c, jnp.int32).at[cand].min(
+        jnp.arange(c, dtype=jnp.int32))
+    idx = slot[inv_perm // block] * block + inv_perm % block      # [N]
+    return scores + jnp.take(counts.reshape(c * block, q), idx, axis=0,
+                             mode="fill", fill_value=0)
+
+
+def rank_topk(scores: jax.Array, train_ids: jax.Array, *, k: int,
+              score_bound: int | None = None, method: str | None = None,
+              scores_transposed: bool = False):
+    """Device ranking stage: mask training rows, take the top-k scoring
+    rows, return only [Q, k] to the host — O(k) device->host traffic.
+
+    scores: [Q, N] int32; train_ids: [Q, T] int32 rows to exclude per
+    query (pad with N — out-of-bounds entries are dropped, so a query that
+    keeps its training rows passes an all-N row); k: results per query;
+    score_bound: a host-known upper bound on any score (e.g. the query's
+    total box count) — picks the best strategy and sizes its search.
+
+    Tie-break contract (must match the host oracle `SearchEngine._rank`,
+    a stable sort of -score): descending score, ascending row id within
+    equal scores — including ties that straddle the k boundary. Three
+    implementations with identical documented ordering:
+
+    * "topk": each row's key is ``score * N + (N - 1 - id)`` — the id
+      composed into the low digits — and one ``lax.top_k`` over the int32
+      keys returns the exact order (keys are unique, so backend tie-break
+      behaviour never matters). Needs ``(score_bound + 1) * N < 2**31``.
+      The TPU default: top_k runs in the sort unit at memory speed.
+    * "sort": ``lax.sort`` with num_keys=2 over (-score, id) — documented
+      lexicographic order — then slice the first k columns. The paper-
+      scale TPU fallback when the composed key would overflow int32.
+    * "threshold": the off-TPU default — XLA CPU sorts are scalar code,
+      so instead binary-search the k-th largest score with ``sbits``
+      vectorised count passes, extract rows above/at the threshold with
+      cumsum+searchsorted compaction (ascending id, exactly the tie-break
+      order), and run ONE tiny 2-key sort over the <= 2k candidates.
+      O(N log(score_bound)) elementwise work, never a full-width sort.
+
+    Rows with score <= 0 (incl. masked training rows) are invalid: their
+    ids come back -1 and n_valid excludes them.
+
+    ``scores_transposed=True`` accepts the engine's row-major [N, Q]
+    buffer directly; the flip happens inside the jit where XLA fuses it
+    into the first pass instead of materialising a transposed copy.
+
+    Returns (ids [Q, k] int32 (-1 past the valid prefix),
+             scores [Q, k] int32 (0 past the valid prefix),
+             n_valid [Q] int32)."""
+    n = scores.shape[0] if scores_transposed else scores.shape[1]
+    k = min(int(k), n)
+    if method is None:
+        if not _on_tpu():
+            method = "threshold"
+        elif score_bound is not None and (score_bound + 1) * n < 2 ** 31:
+            method = "topk"
+        else:
+            method = "sort"
+    if method == "threshold":
+        # 2**sbits must exceed any score; without a bound assume scores
+        # fit 30 bits (they are box-membership counts, nowhere near 2^30)
+        sbits = int(score_bound).bit_length() if score_bound else 30
+        return _rank_threshold(scores, train_ids, k=k,
+                               sbits=min(max(sbits, 1), 30),
+                               tr=scores_transposed)
+    if method == "topk":
+        assert score_bound is not None and (score_bound + 1) * n < 2 ** 31, \
+            "topk needs an int32-safe composed key; use sort/threshold"
+        return _rank_topk_compose(scores, train_ids, k=k,
+                                  tr=scores_transposed)
+    assert method == "sort", f"unknown rank method {method!r}"
+    return _rank_sort(scores, train_ids, k=k, tr=scores_transposed)
+
+
+def _mask_training(scores: jax.Array, train_ids: jax.Array) -> jax.Array:
+    nq = scores.shape[0]
+    qidx = jnp.arange(nq, dtype=jnp.int32)[:, None]
+    return scores.at[qidx, train_ids].set(0, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tr"))
+def _rank_topk_compose(scores, train_ids, *, k: int, tr: bool = False):
+    if tr:
+        scores = scores.T
+    n = scores.shape[1]
+    masked = _mask_training(scores, train_ids)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    # score > 0  <=>  key >= n, so zero rows never rank as valid
+    key = masked * n + (n - 1 - ids)[None, :]
+    top, _ = jax.lax.top_k(key, k)                       # [Q, k]
+    valid = top >= n
+    out_scores = jnp.where(valid, top // n, 0)
+    out_ids = jnp.where(valid, (n - 1) - top % n, -1)
+    return (out_ids.astype(jnp.int32), out_scores.astype(jnp.int32),
+            valid.sum(1).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tr"))
+def _rank_sort(scores, train_ids, *, k: int, tr: bool = False):
+    if tr:
+        scores = scores.T
+    n = scores.shape[1]
+    masked = _mask_training(scores, train_ids)
+    ids2 = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :],
+                            masked.shape)
+    sneg, sids = jax.lax.sort((-masked, ids2), dimension=-1, num_keys=2)
+    out_scores, out_ids = -sneg[:, :k], sids[:, :k]
+    valid = out_scores > 0
+    out_ids = jnp.where(valid, out_ids, -1)
+    return (out_ids.astype(jnp.int32), out_scores.astype(jnp.int32),
+            valid.sum(1).astype(jnp.int32))
+
+
+_RANK_CHUNK = 64     # rows per extraction chunk (see _first_k_set_rows)
+
+
+def _first_k_set_rows(mask: jax.Array, k: int) -> jax.Array:
+    """ids of the first k set rows of mask [Q, n], ascending; n where
+    exhausted. Two-level: per-chunk counts (a parallel reduction) place
+    each of the k targets in its chunk via a tiny binary search, then a
+    short cumsum over ONLY the k gathered chunks finds the in-chunk
+    offset — never a full-width sequential cumsum over n."""
+    nq, n = mask.shape
+    ch = _RANK_CHUNK
+    g = -(-n // ch)
+    mp = jnp.pad(mask, ((0, 0), (0, g * ch - n)))
+    mc = mp.reshape(nq, g, ch)
+    cnt = mc.sum(-1, dtype=jnp.int32)                       # [Q, g]
+    cum = jnp.cumsum(cnt, -1)                               # [Q, g] tiny
+    tgt = jnp.arange(1, k + 1, dtype=jnp.int32)             # [k]
+    cj = jax.vmap(
+        lambda c: jnp.searchsorted(c, tgt).astype(jnp.int32))(cum)
+    prev = jnp.where(cj > 0,
+                     jnp.take_along_axis(cum, jnp.maximum(cj - 1, 0), 1), 0)
+    r = tgt[None] - prev                                    # rank in chunk
+    sel = jnp.take_along_axis(mc, jnp.minimum(cj, g - 1)[..., None], 1)
+    loc = jnp.argmax(jnp.cumsum(sel, -1) >= r[..., None], -1)
+    return jnp.where(cj < g, cj * ch + loc.astype(jnp.int32), n)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "sbits", "tr"))
+def _rank_threshold(scores, train_ids, *, k: int, sbits: int,
+                    tr: bool = False):
+    if tr:
+        scores = scores.T
+    nq, n = scores.shape
+    masked = _mask_training(scores, train_ids)
+    npos = (masked > 0).sum(1).astype(jnp.int32)
+    kq = jnp.minimum(k, npos)                  # results this query yields
+    # binary search the k-th largest positive score t:
+    # invariant count(masked >= lo) >= kq > count(masked >= hi)
+    lo = jnp.ones(nq, jnp.int32)
+    hi = jnp.full(nq, jnp.int32(1 << sbits))
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) // 2
+        ok = (masked >= mid[:, None]).sum(1) >= kq
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    t, _ = jax.lax.fori_loop(0, sbits, body, (lo, hi))
+    gt = masked > t[:, None]
+    eq = masked == t[:, None]
+    i_gt = _first_k_set_rows(gt, k)            # all above-threshold rows
+    i_eq = _first_k_set_rows(eq, k)            # threshold ties, id order
+    m_cnt = gt.sum(1).astype(jnp.int32)        # < kq by threshold choice
+    keep_eq = jnp.arange(k, dtype=jnp.int32)[None, :] < (kq - m_cnt)[:, None]
+    cand_ids = jnp.concatenate([i_gt, jnp.where(keep_eq, i_eq, n)], 1)
+    valid = cand_ids < n
+    cs = jnp.where(
+        valid, jnp.take_along_axis(masked, jnp.minimum(cand_ids, n - 1), 1),
+        -1)
+    # one tiny 2-key sort orders the <= 2k survivors: (-score, id)
+    sneg, sids = jax.lax.sort((-cs, jnp.where(valid, cand_ids, n)),
+                              dimension=-1, num_keys=2)
+    out_scores = jnp.maximum(-sneg[:, :k], 0)
+    out_ids = jnp.where(out_scores > 0, sids[:, :k], -1)
+    return out_ids.astype(jnp.int32), out_scores.astype(jnp.int32), kq
+
+
 def l2dist(x: jax.Array, q: jax.Array,
            *, tile_n: int = 1024, interpret: bool | None = None) -> jax.Array:
     """Squared L2 distance matrix [N, Q]."""
     if interpret is None:
-        interpret = not _on_tpu()
+        if not _on_tpu():
+            return _l2dist_ref_jit(x, q)
+        interpret = False
     n = x.shape[0]
     xp = _pad_dim(_pad_rows(x, tile_n, 0.0), 128, 0.0)
     qp = _pad_dim(q, 128, 0.0)

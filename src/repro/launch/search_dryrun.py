@@ -57,7 +57,7 @@ def make_index_query_step(mesh, block: int, capacity: int):
     formulation (core/index.distributed_query_pruned): zone-prune, gather
     surviving blocks (static capacity), refine only those. Bytes touched
     scale with selectivity, which is the whole point of the paper."""
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.kernels import ref as kref
@@ -83,7 +83,7 @@ def make_index_query_step(mesh, block: int, capacity: int):
 
 
 def make_full_scan_step(mesh, block: int):
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.kernels import ref as kref

@@ -50,27 +50,44 @@ class QueryResponse:
 
 
 class QueryServer:
-    """Synchronous core (``handle``) + threaded front end (``submit``)."""
+    """Synchronous core (``handle``) + threaded front end (``submit``).
+
+    ``max_results`` is the serving default for how many ranked ids each
+    query returns; a request's own kwargs override it. Setting it keeps
+    the whole ranked path device-resident: per query only O(max_results)
+    bytes cross device->host (DESIGN.md §9), which ``stats["host_bytes"]``
+    tracks across everything this server has served."""
 
     def __init__(self, engine: SearchEngine, *, max_batch: int = 8,
-                 batch_window_s: float = 0.002):
+                 batch_window_s: float = 0.002,
+                 max_results: Optional[int] = None):
         self.engine = engine
         self.max_batch = max_batch
         self.batch_window_s = batch_window_s
+        self.max_results = max_results
         self._q: "queue.Queue[Tuple[QueryRequest, queue.Queue]]" = queue.Queue()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.stats = {"served": 0, "errors": 0, "batches": 0,
-                      "batched_queries": 0, "latency_sum": 0.0}
+                      "batched_queries": 0, "latency_sum": 0.0,
+                      "host_bytes": 0}
+
+    def _query_kwargs(self, req: QueryRequest) -> Dict:
+        kw = dict(req.kwargs)
+        if self.max_results is not None:
+            kw.setdefault("max_results", self.max_results)
+        return kw
 
     # ------------------------------------------------------------------
     def handle(self, req: QueryRequest) -> QueryResponse:
         t0 = time.perf_counter()
         try:
             res = self.engine.query(req.pos_ids, req.neg_ids,
-                                    model=req.model, **req.kwargs)
+                                    model=req.model, **self._query_kwargs(req))
             resp = QueryResponse(req.request_id, True, res,
                                  latency_s=time.perf_counter() - t0)
+            self.stats["host_bytes"] += res.stats.get(
+                "host_bytes_transferred", 0)
         except Exception as e:  # noqa: BLE001 — per-request isolation
             resp = QueryResponse(req.request_id, False, None, f"{e}",
                                  time.perf_counter() - t0)
@@ -95,13 +112,14 @@ class QueryServer:
             return [self.handle(reqs[0])]
         t0 = time.perf_counter()
         batch = [{"pos_ids": r.pos_ids, "neg_ids": r.neg_ids,
-                  "model": r.model, **r.kwargs} for r in reqs]
+                  "model": r.model, **self._query_kwargs(r)} for r in reqs]
         try:
             outs = self.engine.query_batch(batch)
         except Exception:  # noqa: BLE001 — never take down the batch
             return [self.handle(r) for r in reqs]
         wall = time.perf_counter() - t0
         resps = []
+        batch_bytes_counted = False
         for r, out in zip(reqs, outs):
             if isinstance(out, Exception):
                 resp = QueryResponse(r.request_id, False, None, f"{out}",
@@ -109,6 +127,16 @@ class QueryServer:
             else:
                 resp = QueryResponse(r.request_id, True, out,
                                      latency_s=wall)
+                # batch_* aggregates describe the SHARED device phase —
+                # count them once per batch, not once per request
+                if "batch_host_bytes_transferred" in out.stats:
+                    if not batch_bytes_counted:
+                        self.stats["host_bytes"] += out.stats[
+                            "batch_host_bytes_transferred"]
+                        batch_bytes_counted = True
+                else:
+                    self.stats["host_bytes"] += out.stats.get(
+                        "host_bytes_transferred", 0)
             self.stats["served"] += 1
             self.stats["errors"] += 0 if resp.ok else 1
             self.stats["latency_sum"] += resp.latency_s

@@ -39,8 +39,11 @@ def test_box_scan_seg_matches_ref(n, d, b, q):
     lo, hi = _random_boxes(rng, x, b)
     seg = rng.integers(0, q, b)
     onehot = (seg[:, None] == np.arange(q)[None]).astype(np.float32)
+    # interpret=True pins the Pallas kernel (default dispatch would pick
+    # the oracle itself off-TPU, making the comparison vacuous)
     got = np.asarray(kops.box_scan_seg(jnp.asarray(x), jnp.asarray(lo),
-                                       jnp.asarray(hi), jnp.asarray(onehot)))
+                                       jnp.asarray(hi), jnp.asarray(onehot),
+                                       interpret=True))
     want = np.asarray(kref.box_scan_seg_ref(jnp.asarray(x), jnp.asarray(lo),
                                             jnp.asarray(hi),
                                             jnp.asarray(onehot)))

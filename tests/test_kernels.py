@@ -65,6 +65,9 @@ def test_l2dist_pallas_matches_ref(n, d, q):
 
 # ----------------------------------------------------------------------
 # public wrappers: padding hygiene (odd N, odd D, dtype sweep)
+# interpret=True forces the Pallas path everywhere — with the default
+# (None) the wrappers dispatch to the jnp oracle off-TPU, which would
+# make these comparisons vacuous
 # ----------------------------------------------------------------------
 
 @pytest.mark.parametrize("n,d,b", [(100, 6, 3), (1000, 384, 25),
@@ -73,7 +76,8 @@ def test_box_scan_wrapper_padding(n, d, b):
     rng = np.random.default_rng(n * 7 + d)
     x = rng.normal(0, 1, (n, d)).astype(np.float32)
     lo, hi = _boxes(rng, b, d)
-    got = ops.box_scan(jnp.asarray(x), jnp.asarray(lo), jnp.asarray(hi))
+    got = ops.box_scan(jnp.asarray(x), jnp.asarray(lo), jnp.asarray(hi),
+                       interpret=True)
     want = ref.box_scan_ref(jnp.asarray(x), jnp.asarray(lo), jnp.asarray(hi))
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
@@ -84,7 +88,7 @@ def test_box_scan_wrapper_dtypes(dtype):
     x = rng.normal(0, 1, (300, 12)).astype(dtype)
     lo, hi = _boxes(rng, 5, 12, np.float32)
     got = ops.box_scan(jnp.asarray(x, jnp.float32), jnp.asarray(lo),
-                       jnp.asarray(hi))
+                       jnp.asarray(hi), interpret=True)
     want = ref.box_scan_ref(jnp.asarray(x, jnp.float32), jnp.asarray(lo),
                             jnp.asarray(hi))
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
@@ -96,7 +100,7 @@ def test_zone_prune_wrapper_padding(nz, d, b):
     zlo, zhi = _boxes(rng, nz, d)
     blo, bhi = _boxes(rng, b, d)
     got = ops.zone_prune(jnp.asarray(zlo), jnp.asarray(zhi),
-                         jnp.asarray(blo), jnp.asarray(bhi))
+                         jnp.asarray(blo), jnp.asarray(bhi), interpret=True)
     want = ref.zone_prune_ref(jnp.asarray(zlo), jnp.asarray(zhi),
                               jnp.asarray(blo), jnp.asarray(bhi))
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
