@@ -19,10 +19,15 @@ Extra modes (DESIGN.md §6, §9):
   --capacity-sweep  query_index_fused latency/bytes across gather
                     capacities, showing how to size ``capacity``.
   --ranked          device-resident ranked path (max_results=k, O(k)
-                    host traffic) vs the legacy per-subset scatter +
-                    host-rank path, per-query latency + measured
-                    device->host bytes at n in {20k, 50k}; emits
-                    BENCH_query_time.json for the CI artifact.
+                    host traffic, batched device fit) vs the legacy
+                    sequential-fit scatter + host-rank path, per-query
+                    fit/query/wall latency + measured device->host bytes
+                    at n in {20k, 50k}; emits BENCH_query_time.json for
+                    the CI artifact (rows validated — missing keys fail).
+  --fit             the batched device-resident fit phase (DESIGN.md
+                    §10) vs the sequential numpy fits (legacy seed
+                    trainer AND today's vectorized oracle) at batch=8.
+  --check-json      re-validate BENCH_query_time.json (the CI gate).
 """
 from __future__ import annotations
 
@@ -115,7 +120,8 @@ def run_batched(batch: int = 8, n: int = 20_000, verbose: bool = True):
 
 
 def _scatter_batch(engine, reqs):
-    """The pre-ranking formulation, kept as the benchmark baseline: ONE
+    """The pre-ranking, pre-device-training formulation, kept as the
+    benchmark baseline: a sequential per-request numpy model fit, ONE
     fused device call per subset, then a [Q, n_rows] HOST scatter
     (query_index_fused_multi) and a host rank over all N rows per query.
     Returns (ranked results, measured device->host bytes, fit seconds,
@@ -128,7 +134,8 @@ def _scatter_batch(engine, reqs):
         pos = np.asarray(list(r["pos_ids"]), np.int64)
         neg = np.asarray(list(r["neg_ids"]), np.int64)
         bs = engine._fit_boxes("dbranch", engine.x[pos], engine.x[neg],
-                               max_depth=12, n_models=25, seed=0)
+                               max_depth=12, n_models=25, seed=0,
+                               use_jax=False)
         fitted.append((bs, pos, neg))
     t_fit = time.perf_counter() - t0
 
@@ -190,15 +197,18 @@ def run_ranked(batch: int = 8, sizes=(20_000, 50_000), k: int = 100,
 
         iters = 3
         scat_wall = rank_wall = scat_query = rank_query = float("inf")
+        scat_fit = rank_fit = float("inf")
         for _ in range(iters):
             t0 = time.perf_counter()
-            scat, scat_bytes, scat_fit, sq = _scatter_batch(engine, reqs)
+            scat, scat_bytes, sf, sq = _scatter_batch(engine, reqs)
             scat_wall = min(scat_wall, time.perf_counter() - t0)
             scat_query = min(scat_query, sq)
+            scat_fit = min(scat_fit, sf)
             t0 = time.perf_counter()
             ranked = engine.query_batch(reqs)
             rank_wall = min(rank_wall, time.perf_counter() - t0)
             rank_query = min(rank_query, ranked[0].query_time_s)
+            rank_fit = min(rank_fit, ranked[0].stats["batch_fit_s"])
 
         rank_bytes = ranked[0].stats["batch_host_bytes_transferred"]
         agree = int(all(np.array_equal(r.ids, ids[:k])
@@ -207,8 +217,11 @@ def run_ranked(batch: int = 8, sizes=(20_000, 50_000), k: int = 100,
             raise AssertionError(
                 f"ranked ids != scatter top-{k} at n={n} — device ranking "
                 "regressed against the host oracle")
-        # the model fit is identical on both paths; the query phase is
-        # where scatter-vs-ranked differ, so that's the headline speedup
+        # both the fit (batched device trainer vs the legacy sequential
+        # numpy fit) and the query phase (device rank vs host scatter)
+        # differ between the paths, so the row reports each phase AND the
+        # end-to-end wall ratio — the regression PR 2 could only see by
+        # hand is now a first-class column
         rows.append({
             "name": f"query_time/ranked/n{n}/b{batch}/k{k}",
             "us_per_call": round(1e6 * rank_query / batch, 1),
@@ -218,7 +231,9 @@ def run_ranked(batch: int = 8, sizes=(20_000, 50_000), k: int = 100,
             "wall_us_per_query": round(1e6 * rank_wall / batch, 1),
             "scatter_wall_us_per_query": round(1e6 * scat_wall / batch, 1),
             "speedup_wall": round(scat_wall / max(rank_wall, 1e-9), 2),
-            "fit_ms": round(1e3 * scat_fit, 1),
+            "fit_us_per_query": round(1e6 * rank_fit / batch, 1),
+            "scatter_fit_us_per_query": round(1e6 * scat_fit / batch, 1),
+            "speedup_fit": round(scat_fit / max(rank_fit, 1e-9), 2),
             "host_bytes_ranked_per_query": rank_bytes // batch,
             "host_bytes_scatter_per_query": scat_bytes // batch,
             "n": n,
@@ -228,6 +243,164 @@ def run_ranked(batch: int = 8, sizes=(20_000, 50_000), k: int = 100,
         })
     if verbose:
         emit(rows, "query_time_ranked")
+        emit_json(rows, out_json)
+        validate_bench_json(out_json)
+    return rows
+
+
+# keys every ranked row must carry — the CI quick-bench step fails loudly
+# when the JSON artifact is missing any of them (the wall-time regression
+# PR 2 exposed was only visible by manual inspection before)
+RANKED_REQUIRED_KEYS = (
+    "name", "us_per_call", "speedup_query_phase", "wall_us_per_query",
+    "speedup_wall", "fit_us_per_query", "speedup_fit",
+    "host_bytes_ranked_per_query", "host_bytes_scatter_per_query",
+    "ids_agree",
+)
+
+
+def validate_bench_json(path: str = "BENCH_query_time.json") -> None:
+    """Fail loudly (SystemExit) unless the bench artifact exists, is
+    non-empty, and every row carries RANKED_REQUIRED_KEYS."""
+    import json
+    import os
+    if not os.path.exists(path):
+        raise SystemExit(f"bench artifact {path} is missing — did the "
+                         "--ranked benchmark run?")
+    with open(path) as f:
+        rows = json.load(f)
+    if not rows:
+        raise SystemExit(f"bench artifact {path} has no rows")
+    for r in rows:
+        missing = [k for k in RANKED_REQUIRED_KEYS if k not in r]
+        if missing:
+            raise SystemExit(
+                f"bench artifact {path} row {r.get('name', '?')} is "
+                f"missing keys: {missing}")
+    print(f"{path}: {len(rows)} rows, all required keys present")
+
+
+def _legacy_best_split(x, y):
+    """The seed engine's split search (full Gini gain recomputed per
+    candidate threshold, O(n²·d)) — frozen here as the legacy baseline
+    the --fit benchmark measures against."""
+    def gini_gain(y_left, y_right):
+        def gini(yy):
+            if len(yy) == 0:
+                return 0.0
+            p = yy.mean()
+            return 2.0 * p * (1.0 - p)
+        m = len(y_left) + len(y_right)
+        both = np.concatenate([y_left, y_right])
+        return gini(both) - (len(y_left) / m * gini(y_left)
+                             + len(y_right) / m * gini(y_right))
+
+    best = (-1, 0.0, 0.0)
+    for d in range(x.shape[1]):
+        order = np.argsort(x[:, d], kind="stable")
+        xv, yv = x[order, d], y[order]
+        distinct = np.nonzero(np.diff(xv) > 0)[0]
+        for i in distinct:
+            t = 0.5 * (xv[i] + xv[i + 1])
+            gain = gini_gain(yv[: i + 1], yv[i + 1:])
+            if gain > best[2]:
+                best = (d, float(t), float(gain))
+    return best
+
+
+def run_fit(batch: int = 8, n: int = 20_000, verbose: bool = True,
+            out_json: str = "BENCH_fit_time.json"):
+    """Tentpole benchmark: the batched device-resident fit phase vs the
+    sequential numpy fits at batch=8 (DESIGN.md §10).
+
+    Two baselines, both fitting the batch one request at a time:
+      * legacy — the engine's pre-device-training fit exactly as it
+        shipped (recursive trainer with the O(n²·d) full-gain split
+        scan); the "sequential numpy path" the batched trainer replaces.
+      * oracle — today's vectorized numpy oracle (prefix-sum splits,
+        frange plumbed), i.e. use_jax_fit=False.
+    The jax figure is query_batch's measured batch_fit_s, so it includes
+    lane packing, host split tables, uploads and the winner sync."""
+    import repro.core.dbranch as db
+
+    engine, labels = make_engine(n)
+    classes = [CLASS_IDS["forest"], CLASS_IDS["water"]]
+    reqs = []
+    for i in range(batch):
+        pos, neg = query_sets(labels, classes[i % len(classes)], 15, 80,
+                              seed=100 + i)
+        reqs.append((pos, neg))
+
+    def best_of(fn, iters):
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    rows = []
+    totals = {"jax": 0.0, "oracle": 0.0, "legacy": 0.0}
+    for model, n_models in (("dbranch", 25), ("dbens", 15)):
+        rq = [{"pos_ids": p, "neg_ids": ng, "model": model,
+               "n_models": n_models} for p, ng in reqs]
+        engine.query_batch(rq)                     # warm (jit compile)
+        t_jax = min(engine.query_batch(rq)[0].stats["batch_fit_s"]
+                    for _ in range(4))
+
+        def fit_oracle():
+            for p, ng in reqs:
+                engine._fit_boxes(model, engine.x[p], engine.x[ng],
+                                  max_depth=12, n_models=n_models, seed=0,
+                                  use_jax=False)
+        t_oracle = best_of(fit_oracle, 2)
+
+        def fit_legacy():
+            orig = db._best_split
+            db._best_split = _legacy_best_split
+            try:
+                for p, ng in reqs:
+                    if model == "dbranch":
+                        db.fit_dbranch_best_subset(
+                            engine.x[p], engine.x[ng], engine.subsets,
+                            max_depth=12)
+                    else:
+                        db.fit_dbens(engine.x[p], engine.x[ng],
+                                     engine.subsets, n_models=n_models,
+                                     max_depth=12, seed=0)
+            finally:
+                db._best_split = orig
+        t_legacy = best_of(fit_legacy, 1 if model == "dbens" else 2)
+
+        totals["jax"] += t_jax
+        totals["oracle"] += t_oracle
+        totals["legacy"] += t_legacy
+        rows.append({
+            "name": f"query_time/fit/{model}/n{n}/b{batch}",
+            "us_per_call": round(1e6 * t_jax / batch, 1),
+            "fit_ms_batched_jax": round(1e3 * t_jax, 1),
+            "fit_ms_sequential_legacy": round(1e3 * t_legacy, 1),
+            "fit_ms_sequential_oracle": round(1e3 * t_oracle, 1),
+            "speedup_fit": round(t_legacy / max(t_jax, 1e-9), 2),
+            "speedup_fit_vs_vectorized_oracle": round(
+                t_oracle / max(t_jax, 1e-9), 2),
+            "batch": batch,
+            "n": n,
+        })
+    rows.append({
+        "name": f"query_time/fit/dbranch+dbens/n{n}/b{batch}",
+        "us_per_call": round(1e6 * totals["jax"] / batch, 1),
+        "fit_ms_batched_jax": round(1e3 * totals["jax"], 1),
+        "fit_ms_sequential_legacy": round(1e3 * totals["legacy"], 1),
+        "fit_ms_sequential_oracle": round(1e3 * totals["oracle"], 1),
+        "speedup_fit": round(totals["legacy"] / max(totals["jax"], 1e-9), 2),
+        "speedup_fit_vs_vectorized_oracle": round(
+            totals["oracle"] / max(totals["jax"], 1e-9), 2),
+        "batch": batch,
+        "n": n,
+    })
+    if verbose:
+        emit(rows, "fit_time")
         emit_json(rows, out_json)
     return rows
 
@@ -279,6 +452,10 @@ if __name__ == "__main__":
                     help="fused-gather capacity sweep")
     ap.add_argument("--ranked", action="store_true",
                     help="device-ranked vs legacy scatter path")
+    ap.add_argument("--fit", action="store_true",
+                    help="batched device fit vs sequential numpy fits")
+    ap.add_argument("--check-json", action="store_true",
+                    help="validate BENCH_query_time.json keys (CI gate)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--sizes", type=int, nargs="+", default=[20_000, 50_000])
@@ -290,5 +467,9 @@ if __name__ == "__main__":
         run_capacity_sweep(n=args.n)
     elif args.ranked:
         run_ranked(batch=args.batch, sizes=tuple(args.sizes), k=args.k)
+    elif args.fit:
+        run_fit(batch=args.batch, n=args.n)
+    elif args.check_json:
+        validate_bench_json()
     else:
         run()

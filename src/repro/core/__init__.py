@@ -1,8 +1,9 @@
 """RapidEarth core: decision branches + index co-design (paper primary
 contribution) and the search-engine orchestration around it."""
 from repro.core.boxes import BoxSet, boxes_contain, merge_boxsets
-from repro.core.dbranch import (fit_dbens, fit_dbranch, fit_dbranch_best_subset,
-                                fit_dbranch_jax, predict_boxes_jax)
+from repro.core.dbranch import (dbens_draws, fit_dbens, fit_dbranch,
+                                fit_dbranch_best_subset, fit_dbranch_jax,
+                                fit_select_jax, predict_boxes_jax)
 from repro.core.engine import MODELS, QueryResult, SearchEngine
 from repro.core.index import (ZoneMapIndex, build_index, distributed_query,
                               full_scan, query_index)
@@ -14,8 +15,9 @@ from repro.core.trees import (DecisionTree, RandomForest, fit_decision_tree,
 __all__ = [
     "BoxSet", "DecisionTree", "KDTree", "MODELS", "QueryResult", "RandomForest",
     "SearchEngine", "ZoneMapIndex", "boxes_contain", "build_index",
-    "build_kdtree", "distributed_query", "fit_dbens", "fit_dbranch",
-    "fit_dbranch_best_subset", "fit_dbranch_jax", "fit_decision_tree",
-    "fit_random_forest", "full_scan", "make_subsets", "merge_boxsets",
-    "predict_boxes_jax", "query_index", "range_query",
+    "build_kdtree", "dbens_draws", "distributed_query", "fit_dbens",
+    "fit_dbranch", "fit_dbranch_best_subset", "fit_dbranch_jax",
+    "fit_decision_tree", "fit_random_forest", "fit_select_jax", "full_scan",
+    "make_subsets", "merge_boxsets", "predict_boxes_jax", "query_index",
+    "range_query",
 ]

@@ -5,6 +5,11 @@ A box is a conjunction of half-open interval predicates
 (-inf, +inf)). DBranch models, decision-tree positive leaves and range
 queries are all expressed as (lo, hi) arrays, so one scan/index path
 serves every model (DESIGN.md §2).
+
+BoxSet coordinates may be numpy OR jax arrays: the batched device
+trainer (DESIGN.md §10) hands out device-resident boxes that flow
+straight into the fused query path without a host round trip, while the
+host helpers (contains/to_full) transparently materialise them.
 """
 from __future__ import annotations
 
@@ -12,6 +17,18 @@ from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
+
+import jax
+
+
+def concat_box_arrays(arrs: Sequence) -> np.ndarray:
+    """Concatenate box coordinate arrays, staying ON DEVICE whenever any
+    input is a jax array (device-resident boxes must not bounce through
+    the host just to be merged)."""
+    if any(isinstance(a, jax.Array) for a in arrs):
+        import jax.numpy as jnp
+        return jnp.concatenate([jnp.asarray(a) for a in arrs])
+    return np.concatenate(arrs)
 
 
 @dataclass
@@ -30,20 +47,21 @@ class BoxSet:
         """Expand to full-width (lo, hi) with open bounds elsewhere."""
         lo = np.full((self.n_boxes, n_features), -np.inf, np.float32)
         hi = np.full((self.n_boxes, n_features), np.inf, np.float32)
-        lo[:, self.dims] = self.lo
-        hi[:, self.dims] = self.hi
+        lo[:, self.dims] = np.asarray(self.lo)
+        hi[:, self.dims] = np.asarray(self.hi)
         return lo, hi
 
     def contains(self, x: np.ndarray) -> np.ndarray:
         """x: [N, D_full] -> [N] membership counts."""
-        xs = x[:, self.dims]                                  # [N, d']
-        inside = (xs[:, None, :] > self.lo[None]) & (xs[:, None, :] <= self.hi[None])
+        xs = np.asarray(x)[:, self.dims]                      # [N, d']
+        lo, hi = np.asarray(self.lo), np.asarray(self.hi)
+        inside = (xs[:, None, :] > lo[None]) & (xs[:, None, :] <= hi[None])
         return inside.all(-1).sum(-1)
 
     def concatenate(self, other: "BoxSet") -> "BoxSet":
         assert np.array_equal(self.dims, other.dims)
-        return BoxSet(np.concatenate([self.lo, other.lo]),
-                      np.concatenate([self.hi, other.hi]),
+        return BoxSet(concat_box_arrays([self.lo, other.lo]),
+                      concat_box_arrays([self.hi, other.hi]),
                       self.dims, self.subset_id)
 
 

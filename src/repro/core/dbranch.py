@@ -6,10 +6,18 @@ orthogonal splits being one box. Index-awareness restricts every box to
 the dims of ONE pre-built feature subset, so inference is a handful of
 range queries against that subset's index (paper §2 / VLDB'23 [8]).
 
-Two trainers, same algorithm:
-  * fit_dbranch      — numpy, recursive (reference; arbitrary sizes)
-  * fit_dbranch_jax  — fixed-shape JAX (jit + vmap for the 25-model
-    ensemble; trains on-device inside the serving path)
+Two trainers, same algorithm (DESIGN.md §10):
+  * fit_dbranch      — numpy, recursive (the correctness ORACLE;
+    arbitrary sizes, used by property tests and `use_jax_fit=False`)
+  * fit_dbranch_jax  — fixed-shape JAX worklist trainer. fit_select_jax
+    vmaps it across (candidate subsets x ensemble members x concurrent
+    requests) and picks each model's winning subset ON DEVICE, so a
+    whole batch window trains as ONE jit'd program.
+
+Both trainers share the exact float32 split/expansion arithmetic
+(midpoint thresholds, prefix-sum Gini scores, halfway-face expansion),
+so their boxes match bitwise and the numpy trainer stays a usable oracle
+for the device path.
 
 Box expansion: positive-leaf boxes are tightened to the positive bounding
 box, then each face is pushed halfway toward the nearest excluded
@@ -19,7 +27,6 @@ recall-friendly behaviour the engine needs to *discover* new objects.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -28,61 +35,94 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.boxes import BoxSet
+from repro.kernels import ops as kops
+
+# DBEns draws this many candidate subsets per ensemble member
+DBENS_SUBSET_CANDIDATES = 5
 
 # ======================================================================
 # numpy reference trainer
 # ======================================================================
 
 
-def _gini_gain(y_left: np.ndarray, y_right: np.ndarray) -> float:
-    def gini(y):
-        if len(y) == 0:
-            return 0.0
-        p = y.mean()
-        return 2.0 * p * (1.0 - p)
-    n = len(y_left) + len(y_right)
-    return gini(np.concatenate([y_left, y_right])) - (
-        len(y_left) / n * gini(y_left) + len(y_right) / n * gini(y_right))
-
-
 def _best_split(x: np.ndarray, y: np.ndarray) -> Tuple[int, float, float]:
-    """x: [n, d'] node samples; y: [n] 0/1. Returns (dim, thresh, gain)."""
-    best = (-1, 0.0, 0.0)
-    for d in range(x.shape[1]):
-        order = np.argsort(x[:, d], kind="stable")
-        xv, yv = x[order, d], y[order]
-        distinct = np.nonzero(np.diff(xv) > 0)[0]
-        for i in distinct:
-            t = 0.5 * (xv[i] + xv[i + 1])
-            gain = _gini_gain(yv[: i + 1], yv[i + 1:])
-            if gain > best[2]:
-                best = (d, float(t), float(gain))
-    return best
+    """x: [n, d'] node samples; y: [n] 0/1. Returns (dim, thresh, gain).
+
+    Prefix-sum Gini: per dim, one stable sort + cumulative label counts
+    give every candidate threshold's split stats at once — O(n log n · d)
+    instead of recomputing the full gain per threshold (O(n² · d)).
+    Thresholds are midpoints 0.5 * (xv[i] + xv[i+1]) between consecutive
+    distinct values. The maximised score is h = pl²/nl + pr²/nr — an
+    affine transform of the negated weighted child Gini, so the argmax is
+    the classic CART split — and ``gain = h - p²/n`` is positive iff the
+    split improves on the parent. All comparisons run on float32 values
+    built from two exact integer-valued multiplies, two divisions and one
+    add (no fusable mul+add, so XLA cannot FMA-contract them), which lets
+    the JAX trainer reproduce the scores bitwise and parity tests compare
+    boxes, not just predictions. Tie-break: highest h, then lowest dim,
+    then lowest threshold — the order a strict-improvement scan visits.
+    """
+    n, nd = x.shape
+    if n < 2:
+        return -1, 0.0, 0.0
+    yf = np.asarray(y, np.float32)
+    n_tot = np.float32(n)
+    p_tot = np.float32(yf.sum(dtype=np.float32))
+    parent = p_tot * p_tot / n_tot
+    half = np.float32(0.5)
+    nl = np.arange(1, n, dtype=np.float32)
+    nr = n_tot - nl
+    best_dim, best_t, best_h = -1, np.float32(0.0), -np.inf
+    for dd in range(nd):
+        order = np.argsort(x[:, dd], kind="stable")
+        xv = x[order, dd]
+        pl = np.cumsum(yf[order], dtype=np.float32)[:-1]
+        pr = p_tot - pl
+        h = pl * pl / nl + pr * pr / nr
+        h = np.where(xv[1:] > xv[:-1], h, -np.inf)
+        i = int(np.argmax(h))
+        if h[i] > best_h:
+            best_dim, best_t, best_h = dd, half * (xv[i] + xv[i + 1]), h[i]
+    if best_dim < 0 or not np.isfinite(best_h):
+        return -1, 0.0, 0.0
+    return best_dim, float(best_t), float(best_h - parent)
 
 
 def _expand_box(plo, phi, neg, rlo, rhi, frange):
     """Push each face halfway toward the nearest excluded negative.
 
     plo/phi: positive bbox [d']; neg: [m, d'] node negatives; rlo/rhi:
-    node region; frange: (lo, hi) global feature range [d'] each."""
+    node region; frange: (lo, hi) feature range on the subset dims, [d']
+    each. Faces expand sequentially — face j sees bounds already expanded
+    for faces < j — and all arithmetic is float32 so the JAX trainer's
+    expansion is bitwise-identical."""
     d = plo.shape[0]
-    lo, hi = plo.copy(), phi.copy()
+    lo = np.asarray(plo, np.float32).copy()
+    hi = np.asarray(phi, np.float32).copy()
+    neg = np.asarray(neg, np.float32).reshape(-1, d)
+    rlo = np.asarray(rlo, np.float32)
+    rhi = np.asarray(rhi, np.float32)
+    flo = np.asarray(frange[0], np.float32)
+    fhi = np.asarray(frange[1], np.float32)
+    half = np.float32(0.5)
+    dims = np.arange(d)
     for j in range(d):
         # negatives that the box (on other dims) would contain
         if len(neg):
-            others = np.ones(len(neg), bool)
-            for oj in range(d):
-                if oj == j:
-                    continue
-                others &= (neg[:, oj] > lo[oj]) & (neg[:, oj] <= hi[oj])
+            inside = (neg > lo[None]) & (neg <= hi[None])
+            others = np.where(dims[None] != j, inside, True).all(1)
             below = neg[others & (neg[:, j] <= plo[j]), j]
             above = neg[others & (neg[:, j] > phi[j]), j]
         else:
-            below = above = np.empty((0,))
-        lo_lim = max(below.max() if len(below) else -np.inf, rlo[j], frange[0][j])
-        hi_lim = min(above.min() if len(above) else np.inf, rhi[j], frange[1][j])
-        lo[j] = 0.5 * (plo[j] + lo_lim) if np.isfinite(lo_lim) else plo[j]
-        hi[j] = 0.5 * (phi[j] + hi_lim) if np.isfinite(hi_lim) else phi[j]
+            below = above = np.empty((0,), np.float32)
+        b = below.max() if len(below) else np.float32(-np.inf)
+        a = above.min() if len(above) else np.float32(np.inf)
+        lo_lim = np.maximum(np.maximum(b, rlo[j]), flo[j])
+        hi_lim = np.minimum(np.minimum(a, rhi[j]), fhi[j])
+        if np.isfinite(lo_lim):
+            lo[j] = half * (plo[j] + lo_lim)
+        if np.isfinite(hi_lim):
+            hi[j] = half * (phi[j] + hi_lim)
     return lo, hi
 
 
@@ -96,13 +136,21 @@ def fit_dbranch(
     feature_range: Optional[Tuple[np.ndarray, np.ndarray]] = None,
     subset_id: int = -1,
 ) -> BoxSet:
-    """Grow decision branches on the subset ``dims``; return the box union."""
+    """Grow decision branches on the subset ``dims``; return the box union.
+
+    ``feature_range`` is the FULL-width (lo [D], hi [D]) per-dim range of
+    the catalog (e.g. SearchEngine.frange); it is sliced to ``dims`` here.
+    When None the range is recomputed from the (tiny) training sample,
+    which under-expands boxes — the engine always plumbs its own."""
     xp = np.asarray(x_pos, np.float32)[:, dims]
     xn = np.asarray(x_neg, np.float32)[:, dims]
     d = len(dims)
     if feature_range is None:
         allx = np.concatenate([xp, xn]) if len(xn) else xp
-        feature_range = (allx.min(0), allx.max(0))
+        frange = (allx.min(0), allx.max(0))
+    else:
+        frange = (np.asarray(feature_range[0], np.float32)[dims],
+                  np.asarray(feature_range[1], np.float32)[dims])
     boxes_lo: List[np.ndarray] = []
     boxes_hi: List[np.ndarray] = []
 
@@ -111,7 +159,7 @@ def fit_dbranch(
         # half-open boxes: nudge lo below the smallest positive
         plo = plo - 1e-6 * (np.abs(plo) + 1.0)
         if expand:
-            lo, hi = _expand_box(plo, phi, n, rlo, rhi, feature_range)
+            lo, hi = _expand_box(plo, phi, n, rlo, rhi, frange)
         else:
             lo, hi = plo, phi
         boxes_lo.append(lo)
@@ -147,7 +195,8 @@ def fit_dbranch(
         grow(p[lmask_p], n[lmask_n], llo, lhi, depth + 1)
         grow(p[~lmask_p], n[~lmask_n], rlo2, rhi2, depth + 1)
 
-    grow(xp, xn, np.full(d, -np.inf), np.full(d, np.inf), 0)
+    grow(xp, xn, np.full(d, -np.inf, np.float32),
+         np.full(d, np.inf, np.float32), 0)
     if not boxes_lo:
         return BoxSet(np.zeros((0, d), np.float32), np.zeros((0, d), np.float32),
                       np.asarray(dims), subset_id)
@@ -164,18 +213,20 @@ def fit_dbranch_best_subset(
     max_depth: int = 12,
     expand: bool = True,
     candidates: Optional[Sequence[int]] = None,
+    feature_range: Optional[Tuple[np.ndarray, np.ndarray]] = None,
 ) -> BoxSet:
     """Index-awareness: try candidate subsets, keep the best model.
 
-    Score: fewest boxes (simplest consistent hypothesis), tie-broken by
-    total box volume margin (larger expansion headroom generalises).
-    """
+    Score: fewest training positives missed (false negatives), tie-broken
+    by fewest boxes (simplest consistent hypothesis); earlier candidate
+    wins remaining ties."""
     cand = list(candidates) if candidates is not None else range(len(subsets))
     best: Optional[BoxSet] = None
     best_score = None
     for k in cand:
         bs = fit_dbranch(x_pos, x_neg, subsets[k], max_depth=max_depth,
-                         expand=expand, subset_id=k)
+                         expand=expand, subset_id=k,
+                         feature_range=feature_range)
         if bs.n_boxes == 0:
             continue
         tr_counts = bs.contains(np.asarray(x_pos, np.float32))
@@ -187,145 +238,204 @@ def fit_dbranch_best_subset(
     return best
 
 
+def dbens_draws(n_pos: int, n_neg: int, n_subsets: int, n_models: int,
+                subset_candidates: int, seed: int):
+    """Bootstrap + candidate-subset draws for DBEns.
+
+    Shared by the numpy trainer and the engine's batched JAX fit so both
+    paths train literally the same ensemble from the same seed. Returns
+    [(ip [n_pos], ineg [n_neg], cand [subset_candidates])] per member."""
+    rng = np.random.default_rng(seed)
+    draws = []
+    for _ in range(n_models):
+        ip = rng.integers(0, n_pos, n_pos)
+        ineg = (rng.integers(0, n_neg, n_neg) if n_neg
+                else np.zeros(0, np.int64))
+        cand = rng.choice(n_subsets, size=min(subset_candidates, n_subsets),
+                          replace=False)
+        draws.append((ip, ineg, cand))
+    return draws
+
+
 def fit_dbens(
     x_pos: np.ndarray,
     x_neg: np.ndarray,
     subsets: np.ndarray,
     *,
     n_models: int = 25,
-    subset_candidates: int = 5,
+    subset_candidates: int = DBENS_SUBSET_CANDIDATES,
     max_depth: int = 12,
     expand: bool = True,
     seed: int = 0,
+    feature_range: Optional[Tuple[np.ndarray, np.ndarray]] = None,
 ) -> List[BoxSet]:
     """DBEns: bootstrapped positives/negatives + random subset candidates."""
-    rng = np.random.default_rng(seed)
     models = []
-    for m in range(n_models):
-        ip = rng.integers(0, len(x_pos), len(x_pos))
-        ineg = rng.integers(0, len(x_neg), len(x_neg)) if len(x_neg) else []
-        cand = rng.choice(len(subsets), size=min(subset_candidates, len(subsets)),
-                          replace=False)
+    for ip, ineg, cand in dbens_draws(len(x_pos), len(x_neg), len(subsets),
+                                      n_models, subset_candidates, seed):
         models.append(fit_dbranch_best_subset(
             x_pos[ip], x_neg[ineg] if len(x_neg) else x_neg, subsets,
-            max_depth=max_depth, expand=expand, candidates=cand))
+            max_depth=max_depth, expand=expand, candidates=cand,
+            feature_range=feature_range))
     return models
 
 
 # ======================================================================
-# JAX trainer (fixed shapes; jit + vmap over ensemble members)
+# ======================================================================
+# JAX trainer (fixed shapes; one jit trains a whole batch window)
 # ======================================================================
 
-@functools.partial(jax.jit, static_argnames=("max_nodes", "max_depth", "expand"))
-def fit_dbranch_jax(
-    xp: jax.Array,                 # [P, d'] positives (on subset dims)
-    xn: jax.Array,                 # [Ng, d'] negatives
-    frange_lo: jax.Array,          # [d'] global feature min
-    frange_hi: jax.Array,          # [d'] global feature max
-    *,
-    max_nodes: int = 64,
-    max_depth: int = 12,
-    expand: bool = True,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Returns (lo [max_nodes, d'], hi, valid [max_nodes] bool).
 
-    Same growth rule as fit_dbranch, expressed as a bounded worklist:
-    node state = (pos mask, neg mask, region lo/hi, depth). Each
-    iteration pops one node, either emits a box or splits it.
-    """
-    p_cnt, d = xp.shape
-    n_cnt = xn.shape[0]
+def split_tables(x_all: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side split-search tables for fit_dbranch_jax.
+
+    x_all: [..., n, d'] = concat(positives, negatives) on the subset
+    dims, optionally with leading batch axes (the batched trainer passes
+    the whole [T, n, d'] lane stack at once). Returns (sort_idx — per-dim
+    stable argsort along the sample axis — and run_end — for each sorted
+    position, the last position of its equal-value run), both int32 of
+    x_all's shape. Computed with numpy because XLA CPU sorts are scalar
+    code ~10x slower than numpy's; the batched trainer ships these in as
+    inputs so the device program never sorts."""
+    x_all = np.asarray(x_all, np.float32)
+    n = x_all.shape[-2]
+    # unstable introsort on purpose (~4x faster than stable here): only
+    # prefix aggregates AT RUN BOUNDARIES are ever read from the sorted
+    # order, and those are invariant to how equal values are arranged
+    sort_idx = np.argsort(x_all, axis=-2).astype(np.int32)
+    xs = np.take_along_axis(x_all, sort_idx, -2)
+    # run_end[i] = min{ j >= i : boundary[j] } via a reversed cumulative
+    # min over boundary positions (one C-speed accumulate, no python loop)
+    pos = np.arange(n, dtype=np.int32).reshape(
+        (1,) * (x_all.ndim - 2) + (n, 1))
+    boundary_pos = np.where(
+        np.concatenate([xs[..., 1:, :] > xs[..., :-1, :],
+                        np.ones(xs[..., :1, :].shape, bool)], axis=-2),
+        pos, np.int32(n - 1))
+    run_end = np.flip(np.minimum.accumulate(
+        np.flip(boundary_pos, axis=-2), axis=-2), axis=-2)
+    return sort_idx, run_end
+
+
+def _grow_state(p_mask: jax.Array, n_mask: jax.Array, max_nodes: int,
+                d: int):
+    """Initial worklist state; leading batch axes follow the masks'.
+
+    The state tuple is everything tree growth needs to pause and resume:
+    (node_of_pos, node_of_neg, wl_rlo, wl_rhi, wl_depth, wl_live,
+     out_lo, out_hi, out_valid, n_alloc). fit_select_jax runs growth in
+    ROUNDS over it: a short capped round finishes the ~90% of lanes whose
+    tree is a single emitted root, then only the surviving lanes — host-
+    compacted to a small bucket — pay for the deep-tree tail."""
+    batch = p_mask.shape[:-1]
+    NEG_BIG = jnp.float32(-3e38)
+    POS_BIG = jnp.float32(3e38)
+    return (
+        jnp.where(p_mask, 0, -1).astype(jnp.int32),
+        jnp.where(n_mask, 0, -1).astype(jnp.int32),
+        jnp.full(batch + (max_nodes, d), NEG_BIG),
+        jnp.full(batch + (max_nodes, d), POS_BIG),
+        jnp.zeros(batch + (max_nodes,), jnp.int32),
+        jnp.zeros(batch + (max_nodes,), bool).at[..., 0].set(True),
+        jnp.zeros(batch + (max_nodes, d), jnp.float32),
+        jnp.zeros(batch + (max_nodes, d), jnp.float32),
+        jnp.zeros(batch + (max_nodes,), bool),
+        jnp.ones(batch, jnp.int32),
+    )
+
+def _grow_lane(x_all, m_all, tables, state, *,
+               p_cnt, max_nodes, max_depth, max_iters):
+    """Resumable worklist tree-grower for ONE lane (vmapped by callers).
+
+    x_all: [n, d'] = positives rows [:p_cnt] ++ negative rows [p_cnt:];
+    m_all: [n] row-validity mask; tables: [n, 2d'] int32 packed
+    (sort_idx | run_end) from split_tables, or None to derive in-graph.
+    Pops the lowest live node each iteration and either emits its
+    UNEXPANDED box (nudged positive bbox) or splits it, for at most
+    ``max_iters`` iterations — growth pauses with a consistent state, so
+    callers can finish stragglers in a later, smaller round. Node
+    membership is a per-sample assignment (node_of_pos/node_of_neg)
+    rather than per-node masks, so the state stays tiny and every sample
+    update is elementwise — no scatters on the hot path.
+
+    Box EXPANSION is deliberately NOT done here: every training positive
+    ends in an emitted leaf (emission requires positives; children with
+    positives stay live), so subset selection is decided by unexpanded
+    boxes and only the winners need the expensive face expansion
+    (DESIGN.md §10)."""
+    n, d = x_all.shape
+    xp, xn = x_all[:p_cnt], x_all[p_cnt:]
     NEG_BIG = jnp.float32(-3e38)
     POS_BIG = jnp.float32(3e38)
 
-    # worklist arrays
-    wl_pmask = jnp.zeros((max_nodes, p_cnt), bool).at[0].set(True)
-    wl_nmask = jnp.zeros((max_nodes, n_cnt), bool).at[0].set(True)
-    wl_rlo = jnp.full((max_nodes, d), NEG_BIG).at[0].set(jnp.full(d, NEG_BIG))
-    wl_rhi = jnp.full((max_nodes, d), POS_BIG)
-    wl_depth = jnp.zeros((max_nodes,), jnp.int32)
-    wl_live = jnp.zeros((max_nodes,), bool).at[0].set(True)
+    if tables is None:
+        sort_idx = jnp.argsort(x_all, axis=0).astype(jnp.int32)
+        x_sorted = jnp.take_along_axis(x_all, sort_idx, 0)
+        boundary = jnp.concatenate(
+            [x_sorted[1:] > x_sorted[:-1], jnp.ones((1, d), bool)], 0)
+        pos = jnp.arange(n, dtype=jnp.int32)[:, None]
+        run_end = jax.lax.cummin(
+            jnp.where(boundary, pos, n - 1), axis=0, reverse=True)
+    else:
+        sort_idx, run_end = tables[:, :d], tables[:, d:]
+        x_sorted = jnp.take_along_axis(x_all, sort_idx, 0)
+    y_all = (jnp.arange(n) < p_cnt).astype(jnp.float32)
+    y_sorted = y_all[sort_idx]
+    dim_ids = jnp.broadcast_to(jnp.arange(d, dtype=jnp.int32)[None, :],
+                               x_all.shape)
+    row_ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
+                               x_all.shape)
 
-    out_lo = jnp.zeros((max_nodes, d), jnp.float32)
-    out_hi = jnp.zeros((max_nodes, d), jnp.float32)
-    out_valid = jnp.zeros((max_nodes,), bool)
+    def gini_best_split(m_node, p_tot):
+        """Midpoint CART split via masked prefix sums. Bitwise-matches
+        _best_split: maximise h = pl²/nl + pr²/nr in f32; tie-break
+        lowest dim, then lowest threshold; split only if h beats the
+        parent's p²/n."""
+        m_sorted = m_node[sort_idx]                           # [n, d]
+        mf = m_sorted.astype(jnp.float32)
+        # one packed cumsum gives both masked counts and label counts
+        cs = jnp.cumsum(jnp.concatenate([mf, mf * y_sorted], 1), axis=0)
+        nl, pl = cs[:, :d], cs[:, d:]
+        n_tot = jnp.sum(m_node.astype(jnp.float32))
+        # a candidate = last masked position of its equal-value run
+        # (run_end gather replaces a suffix scan) with a masked element
+        # strictly after it
+        ok = (m_sorted & (nl == jnp.take_along_axis(nl, run_end, 0))
+              & (nl < n_tot))
+        nr = n_tot - nl
+        pr = p_tot - pl
+        h = pl * pl / jnp.maximum(nl, 1.0) + pr * pr / jnp.maximum(nr, 1.0)
+        h = jnp.where(ok, h, NEG_BIG)
+        hmax = jnp.max(h)
+        elig = ok & (h == hmax)
+        dim = jnp.min(jnp.where(elig, dim_ids, d)).astype(jnp.int32)
+        dim_c = jnp.minimum(dim, d - 1)
+        # winner position: thresholds ascend within a dim, so min position
+        # == min threshold; the midpoint needs just the winner's column
+        ipos = jnp.min(jnp.where(elig & (dim_ids == dim), row_ids, n - 1))
+        xcol = x_sorted[:, dim_c]
+        mcol = m_sorted[:, dim_c]
+        xi = xcol[ipos]
+        nxt = jnp.min(jnp.where(mcol & (xcol > xi), xcol, POS_BIG))
+        t = 0.5 * (xi + nxt)
+        parent = p_tot * p_tot / jnp.maximum(n_tot, 1.0)
+        improves = ok.any() & (hmax > parent)
+        return dim_c, t, improves
 
-    def masked_min(x, m, axis=0):
-        return jnp.min(jnp.where(m, x, POS_BIG), axis=axis)
-
-    def masked_max(x, m, axis=0):
-        return jnp.max(jnp.where(m, x, NEG_BIG), axis=axis)
-
-    def gini_best_split(pmask, nmask):
-        """Vectorised CART split over all dims x all sample thresholds."""
-        x_all = jnp.concatenate([xp, xn], 0)                  # [P+Ng, d]
-        y_all = jnp.concatenate([jnp.ones(p_cnt), jnp.zeros(n_cnt)])
-        m_all = jnp.concatenate([pmask, nmask])
-        # thresholds: every sample value (x <= t split); [P+Ng, d]
-        t_cand = jnp.where(m_all[:, None], x_all, POS_BIG)
-        # counts left of each threshold per dim
-        def gain_for(t):                                       # t: [d]
-            left = x_all <= t[None, :]                         # [n, d]
-            m = m_all[:, None]
-            nl = (left & m).sum(0)
-            nr = (~left & m).sum(0)
-            pl = ((left & m) * y_all[:, None]).sum(0)
-            pr = ((~left & m) * y_all[:, None]).sum(0)
-            def gini(p, n):
-                tot = jnp.maximum(n, 1)
-                q = p / tot
-                return 2 * q * (1 - q)
-            n_tot = jnp.maximum(nl + nr, 1)
-            parent = gini(pl + pr, nl + nr)
-            child = nl / n_tot * gini(pl, nl) + nr / n_tot * gini(pr, nr)
-            valid = (nl > 0) & (nr > 0)
-            return jnp.where(valid, parent - child, -1.0)      # [d]
-        gains = jax.vmap(gain_for)(t_cand)                     # [P+Ng, d]
-        gains = jnp.where(m_all[:, None], gains, -1.0)
-        flat = jnp.argmax(gains)
-        i, dim = flat // d, flat % d
-        return dim, x_all[i, dim], gains[i, dim]
-
-    def emit_box(pmask, nmask, rlo, rhi):
-        plo = masked_min(xp, pmask[:, None])
-        phi = masked_max(xp, pmask[:, None])
-        plo = plo - 1e-6 * (jnp.abs(plo) + 1.0)
-        if not expand:
-            return plo, phi
-
-        # sequential per-face expansion (corner-safe, mirrors numpy):
-        # face j sees bounds already expanded for faces < j
-        def face(j, lohi):
-            lo, hi = lohi
-            for_dim = jnp.arange(d) != j
-            inside_others = jnp.all(
-                jnp.where(for_dim[None, :],
-                          (xn > lo[None]) & (xn <= hi[None]), True), axis=1)
-            cand = nmask & inside_others
-            below = jnp.where(cand & (xn[:, j] <= plo[j]), xn[:, j], NEG_BIG).max()
-            above = jnp.where(cand & (xn[:, j] > phi[j]), xn[:, j], POS_BIG).min()
-            lo_lim = jnp.maximum(jnp.maximum(below, rlo[j]), frange_lo[j])
-            hi_lim = jnp.minimum(jnp.minimum(above, rhi[j]), frange_hi[j])
-            newlo = jnp.where(lo_lim > NEG_BIG / 2, 0.5 * (plo[j] + lo_lim), plo[j])
-            newhi = jnp.where(hi_lim < POS_BIG / 2, 0.5 * (phi[j] + hi_lim), phi[j])
-            return lo.at[j].set(newlo), hi.at[j].set(newhi)
-
-        lo, hi = jax.lax.fori_loop(0, d, face, (plo, phi))
-        return lo, hi
-
-    def body(state):
-        (wl_pmask, wl_nmask, wl_rlo, wl_rhi, wl_depth, wl_live,
+    def body(carry):
+        it, state = carry
+        (node_of_pos, node_of_neg, wl_rlo, wl_rhi, wl_depth, wl_live,
          out_lo, out_hi, out_valid, n_alloc) = state
         node = jnp.argmax(wl_live)                             # pop first live
-        pmask = wl_pmask[node]
-        nmask_all = wl_nmask[node]
+        pmask = node_of_pos == node
+        nmask_all = node_of_neg == node
         rlo, rhi = wl_rlo[node], wl_rhi[node]
         depth = wl_depth[node]
         wl_live = wl_live.at[node].set(False)
 
-        # negatives inside the positive bbox only
-        plo = masked_min(xp, pmask[:, None])
-        phi = masked_max(xp, pmask[:, None])
+        # positive bbox + negatives inside it only
+        plo = jnp.min(jnp.where(pmask[:, None], xp, POS_BIG), axis=0)
+        phi = jnp.max(jnp.where(pmask[:, None], xp, NEG_BIG), axis=0)
         n_in = nmask_all & jnp.all(
             (xn > plo[None] - 1e-6) & (xn <= phi[None]), axis=1)
         has_pos = pmask.any()
@@ -333,21 +443,29 @@ def fit_dbranch_jax(
         full = n_alloc + 2 > max_nodes
         do_emit = has_pos & (pure | (depth >= max_depth) | full)
 
-        dim, t, gain = gini_best_split(pmask, n_in)
-        can_split = has_pos & ~do_emit & (gain > 0)
+        p_tot = jnp.sum(pmask.astype(jnp.float32))
+        dim, t, improves = gini_best_split(
+            jnp.concatenate([pmask, n_in]), p_tot)
+        can_split = has_pos & ~do_emit & improves
         do_emit = has_pos & ~can_split
 
-        lo_e, hi_e = emit_box(pmask, nmask_all, rlo, rhi)
+        # emit the UNEXPANDED box: nudged positive bbox (half-open lo)
+        lo_e = plo - 1e-6 * (jnp.abs(plo) + 1.0)
         out_lo = jnp.where(do_emit, out_lo.at[node].set(lo_e), out_lo)
-        out_hi = jnp.where(do_emit, out_hi.at[node].set(hi_e), out_hi)
+        out_hi = jnp.where(do_emit, out_hi.at[node].set(phi), out_hi)
         out_valid = out_valid.at[node].set(do_emit | out_valid[node])
 
-        # split into children at slots (n_alloc, n_alloc+1)
+        # split into children at slots (n_alloc, n_alloc+1): reassign the
+        # node's samples elementwise (children keep ALL region negatives —
+        # a negative dropped here could otherwise be swallowed by a
+        # descendant's expanded box)
         la, ra = n_alloc, n_alloc + 1
-        lmask_p = pmask & (xp[:, dim] <= t)
-        rmask_p = pmask & ~(xp[:, dim] <= t)
-        lmask_n = nmask_all & (xn[:, dim] <= t)     # keep all region negatives
-        rmask_n = nmask_all & ~(xn[:, dim] <= t)
+        goes_left_p = xp[:, dim] <= t
+        node_of_pos = jnp.where(can_split & pmask,
+                                jnp.where(goes_left_p, la, ra), node_of_pos)
+        node_of_neg = jnp.where(can_split & nmask_all,
+                                jnp.where(xn[:, dim] <= t, la, ra),
+                                node_of_neg)
         lrhi = rhi.at[dim].min(t)
         rrlo = rlo.at[dim].max(t)
 
@@ -355,26 +473,253 @@ def fit_dbranch_jax(
             return [a.at[idx].set(jnp.where(can_split, v, a[idx]))
                     for a, v in zip(arrs, vals)]
 
-        wl_pmask, wl_nmask, wl_rlo, wl_rhi = put(
-            [wl_pmask, wl_nmask, wl_rlo, wl_rhi], la,
-            [lmask_p, lmask_n, rlo, lrhi])
-        wl_pmask, wl_nmask, wl_rlo, wl_rhi = put(
-            [wl_pmask, wl_nmask, wl_rlo, wl_rhi], ra,
-            [rmask_p, rmask_n, rrlo, rhi])
+        wl_rlo, wl_rhi = put([wl_rlo, wl_rhi], la, [rlo, lrhi])
+        wl_rlo, wl_rhi = put([wl_rlo, wl_rhi], ra, [rrlo, rhi])
         wl_depth = wl_depth.at[la].set(depth + 1).at[ra].set(depth + 1)
-        wl_live = wl_live.at[la].set(can_split & lmask_p.any())
-        wl_live = wl_live.at[ra].set(can_split & rmask_p.any())
+        wl_live = wl_live.at[la].set(can_split & (pmask & goes_left_p).any())
+        wl_live = wl_live.at[ra].set(can_split & (pmask & ~goes_left_p).any())
         n_alloc = jnp.where(can_split, n_alloc + 2, n_alloc)
-        return (wl_pmask, wl_nmask, wl_rlo, wl_rhi, wl_depth, wl_live,
-                out_lo, out_hi, out_valid, n_alloc)
+        return it + 1, (node_of_pos, node_of_neg, wl_rlo, wl_rhi, wl_depth,
+                        wl_live, out_lo, out_hi, out_valid, n_alloc)
 
-    def cond(state):
-        return state[5].any()
+    def cond(carry):
+        it, state = carry
+        return state[5].any() & (it < max_iters)
 
-    state = (wl_pmask, wl_nmask, wl_rlo, wl_rhi, wl_depth, wl_live,
-             out_lo, out_hi, out_valid, jnp.int32(1))
-    state = jax.lax.while_loop(cond, body, state)
-    return state[6], state[7], state[8]
+    _, state = jax.lax.while_loop(cond, body, (jnp.int32(0), state))
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("p_cnt", "max_nodes",
+                                             "max_depth", "max_iters"))
+def _grow_round(x_all, m_all, tables, state=None, *,
+                p_cnt, max_nodes, max_depth, max_iters):
+    """One batched growth round: every lane advances up to max_iters.
+    state=None builds the initial state in-graph (eager dispatches cost
+    ~1ms each on small CPU boxes — everything foldable folds into jits)."""
+    if state is None:
+        state = _grow_state(m_all[:, :p_cnt], m_all[:, p_cnt:],
+                            max_nodes, x_all.shape[-1])
+    fn = functools.partial(_grow_lane, p_cnt=p_cnt, max_nodes=max_nodes,
+                           max_depth=max_depth, max_iters=max_iters)
+    return jax.vmap(fn)(x_all, m_all, tables, state)
+
+
+@jax.jit
+def _gather_state(state, idx):
+    """Compact surviving lanes' state rows in ONE dispatch."""
+    return tuple(a[idx] for a in state)
+
+
+@functools.partial(jax.jit, static_argnames=("n_real",))
+def _scatter_state(state, sub, idx, *, n_real):
+    """Scatter finished survivors back into the full batch, ONE dispatch."""
+    return tuple(a.at[idx].set(b[:n_real]) for a, b in zip(state, sub))
+
+
+def _expand_boxes(xn, n_mask, node_of_neg, slots, plo, phi, rlo, rhi,
+                  frange_lo, frange_hi):
+    """Expand S boxes of one tree: push each face halfway toward the
+    nearest excluded negative (or the node region / feature range).
+
+    xn: [Ng, d']; node_of_neg: [Ng] final assignment from growth (an
+    emitted node's negatives never reassign, so ``node_of_neg == slot``
+    IS the node's negative set); slots: [S] emitted node slots
+    (max_nodes marks padding); plo/phi: [S, d'] unexpanded boxes;
+    rlo/rhi: [S, d'] node regions. Mirrors _expand_box bitwise —
+    sequential per-face expansion with an incrementally-maintained
+    containment count, python-unrolled over the (static) face count."""
+    s, d = plo.shape
+    NEG_BIG = jnp.float32(-3e38)
+    POS_BIG = jnp.float32(3e38)
+    nmask = (node_of_neg[None, :] == slots[:, None]) & n_mask[None, :]
+    lo, hi = plo, phi
+    inside = ((xn[None] > lo[:, None, :])
+              & (xn[None] <= hi[:, None, :]))                 # [S, Ng, d]
+    cnt = inside.sum(2)                                       # [S, Ng]
+    for j in range(d):
+        others = nmask & (cnt - inside[:, :, j] == d - 1)
+        below = jnp.max(jnp.where(
+            others & (xn[None, :, j] <= plo[:, j, None]),
+            xn[None, :, j], NEG_BIG), axis=1)
+        above = jnp.min(jnp.where(
+            others & (xn[None, :, j] > phi[:, j, None]),
+            xn[None, :, j], POS_BIG), axis=1)
+        lo_lim = jnp.maximum(jnp.maximum(below, rlo[:, j]), frange_lo[j])
+        hi_lim = jnp.minimum(jnp.minimum(above, rhi[:, j]), frange_hi[j])
+        newlo = jnp.where(lo_lim > NEG_BIG / 2,
+                          0.5 * (plo[:, j] + lo_lim), plo[:, j])
+        newhi = jnp.where(hi_lim < POS_BIG / 2,
+                          0.5 * (phi[:, j] + hi_lim), phi[:, j])
+        lo = lo.at[:, j].set(newlo)
+        hi = hi.at[:, j].set(newhi)
+        newcol = ((xn[None, :, j] > newlo[:, None])
+                  & (xn[None, :, j] <= newhi[:, None]))
+        cnt = cnt + newcol - inside[:, :, j]
+        inside = inside.at[:, :, j].set(newcol)
+    return lo, hi
+
+
+@functools.partial(jax.jit, static_argnames=("max_nodes", "max_depth", "expand"))
+def fit_dbranch_jax(
+    xp: jax.Array,                 # [P, d'] positives (on subset dims)
+    xn: jax.Array,                 # [Ng, d'] negatives
+    frange_lo: jax.Array,          # [d'] feature min on the subset dims
+    frange_hi: jax.Array,          # [d'] feature max on the subset dims
+    p_mask: Optional[jax.Array] = None,   # [P] bool row validity
+    n_mask: Optional[jax.Array] = None,   # [Ng] bool row validity
+    sort_idx: Optional[jax.Array] = None,  # [P+Ng, d'] from split_tables
+    run_end: Optional[jax.Array] = None,   # [P+Ng, d'] from split_tables
+    *,
+    max_nodes: int = 64,
+    max_depth: int = 12,
+    expand: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (lo [max_nodes, d'], hi, valid [max_nodes] bool).
+
+    Same growth rule as fit_dbranch, expressed as a bounded worklist
+    (_grow_lane) followed by box expansion of the emitted leaves.
+    ``p_mask``/``n_mask`` mark the REAL rows so pow2-padded label sets
+    share one compilation (padded rows never participate). Splits match
+    the numpy oracle bitwise: midpoint thresholds and the same float32
+    prefix-sum Gini score as _best_split, over per-dim sort tables (pass
+    ``sort_idx``/``run_end`` from split_tables to keep the sort on the
+    host; they are recomputed in-graph when omitted)."""
+    p_cnt, d = xp.shape
+    if p_mask is None:
+        p_mask = jnp.ones((p_cnt,), bool)
+    if n_mask is None:
+        n_mask = jnp.ones((xn.shape[0],), bool)
+    x_all = jnp.concatenate([xp, xn], 0)
+    m_all = jnp.concatenate([p_mask, n_mask], 0)
+    tables = (None if sort_idx is None
+              else jnp.concatenate([sort_idx, run_end], 1))
+    state = _grow_state(p_mask, n_mask, max_nodes, d)
+    state = _grow_lane(x_all, m_all, tables, state, p_cnt=p_cnt,
+                       max_nodes=max_nodes, max_depth=max_depth,
+                       max_iters=max_nodes)
+    plo, phi, valid = state[6], state[7], state[8]
+    if not expand:
+        return plo, phi, valid
+    slots = jnp.where(valid, jnp.arange(max_nodes, dtype=jnp.int32),
+                      max_nodes)
+    lo, hi = _expand_boxes(xn, n_mask, state[1], slots, plo, phi,
+                           state[2], state[3], frange_lo, frange_hi)
+    return lo, hi, valid
+
+
+@functools.partial(jax.jit, static_argnames=("p_cnt", "n_groups",
+                                             "max_nodes"))
+def _select_expand(x_all, m_all, frange, group_ids,
+                   plo, phi, valid, node_of_neg, rlo, rhi, *,
+                   p_cnt, n_groups, max_nodes):
+    """Device selection + winners-only expansion (the fit_select_jax
+    tail; see its docstring for the contract)."""
+    t = x_all.shape[0]
+    xp, xn = x_all[:, :p_cnt], x_all[:, p_cnt:]
+    p_mask, n_mask = m_all[:, :p_cnt], m_all[:, p_cnt:]
+    counts = kops.batch_box_membership(xp, plo, phi, valid)   # [T, P]
+    fn = ((counts == 0) & p_mask).sum(1).astype(jnp.int32)
+    nb = valid.sum(1).astype(jnp.int32)
+    key = jnp.where(nb > 0, fn * jnp.int32(max_nodes + 1) + nb,
+                    jnp.iinfo(jnp.int32).max)
+    best = jax.ops.segment_min(key, group_ids, num_segments=n_groups)
+    elig = key == best[group_ids]
+    lanes = jnp.arange(t, dtype=jnp.int32)
+    win = jax.ops.segment_min(jnp.where(elig, lanes, t), group_ids,
+                              num_segments=n_groups)
+    win_c = jnp.clip(win, 0, t - 1)
+
+    # compact the winners' emitted slots to a prefix, then expand ONLY
+    # those boxes (G << T lanes, S <= min(max_nodes, P) slots: every box
+    # holds at least one positive)
+    s_max = min(max_nodes, p_cnt)
+    valid_w = valid[win_c]                                    # [G, max_nodes]
+
+    def compact_slots(v):
+        idx, = jnp.nonzero(v, size=s_max, fill_value=max_nodes)
+        return idx.astype(jnp.int32)
+
+    slots = jax.vmap(compact_slots)(valid_w)                  # [G, S]
+    keep = slots < max_nodes
+    slots_c = jnp.minimum(slots, max_nodes - 1)
+    gather = lambda a: jnp.take_along_axis(a[win_c], slots_c[..., None], 1)
+    lo_x, hi_x = jax.vmap(_expand_boxes)(
+        xn[win_c], n_mask[win_c], node_of_neg[win_c], slots,
+        gather(plo), gather(phi), gather(rlo), gather(rhi),
+        frange[win_c, 0], frange[win_c, 1])
+    lo_c = jnp.where(keep[..., None], lo_x, jnp.inf)
+    hi_c = jnp.where(keep[..., None], hi_x, -jnp.inf)
+    # meta stacked in-graph: the caller's single host sync reads one array
+    return lo_c, hi_c, jnp.stack([win, nb[win_c]])
+
+
+def fit_select_jax(
+    x_all: jax.Array,              # [T, P+Ng, d'] per-lane samples
+    m_all: jax.Array,              # [T, P+Ng] bool row validity
+    frange: jax.Array,             # [T, 2, d'] per-lane (lo, hi) range
+    group_ids: jax.Array,          # [T] int32 lane -> model group
+    tables: Optional[jax.Array] = None,  # [T, P+Ng, 2d'] split_tables
+    *,
+    p_cnt: int,
+    n_groups: int,
+    max_nodes: int = 64,
+    max_depth: int = 12,
+    round1_iters: int = 1,
+):
+    """Train EVERY lane and pick each group's winning subset on device.
+
+    A *lane* is one (candidate subset x ensemble member x request)
+    trainer — rows [:p_cnt] of ``x_all`` are its (padded) positives, the
+    rest its negatives; a *group* is one model to be selected (a dbranch
+    query, or one dbens bootstrap member). ``tables`` packs
+    split_tables' (sort_idx | run_end); inputs arrive packed so a fit
+    costs a handful of uploads, not a dozen ~1ms eager dispatches.
+
+    Growth runs in TWO rounds: a capped first round over all lanes
+    (``round1_iters`` pops finish the ~90% of lanes whose tree is a
+    single emitted root), then — after one tiny [T]-bool sync — only the
+    surviving lanes, host-compacted to a pow2 bucket, run growth to
+    completion. Lockstep time is therefore paid by the lanes that need
+    it, not by the whole batch.
+
+    Selection runs on device: each lane's UNEXPANDED boxes are scored on
+    its OWN (bootstrapped, padded) positives with the same membership
+    predicate as the query kernels (kernels/ops.batch_box_membership),
+    and the per-group argmin of (false_negatives, n_boxes) — composed
+    into one int32 key, earliest candidate winning ties, zero-box lanes
+    excluded, exactly the fit_dbranch_best_subset rule — picks the
+    winner via segment_min. Expansion only changes scores by capturing
+    MORE positives, and every training positive already sits in an
+    emitted leaf, so unexpanded scores equal the numpy oracle's expanded
+    ones; the costly face expansion therefore runs ONLY on the winners,
+    after selection. No per-candidate boxes ever cross to the host.
+
+    Returns (lo [G, S, d'], hi [G, S, d'],
+             meta [2, G] int32 — (winner lane | T for empty groups,
+             winner box count) — the fit's ONE result sync reads it),
+    where S = min(max_nodes, P) bounds any tree's box count."""
+    state = _grow_round(x_all, m_all, tables, p_cnt=p_cnt,
+                        max_nodes=max_nodes, max_depth=max_depth,
+                        max_iters=round1_iters)
+    live = np.asarray(state[5].any(axis=1))          # one tiny [T] sync
+    if live.any():
+        idx = np.nonzero(live)[0]
+        pad = 1 << max(len(idx) - 1, 0).bit_length()
+        idx_p = jnp.asarray(np.concatenate(
+            [idx, np.zeros(pad - len(idx), np.int64)]))
+        extras = (x_all, m_all) + (() if tables is None else (tables,))
+        sub = _gather_state(tuple(state) + extras, idx_p)
+        sub_tables = sub[12] if tables is not None else None
+        sub = _grow_round(sub[10], sub[11], sub_tables, sub[:10],
+                          p_cnt=p_cnt, max_nodes=max_nodes,
+                          max_depth=max_depth, max_iters=max_nodes)
+        state = _scatter_state(state, sub, jnp.asarray(idx),
+                               n_real=len(idx))
+    return _select_expand(
+        x_all, m_all, frange, group_ids,
+        state[6], state[7], state[8], state[1], state[2], state[3],
+        p_cnt=p_cnt, n_groups=n_groups, max_nodes=max_nodes)
 
 
 def predict_boxes_jax(x: jax.Array, lo: jax.Array, hi: jax.Array,

@@ -38,8 +38,10 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import knn as knn_mod
-from repro.core.boxes import BoxSet
-from repro.core.dbranch import fit_dbens, fit_dbranch_best_subset
+from repro.core.boxes import BoxSet, concat_box_arrays
+from repro.core.dbranch import (DBENS_SUBSET_CANDIDATES, dbens_draws,
+                                fit_dbens, fit_dbranch_best_subset,
+                                fit_select_jax, split_tables)
 from repro.core.index import (ZoneMapIndex, build_index, full_scan,
                               fused_stats, pad_boxes, query_index)
 from repro.core.subsets import make_subsets
@@ -100,10 +102,22 @@ class SearchEngine:
         use_fused: bool = True,
         capacity_frac: float = 0.25,
         max_results: Optional[int] = None,
+        use_jax_fit: bool = True,
+        fit_max_nodes: int = 64,
     ):
         self.x = np.ascontiguousarray(np.asarray(features, np.float32))
         self.n, self.d = self.x.shape
         self.use_pallas = use_pallas
+        # device-resident batched trainer (DESIGN.md §10): every dbranch/
+        # dbens fit of a batch window runs as ONE jit'd program and the
+        # winning boxes stay on device; the numpy trainers remain the
+        # correctness oracle, selectable with use_jax_fit=False
+        self.use_jax_fit = use_jax_fit
+        # worklist FLOOR per trained model (batched fits scale it up to
+        # 2x the padded positive count so realistic trees never hit the
+        # cap); also bounds the compacted box-count pad, so it is a
+        # jit-cache key the same way capacities are
+        self.fit_max_nodes = fit_max_nodes
         # fused path: prune->gather->refine as one jit'd device program
         # over the cached device mirror of each index (core/index.py)
         self.use_fused = use_fused
@@ -163,8 +177,21 @@ class SearchEngine:
 
         t0 = time.perf_counter()
         if model in ("dbranch", "dbens"):
-            boxes = self._fit_boxes(model, xp, xn, max_depth=max_depth,
-                                    n_models=n_models, seed=seed)
+            if self.use_jax_fit and self.use_fused:
+                # device fit, device boxes: only the [2, G] winner meta
+                # crosses to the host (DESIGN.md §10)
+                lo_c, hi_c, entries = self._fit_boxes_batched(
+                    [(model, xp, xn, n_models, seed)], max_depth=max_depth,
+                    return_device=True)
+                if isinstance(entries[0], Exception):
+                    raise entries[0]
+                boxes = ("device", lo_c, hi_c, entries[0])
+            else:
+                # the non-fused engine is the all-oracle configuration:
+                # host inference AND the numpy trainer (DESIGN.md §10)
+                boxes = self._fit_boxes(model, xp, xn, max_depth=max_depth,
+                                        n_models=n_models, seed=seed,
+                                        use_jax=False)
         elif model == "dtree":
             xtr = np.concatenate([xp, xn])
             ytr = np.concatenate([np.ones(len(xp)), np.zeros(len(xn))])
@@ -183,6 +210,8 @@ class SearchEngine:
             ids, scores, stats = self._run_index_path(
                 boxes, pos_ids, neg_ids, include_training, mr)
             stats["path"] = "index"
+            stats["fit_path"] = ("jax" if self.use_jax_fit and self.use_fused
+                                 else "numpy")
         elif model == "knn":
             k = min(k_neighbors, self.n)
             ids_k, dists = knn_mod.knn_subset(self.indexes[0], xp, k=k)
@@ -211,18 +240,181 @@ class SearchEngine:
 
     # ------------------------------------------------------------------
     def _fit_boxes(self, model: str, xp: np.ndarray, xn: np.ndarray, *,
-                   max_depth: int, n_models: int, seed: int) -> List[BoxSet]:
+                   max_depth: int, n_models: int, seed: int,
+                   use_jax: Optional[bool] = None) -> List[BoxSet]:
         """Fit an index-path model; both query() and query_batch() go
-        through here so batched and sequential answers train identically."""
+        through here so batched and sequential answers train identically.
+        The engine's feature range is plumbed into both trainers so box
+        expansion sees the catalog's spread, not the training sample's.
+        ``use_jax`` overrides the engine default (benchmarks pin the
+        numpy oracle as their legacy baseline)."""
+        use_jax = self.use_jax_fit if use_jax is None else use_jax
+        if use_jax:
+            return self._fit_boxes_batched(
+                [(model, xp, xn, n_models, seed)], max_depth=max_depth)[0]
         if model == "dbranch":
             return [fit_dbranch_best_subset(xp, xn, self.subsets,
-                                            max_depth=max_depth)]
+                                            max_depth=max_depth,
+                                            feature_range=self.frange)]
         return fit_dbens(xp, xn, self.subsets, n_models=n_models,
-                         max_depth=max_depth, seed=seed)
+                         max_depth=max_depth, seed=seed,
+                         feature_range=self.frange)
+
+    def _fit_boxes_batched(self, specs: Sequence[Tuple], *,
+                           max_depth: int, return_device: bool = False):
+        """Device-resident batched fit (DESIGN.md §10): train EVERY model
+        of a batch window — (candidate subsets x ensemble members x
+        requests) lanes — on device (one capped jit'd round over all
+        lanes, one survivor round for deep trees), select each model's
+        winning subset on device, and keep the winning boxes there.
+
+        specs: [(model, xp, xn, n_models, seed)] with xp/xn the raw
+        full-width label features. With ``return_device`` the raw
+        compacted winner arrays come back — (lo [G, S, d'], hi, entries
+        per spec of (winner row, subset id, box count)) — and flow
+        straight into _make_jobs_flat/fused_query with no host round
+        trip; otherwise box-set lists aligned with specs are built (the
+        oracle-compatible API used by tests and benchmarks). Shapes are
+        bucketed (P, Ng, lanes, groups) so varied label-set sizes share
+        compilations; the only device->host result traffic is one [2, G]
+        (winner lane, box count) sync plus the round-1 survivor flags."""
+        n_sub = len(self.subsets)
+        dsub = int(self.subsets.shape[1])
+        groups = []     # (spec_idx, cand ids, lane start, boot pos, boot neg)
+        lane0 = p_max = n_max = 0
+        for si, (model, xp, xn, n_models, seed) in enumerate(specs):
+            xp = np.asarray(xp, np.float32)
+            xn = np.asarray(xn, np.float32)
+            p_max, n_max = max(p_max, len(xp)), max(n_max, len(xn))
+            if model == "dbranch":
+                draws = [(None, None, np.arange(n_sub))]
+            else:       # dbens: same bootstrap draws as the numpy trainer
+                draws = dbens_draws(len(xp), len(xn), n_sub, n_models,
+                                    DBENS_SUBSET_CANDIDATES, seed)
+            for ip, ineg, cand in draws:
+                bp = xp if ip is None else xp[ip]
+                bn = xn if ineg is None else (xn[ineg] if len(xn) else xn)
+                groups.append((si, np.asarray(cand), lane0, bp, bn))
+                lane0 += len(cand)
+        t = lane0
+        g_real = len(groups)
+        # bucketing: pow2 for small values, then coarse linear quanta —
+        # padding waste stays <= ~25% while the jit-key count stays tiny
+        p_pad = self._fit_bucket(p_max, 32)
+        n_pad = self._fit_bucket(n_max, 32)
+        t_pad = self._fit_bucket(t, 128)
+        # dummy lanes park in an extra dummy group so real winners are
+        # never contested by padding
+        g_pad = self._pow2ceil(g_real + (1 if t_pad > t else 0))
+        # packed inputs (samples, validity, ranges): one upload each —
+        # eager dispatches/uploads cost ~1ms apiece on small CPU hosts
+        x_b = np.zeros((t_pad, p_pad + n_pad, dsub), np.float32)
+        m_b = np.zeros((t_pad, p_pad + n_pad), bool)
+        fr_b = np.zeros((t_pad, 2, dsub), np.float32)
+        gid_b = np.full(t_pad, g_real, np.int32)
+        for g, (si, cand, l0, bp, bn) in enumerate(groups):
+            c = len(cand)
+            dims = self.subsets[cand]                          # [C, d']
+            x_b[l0:l0 + c, :len(bp)] = bp[:, dims].transpose(1, 0, 2)
+            m_b[l0:l0 + c, :len(bp)] = True
+            if len(bn):
+                x_b[l0:l0 + c, p_pad:p_pad + len(bn)] = \
+                    bn[:, dims].transpose(1, 0, 2)
+                m_b[l0:l0 + c, p_pad:p_pad + len(bn)] = True
+            fr_b[l0:l0 + c, 0] = self.frange[0][dims]
+            fr_b[l0:l0 + c, 1] = self.frange[1][dims]
+            gid_b[l0:l0 + c] = g
+        # split-search tables on the host: numpy sorts the whole lane
+        # stack in one shot, the device program never sorts
+        si_b, re_b = split_tables(x_b)
+        # the worklist cap: trees that outgrow it emit early, diverging
+        # from the (uncapped) numpy oracle — scale headroom with the
+        # label-set size so realistic trees always fit (a tree has at
+        # most one leaf per positive)
+        max_nodes = max(self.fit_max_nodes, 2 * p_pad)
+        lo_c, hi_c, meta_dev = fit_select_jax(
+            jnp.asarray(x_b), jnp.asarray(m_b), jnp.asarray(fr_b),
+            jnp.asarray(gid_b), jnp.asarray(
+                np.concatenate([si_b, re_b], axis=2)),
+            p_cnt=p_pad, n_groups=g_pad, max_nodes=max_nodes,
+            max_depth=max_depth)
+        meta = np.asarray(meta_dev)                    # the ONE result sync
+        # decode winners PER SPEC: a request whose label set produced no
+        # boxes fails alone — its exception rides in its slot and the
+        # rest of the window keeps its finished device fit
+        entries: List = [[] for _ in specs]
+        for g, (si, cand, start, _, _) in enumerate(groups):
+            if isinstance(entries[si], Exception):
+                continue
+            wl, nb = int(meta[0, g]), int(meta[1, g])
+            if wl >= t or nb <= 0:
+                entries[si] = RuntimeError("no subset produced boxes")
+                continue
+            sid = int(cand[wl - start])
+            entries[si].append((g, sid, nb))
+        if return_device:
+            return lo_c, hi_c, entries
+        out = []
+        for ent in entries:
+            if isinstance(ent, Exception):
+                raise ent
+            out.append([BoxSet(lo_c[g, :nb], hi_c[g, :nb],
+                               self.subsets[sid], sid)
+                        for g, sid, nb in ent])
+        return out
+
+    def _make_jobs_flat(self, parts, nq: int):
+        """The _make_jobs counterpart for device-resident fit output.
+
+        parts: [(lo_c, hi_c, g, sid, cnt, q)] — the [G, S, d'] compacted
+        winner arrays from _fit_boxes_batched(return_device=True), a
+        winner row g, its subset, real box count, and owning query.
+        Builds identical jobs with ONE device gather per (subset, fit
+        array) instead of per-model slices: eager dispatches cost ~1ms
+        each on small CPU hosts, so per-group slicing would dwarf the
+        fit itself at dbens scale (DESIGN.md §10)."""
+        by_subset: Dict[int, List] = {}
+        for part in parts:
+            by_subset.setdefault(part[3], []).append(part)
+        jobs = []
+        totals = np.zeros(nq, np.int64)
+        for sid, group in by_subset.items():
+            by_arr: Dict[int, Tuple] = {}
+            for lo_c, hi_c, g, _, cnt, q in group:
+                by_arr.setdefault(id(lo_c), (lo_c, hi_c, []))[2].append(
+                    (g, cnt, q))
+            los, his, owners = [], [], []
+            for lo_c, hi_c, ents in by_arr.values():
+                s, d = lo_c.shape[1], lo_c.shape[2]
+                idx = np.concatenate(
+                    [np.arange(cnt, dtype=np.int32) + g * s
+                     for g, cnt, _ in ents])
+                los.append(jnp.take(lo_c.reshape(-1, d), jnp.asarray(idx),
+                                    axis=0))
+                his.append(jnp.take(hi_c.reshape(-1, d), jnp.asarray(idx),
+                                    axis=0))
+                owners += [np.full(cnt, q, np.int32) for _, cnt, q in ents]
+            lo = los[0] if len(los) == 1 else jnp.concatenate(los)
+            hi = his[0] if len(his) == 1 else jnp.concatenate(his)
+            owner = np.concatenate(owners)
+            jobs.append((sid, BoxSet(lo, hi, self.subsets[sid], sid),
+                         owner))
+            totals += np.bincount(owner, minlength=nq)
+        return jobs, (int(totals.max()) if jobs else 0)
 
     @staticmethod
     def _pow2ceil(v: int) -> int:
         return 1 << max(int(v) - 1, 0).bit_length()
+
+    @classmethod
+    def _fit_bucket(cls, v: int, quantum: int) -> int:
+        """Shape bucket for the batched trainer: pow2 below ``quantum``
+        (few keys for tiny sizes), then quantum multiples (a 128-lane
+        dbens window pads to 640 lanes, not 1024)."""
+        v = max(int(v), 1)
+        if v <= quantum:
+            return cls._pow2ceil(v)
+        return quantum * (-(-v // quantum))
 
     def _cap_key(self, sid: int, n_boxes: int):
         """Hints are keyed by (subset, pow2-bucketed box count): survivor
@@ -288,8 +480,10 @@ class SearchEngine:
         jobs = []
         totals = np.zeros(nq, np.int64)
         for sid, group in by_subset.items():
-            lo = np.concatenate([bs.lo for bs, _ in group])
-            hi = np.concatenate([bs.hi for bs, _ in group])
+            # device-resident boxes (jax arrays, from the batched
+            # trainer) merge on device; the owner map is host metadata
+            lo = concat_box_arrays([bs.lo for bs, _ in group])
+            hi = concat_box_arrays([bs.hi for bs, _ in group])
             owner = np.concatenate([np.full(bs.n_boxes, q, np.int32)
                                     for bs, q in group])
             jobs.append((sid, BoxSet(lo, hi, group[0][0].dims, sid), owner))
@@ -383,16 +577,23 @@ class SearchEngine:
             self._accumulate_agg(agg, st, merged.n_boxes)
         return counts, self._finalize_agg(agg)
 
-    def _run_index_path(self, boxsets: List[BoxSet], pos_ids, neg_ids,
+    def _run_index_path(self, boxsets, pos_ids, neg_ids,
                         include_training: bool, mr: Optional[int]):
         """Single-query index inference + ranking; fused engines score on
-        device and, with ``mr`` set, rank on device too."""
+        device and, with ``mr`` set, rank on device too. ``boxsets`` is a
+        List[BoxSet], or the ("device", lo, hi, entries) form handed out
+        by the batched device fit — those boxes never touch the host."""
         if not self.use_fused:
             counts, stats = self._index_inference(boxsets)
             ids, scores = self._rank(counts, pos_ids, neg_ids,
                                      include_training)
             return ids, scores, stats    # query() applies the mr cut
-        jobs, bound = self._make_jobs([(bs, 0) for bs in boxsets], 1)
+        if isinstance(boxsets, tuple) and boxsets[0] == "device":
+            _, lo_c, hi_c, ent = boxsets
+            jobs, bound = self._make_jobs_flat(
+                [(lo_c, hi_c, g, sid, cnt, 0) for g, sid, cnt in ent], 1)
+        else:
+            jobs, bound = self._make_jobs([(bs, 0) for bs in boxsets], 1)
         scores_dev, stats = self._device_scores(jobs, 1)
         if mr is None:
             counts = np.asarray(scores_dev)[:, 0]
@@ -477,7 +678,7 @@ class SearchEngine:
         are namespaced ``batch_*``; the only per-request figure is
         ``n_boxes`` (that request's own box count)."""
         results: List = [None] * len(requests)
-        fitted = []   # (slot, model, boxsets, pos, neg, incl, mr, t_fit)
+        to_fit = []   # (slot, model, pos, neg, incl, mr, depth, n_models, seed)
         for i, req in enumerate(requests):
             try:
                 model = req.get("model", "dbranch")
@@ -492,28 +693,96 @@ class SearchEngine:
                     continue
                 pos = np.asarray(list(req["pos_ids"]), np.int64)
                 neg = np.asarray(list(req["neg_ids"]), np.int64)
-                t0 = time.perf_counter()
-                boxsets = self._fit_boxes(
-                    model, self.x[pos], self.x[neg],
-                    max_depth=req.get("max_depth", 12),
-                    n_models=req.get("n_models", 25),
-                    seed=req.get("seed", 0))
                 mr = (req["max_results"] if "max_results" in req
                       else self.max_results)
-                fitted.append((i, model, boxsets, pos, neg,
+                to_fit.append((i, model, pos, neg,
                                req.get("include_training", False), mr,
-                               time.perf_counter() - t0))
+                               req.get("max_depth", 12),
+                               req.get("n_models", 25), req.get("seed", 0)))
             except Exception as e:  # noqa: BLE001 — per-request isolation
                 results[i] = e
+        if not to_fit:
+            return results
+
+        # ---- fit phase: the WHOLE window trains on device together ----
+        # (one jit'd program per distinct max_depth — DESIGN.md §10);
+        # use_jax_fit=False keeps the per-request numpy oracle
+        t0 = time.perf_counter()
+        fitted = []   # (slot, model, boxsets, pos, neg, incl, mr, t_fit)
+        if self.use_jax_fit:
+            # slot -> ("device", lo, hi, entries) or List[BoxSet] fallback
+            boxsets_by_slot: Dict[int, object] = {}
+            by_depth: Dict[int, List] = {}
+            for it in to_fit:
+                by_depth.setdefault(it[6], []).append(it)
+            for depth, items in by_depth.items():
+                try:
+                    lo_c, hi_c, entries = self._fit_boxes_batched(
+                        [(it[1], self.x[it[2]], self.x[it[3]], it[7], it[8])
+                         for it in items], max_depth=depth,
+                        return_device=True)
+                except Exception:  # noqa: BLE001 — degrade, don't die
+                    entries = None  # batch-wide failure: per-request oracle
+                for j, it in enumerate(items):
+                    if entries is not None and not isinstance(
+                            entries[j], Exception):
+                        boxsets_by_slot[it[0]] = ("device", lo_c, hi_c,
+                                                  entries[j])
+                        continue
+                    # this request failed the device fit (or the whole
+                    # window did): retry it alone on the numpy oracle so
+                    # one bad label set never drags the batch down
+                    try:
+                        boxsets_by_slot[it[0]] = self._fit_boxes(
+                            it[1], self.x[it[2]], self.x[it[3]],
+                            max_depth=it[6], n_models=it[7], seed=it[8],
+                            use_jax=False)
+                    except Exception as e:  # noqa: BLE001
+                        results[it[0]] = e
+            fit_wall = time.perf_counter() - t0
+            # the fit is a shared device phase; bill it evenly
+            share = fit_wall / max(len(boxsets_by_slot), 1)
+            for it in to_fit:
+                if it[0] in boxsets_by_slot:
+                    fitted.append((it[0], it[1], boxsets_by_slot[it[0]],
+                                   it[2], it[3], it[4], it[5], share))
+        else:
+            for it in to_fit:
+                t1 = time.perf_counter()
+                try:
+                    boxsets = self._fit_boxes(
+                        it[1], self.x[it[2]], self.x[it[3]],
+                        max_depth=it[6], n_models=it[7], seed=it[8])
+                except Exception as e:  # noqa: BLE001
+                    results[it[0]] = e
+                    continue
+                fitted.append((it[0], it[1], boxsets, it[2], it[3], it[4],
+                               it[5], time.perf_counter() - t1))
+            fit_wall = time.perf_counter() - t0
         if not fitted:
             return results
 
         # ---- ONE fused device call per subset, ONE deferred sync -------
         t0 = time.perf_counter()
         nq = len(fitted)
-        pairs = [(bs, q) for q, (_, _, boxsets, *_r) in enumerate(fitted)
-                 for bs in boxsets]
-        jobs, bound = self._make_jobs(pairs, nq)
+        # device-fit requests contribute (winner-array, row) parts and
+        # never touch the host; oracle-fit (or fallback) requests
+        # contribute classic BoxSets — both merge into the same jobs
+        flat_parts, box_pairs = [], []
+        for q, (_, _, boxes, *_r) in enumerate(fitted):
+            if isinstance(boxes, tuple) and boxes[0] == "device":
+                flat_parts += [(boxes[1], boxes[2], g, sid, cnt, q)
+                               for g, sid, cnt in boxes[3]]
+            else:
+                box_pairs += [(bs, q) for bs in boxes]
+        jobs, bound = [], 0
+        if flat_parts:
+            jobs, bound = self._make_jobs_flat(flat_parts, nq)
+        if box_pairs:
+            j2, b2 = self._make_jobs(box_pairs, nq)
+            # a request's boxes live entirely in one form, so per-query
+            # score bounds combine by max
+            jobs, bound = jobs + j2, max(bound, b2)
         scores_dev, agg = self._device_scores(jobs, nq)
 
         # ---- ranking ---------------------------------------------------
@@ -543,11 +812,16 @@ class SearchEngine:
         base = {f"batch_{k}": v for k, v in agg.items()}
         base["path"] = "index"
         base["batch_size"] = nq
-        for q, (slot, model, boxsets, pos, neg, incl, m, t_fit) in enumerate(
+        base["batch_fit_s"] = fit_wall
+        base["fit_path"] = "jax" if self.use_jax_fit else "numpy"
+        for q, (slot, model, boxes, pos, neg, incl, m, t_fit) in enumerate(
                 fitted):
             ids, sc = ranked[q]
-            stats = {**base,
-                     "n_boxes": int(sum(bs.n_boxes for bs in boxsets))}
+            if isinstance(boxes, tuple) and boxes[0] == "device":
+                nb = int(sum(cnt for _, _, cnt in boxes[3]))
+            else:
+                nb = int(sum(bs.n_boxes for bs in boxes))
+            stats = {**base, "n_boxes": nb}
             results[slot] = QueryResult(model, ids, sc, t_fit, t_query,
                                         stats)
         return results

@@ -24,7 +24,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.boxes import BoxSet
+from repro.core.boxes import BoxSet, concat_box_arrays
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -198,14 +198,16 @@ def pad_boxes(lo: np.ndarray, hi: np.ndarray, owner: Optional[np.ndarray]):
     """Pad the box count to a _BOX_BUCKET multiple with impossible boxes
     (lo=+inf > hi=-inf): they survive no zone and contain no row, so
     results are unchanged while the fused jit cache stays hot across
-    queries with varying box counts."""
+    queries with varying box counts. Device-resident boxes (jax arrays,
+    from the batched trainer) are padded on device; the owner map is
+    always host-side."""
     b = lo.shape[0]
     pad = (-b) % _BOX_BUCKET
     if pad == 0:
         return lo, hi, owner
     d = lo.shape[1]
-    lo = np.concatenate([lo, np.full((pad, d), np.inf, np.float32)])
-    hi = np.concatenate([hi, np.full((pad, d), -np.inf, np.float32)])
+    lo = concat_box_arrays([lo, np.full((pad, d), np.inf, np.float32)])
+    hi = concat_box_arrays([hi, np.full((pad, d), -np.inf, np.float32)])
     if owner is not None:
         owner = np.concatenate([owner, np.zeros(pad, owner.dtype)])
     return lo, hi, owner

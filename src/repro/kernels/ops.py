@@ -162,6 +162,22 @@ def fused_query(rows3: jax.Array, zlo: jax.Array, zhi: jax.Array,
     return counts, cand.astype(jnp.int32), n_hit
 
 
+def batch_box_membership(x: jax.Array, lo: jax.Array, hi: jax.Array,
+                         valid: jax.Array) -> jax.Array:
+    """Per-set membership counts [T, N]: counts[t, i] = number of valid
+    boxes of set t containing row i of sample batch t.
+
+    x: [T, N, d']; lo/hi: [T, B, d'] half-open boxes; valid: [T, B] bool
+    (invalid slots never match). The same membership predicate as
+    box_scan, batched over T — the batched trainer's selection stage
+    scores every candidate model on its own training samples with this,
+    so subset selection stays on device (DESIGN.md §10). Designed to run
+    INSIDE a caller's jit (not dispatched standalone)."""
+    inside = ((x[:, :, None, :] > lo[:, None, :, :])
+              & (x[:, :, None, :] <= hi[:, None, :, :]))     # [T, N, B, d']
+    return (jnp.all(inside, -1) & valid[:, None, :]).sum(-1).astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("nb",))
 def accumulate_scores(scores: jax.Array, counts: jax.Array, cand: jax.Array,
                       inv_perm: jax.Array, *, nb: int) -> jax.Array:

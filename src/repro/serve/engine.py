@@ -70,7 +70,7 @@ class QueryServer:
         self._thread: Optional[threading.Thread] = None
         self.stats = {"served": 0, "errors": 0, "batches": 0,
                       "batched_queries": 0, "latency_sum": 0.0,
-                      "host_bytes": 0}
+                      "fit_s_sum": 0.0, "host_bytes": 0}
 
     def _query_kwargs(self, req: QueryRequest) -> Dict:
         kw = dict(req.kwargs)
@@ -88,6 +88,7 @@ class QueryServer:
                                  latency_s=time.perf_counter() - t0)
             self.stats["host_bytes"] += res.stats.get(
                 "host_bytes_transferred", 0)
+            self.stats["fit_s_sum"] += res.train_time_s
         except Exception as e:  # noqa: BLE001 — per-request isolation
             resp = QueryResponse(req.request_id, False, None, f"{e}",
                                  time.perf_counter() - t0)
@@ -127,6 +128,9 @@ class QueryServer:
             else:
                 resp = QueryResponse(r.request_id, True, out,
                                      latency_s=wall)
+                # per-request fit shares sum to the window's fit wall
+                # (engine bills the shared batched fit evenly)
+                self.stats["fit_s_sum"] += out.train_time_s
                 # batch_* aggregates describe the SHARED device phase —
                 # count them once per batch, not once per request
                 if "batch_host_bytes_transferred" in out.stats:
@@ -183,7 +187,8 @@ class QueryServer:
     def summary(self) -> Dict:
         served = max(self.stats["served"], 1)
         return {**self.stats,
-                "mean_latency_s": self.stats["latency_sum"] / served}
+                "mean_latency_s": self.stats["latency_sum"] / served,
+                "mean_fit_s": self.stats["fit_s_sum"] / served}
 
 
 def merge_shard_results(per_shard: List[QueryResult],

@@ -1,0 +1,302 @@
+"""Device-trainer parity suite (DESIGN.md §10).
+
+The contract under test: the JAX trainer (fit_dbranch_jax and the
+batched fit_select_jax the engine serves with) produces BITWISE the same
+boxes as the numpy oracle — same midpoint splits, same float32 Gini
+scores, same expansion limits, same feature_range — so the oracle stays
+a usable reference for the production device path. Plus the invariants
+the device selection relies on: every training positive sits in an
+emitted leaf (fn == 0), and expanded boxes never swallow an excluded
+negative.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.dbranch import (dbens_draws, fit_dbens, fit_dbranch,
+                                fit_dbranch_best_subset, fit_dbranch_jax,
+                                split_tables)
+from repro.core.engine import SearchEngine
+from repro.core.subsets import make_subsets
+
+
+def _sorted_boxes(lo, hi):
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    key = np.lexsort(np.concatenate([lo, hi], 1).T[::-1])
+    return lo[key], hi[key]
+
+
+def _assert_same_boxes(bs, lo, hi, valid):
+    """Box SET equality, bitwise (the trainers emit in different orders:
+    numpy DFS vs worklist BFS)."""
+    lo, hi, valid = np.asarray(lo), np.asarray(hi), np.asarray(valid)
+    a_lo, a_hi = _sorted_boxes(bs.lo, bs.hi)
+    b_lo, b_hi = _sorted_boxes(lo[valid], hi[valid])
+    assert a_lo.shape == b_lo.shape, (a_lo.shape, b_lo.shape)
+    np.testing.assert_array_equal(a_lo, b_lo)
+    np.testing.assert_array_equal(a_hi, b_hi)
+
+
+def _rand_case(seed):
+    rng = np.random.default_rng(seed)
+    p = int(rng.integers(3, 40))
+    ng = int(rng.integers(5, 120))
+    d = int(rng.integers(2, 7))
+    xp = rng.normal(1.0, 0.5, (p, d)).astype(np.float32)
+    xn = rng.normal(0.0, 1.0, (ng, d)).astype(np.float32)
+    flo = (np.minimum(xp.min(0), xn.min(0)) - 1).astype(np.float32)
+    fhi = (np.maximum(xp.max(0), xn.max(0)) + 1).astype(np.float32)
+    return xp, xn, flo, fhi
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_jax_boxes_bitwise_match_numpy(seed):
+    """Same splits -> same boxes, including expansion and feature_range."""
+    xp, xn, flo, fhi = _rand_case(seed)
+    d = xp.shape[1]
+    bs = fit_dbranch(xp, xn, np.arange(d), max_depth=10,
+                     feature_range=(flo, fhi))
+    lo, hi, valid = fit_dbranch_jax(
+        jnp.asarray(xp), jnp.asarray(xn), jnp.asarray(flo),
+        jnp.asarray(fhi), max_nodes=128, max_depth=10)
+    _assert_same_boxes(bs, lo, hi, valid)
+
+
+@pytest.mark.parametrize("seed", (0, 3, 7))
+def test_padded_masked_fit_matches_unpadded(seed):
+    """pow2-padded rows with validity masks change nothing (the batched
+    engine path always trains on padded lanes)."""
+    xp, xn, flo, fhi = _rand_case(seed)
+    p, ng, d = len(xp), len(xn), xp.shape[1]
+    lo1, hi1, v1 = fit_dbranch_jax(
+        jnp.asarray(xp), jnp.asarray(xn), jnp.asarray(flo),
+        jnp.asarray(fhi), max_nodes=64)
+    pp, np_ = 64, 128
+    xpp = np.zeros((pp, d), np.float32)
+    xpp[:p] = xp
+    xnp = np.zeros((np_, d), np.float32)
+    xnp[:ng] = xn
+    lo2, hi2, v2 = fit_dbranch_jax(
+        jnp.asarray(xpp), jnp.asarray(xnp), jnp.asarray(flo),
+        jnp.asarray(fhi), jnp.asarray(np.arange(pp) < p),
+        jnp.asarray(np.arange(np_) < ng), max_nodes=64)
+    a = _sorted_boxes(np.asarray(lo1)[np.asarray(v1)],
+                      np.asarray(hi1)[np.asarray(v1)])
+    b = _sorted_boxes(np.asarray(lo2)[np.asarray(v2)],
+                      np.asarray(hi2)[np.asarray(v2)])
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_host_split_tables_match_in_graph(seed=5):
+    """Passing split_tables' host (sort_idx, run_end) must not change the
+    boxes vs the in-graph derivation."""
+    xp, xn, flo, fhi = _rand_case(seed)
+    si, re = split_tables(np.concatenate([xp, xn]))
+    lo1, hi1, v1 = fit_dbranch_jax(
+        jnp.asarray(xp), jnp.asarray(xn), jnp.asarray(flo),
+        jnp.asarray(fhi), max_nodes=64)
+    lo2, hi2, v2 = fit_dbranch_jax(
+        jnp.asarray(xp), jnp.asarray(xn), jnp.asarray(flo),
+        jnp.asarray(fhi), None, None, jnp.asarray(si), jnp.asarray(re),
+        max_nodes=64)
+    a = _sorted_boxes(np.asarray(lo1)[np.asarray(v1)],
+                      np.asarray(hi1)[np.asarray(v1)])
+    b = _sorted_boxes(np.asarray(lo2)[np.asarray(v2)],
+                      np.asarray(hi2)[np.asarray(v2)])
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_every_positive_sits_in_an_emitted_box():
+    """The invariant device selection rests on: false negatives are
+    always zero (every positive flows to an emitted leaf), so scoring
+    unexpanded boxes equals the oracle's expanded-box scoring."""
+    for seed in range(8):
+        xp, xn, flo, fhi = _rand_case(seed)
+        d = xp.shape[1]
+        bs = fit_dbranch(xp, xn, np.arange(d), max_depth=4,
+                         feature_range=(flo, fhi))
+        assert (bs.contains(xp) > 0).all()
+        bs_raw = fit_dbranch(xp, xn, np.arange(d), max_depth=4,
+                             expand=False, feature_range=(flo, fhi))
+        assert (bs_raw.contains(xp) > 0).all()
+
+
+# ----------------------------------------------------------------------
+# engine-level parity: the production jax path vs the numpy oracle path
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engines(catalog):
+    feats, labels = catalog
+    jx = SearchEngine(feats, n_subsets=12, subset_dim=5, block=128, seed=0,
+                      use_jax_fit=True)
+    npy = SearchEngine(feats, n_subsets=12, subset_dim=5, block=128, seed=0,
+                       use_jax_fit=False)
+    return jx, npy, labels
+
+
+def _labels_query(labels, cls, n_pos, n_neg, seed):
+    rng = np.random.default_rng(seed)
+    pos = rng.choice(np.nonzero(labels == cls)[0], n_pos, replace=False)
+    neg = rng.choice(np.nonzero(labels != cls)[0], n_neg, replace=False)
+    return pos, neg
+
+
+@pytest.mark.parametrize("model,n_models", [("dbranch", 25), ("dbens", 6)])
+def test_engine_jax_fit_matches_numpy_fit(engines, model, n_models):
+    jx, npy, labels = engines
+    pos, neg = _labels_query(labels, 2, 14, 70, seed=3)
+    r1 = jx.query(pos, neg, model=model, n_models=n_models)
+    r2 = npy.query(pos, neg, model=model, n_models=n_models)
+    assert r1.stats["fit_path"] == "jax"
+    assert r2.stats["fit_path"] == "numpy"
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+    np.testing.assert_array_equal(r1.scores, r2.scores)
+
+
+def test_engine_fit_boxes_parity_including_subset_choice(engines):
+    """_fit_boxes (jax) and the oracle pick the SAME winning subset and
+    the SAME boxes — for dbranch and for every dbens member."""
+    jx, npy, labels = engines
+    pos, neg = _labels_query(labels, 1, 12, 60, seed=9)
+    xp, xn = jx.x[pos], jx.x[neg]
+    for model, n_models in (("dbranch", 25), ("dbens", 5)):
+        b1 = jx._fit_boxes(model, xp, xn, max_depth=12, n_models=n_models,
+                           seed=4)
+        b2 = npy._fit_boxes(model, xp, xn, max_depth=12, n_models=n_models,
+                            seed=4)
+        assert len(b1) == len(b2)
+        for a, b in zip(b1, b2):
+            assert a.subset_id == b.subset_id
+            a_lo, a_hi = _sorted_boxes(a.lo, a.hi)
+            b_lo, b_hi = _sorted_boxes(b.lo, b.hi)
+            np.testing.assert_array_equal(a_lo, b_lo)
+            np.testing.assert_array_equal(a_hi, b_hi)
+
+
+def test_batched_fit_equals_sequential_across_window(engines):
+    """query_batch's shared batched fit answers == per-request query()
+    fits, across a mixed dbranch/dbens window."""
+    jx, _, labels = engines
+    reqs = []
+    for i in range(6):
+        pos, neg = _labels_query(labels, [1, 2][i % 2], 10 + i, 50, seed=i)
+        reqs.append({"pos_ids": pos, "neg_ids": neg,
+                     "model": ["dbranch", "dbens"][i % 2], "n_models": 5})
+    bat = jx.query_batch(reqs)
+    for req, res in zip(reqs, bat):
+        assert not isinstance(res, Exception), res
+        seq = jx.query(req["pos_ids"], req["neg_ids"], model=req["model"],
+                       n_models=req["n_models"])
+        np.testing.assert_array_equal(res.ids, seq.ids)
+        np.testing.assert_array_equal(res.scores, seq.scores)
+    assert bat[0].stats["fit_path"] == "jax"
+    assert bat[0].stats["batch_fit_s"] > 0
+
+
+def test_frange_is_plumbed_into_fits(engines):
+    """The engine's catalog-wide feature range must reach the trainers:
+    engine fits == direct fits with feature_range=engine.frange, and the
+    range genuinely matters (an out-of-sample extreme row widens it)."""
+    _, npy, labels = engines
+    pos, neg = _labels_query(labels, 2, 12, 60, seed=21)
+    xp, xn = npy.x[pos], npy.x[neg]
+    got = npy._fit_boxes("dbranch", xp, xn, max_depth=12, n_models=25,
+                         seed=0)[0]
+    want = fit_dbranch_best_subset(xp, xn, npy.subsets, max_depth=12,
+                                   feature_range=npy.frange)
+    assert got.subset_id == want.subset_id
+    np.testing.assert_array_equal(got.lo, want.lo)
+    np.testing.assert_array_equal(got.hi, want.hi)
+    # the plumbed range must differ from the sample-derived one whenever
+    # the catalog is wider than the tiny training sample
+    unplumbed = fit_dbranch_best_subset(xp, xn, npy.subsets, max_depth=12)
+    assert not (np.array_equal(np.asarray(got.lo), np.asarray(unplumbed.lo))
+                and np.array_equal(np.asarray(got.hi),
+                                   np.asarray(unplumbed.hi)))
+
+
+def test_dbens_draws_shared_by_both_trainers():
+    """The bootstrap/candidate draws are one code path, so the jax and
+    numpy ensembles are literally the same models."""
+    d1 = dbens_draws(10, 30, 8, 4, 3, seed=7)
+    d2 = dbens_draws(10, 30, 8, 4, 3, seed=7)
+    for (a1, b1, c1), (a2, b2, c2) in zip(d1, d2):
+        np.testing.assert_array_equal(a1, a2)
+        np.testing.assert_array_equal(b1, b2)
+        np.testing.assert_array_equal(c1, c2)
+
+
+def test_dbens_numpy_uses_draws_helper(blob_data):
+    x, y = blob_data
+    subsets = make_subsets(x.shape[1], 8, 4, seed=0)
+    ens = fit_dbens(x[y == 1][:12], x[y == 0][:40], subsets, n_models=3,
+                    seed=5)
+    draws = dbens_draws(12, 40, 8, 3, 5, seed=5)
+    for m, (_, _, cand) in zip(ens, draws):
+        assert m.subset_id in cand
+
+
+# ----------------------------------------------------------------------
+# property test: expansion never swallows an excluded negative
+# ----------------------------------------------------------------------
+
+def _make_label_sets(seed, p, ng, d, center, margin):
+    rng = np.random.default_rng(seed)
+    xp = rng.normal(center, 0.6, (p, d)).astype(np.float32)
+    xn = rng.normal(0.0, 1.2, (ng, d)).astype(np.float32)
+    flo = (np.minimum(xp.min(0), xn.min(0)) - margin).astype(np.float32)
+    fhi = (np.maximum(xp.max(0), xn.max(0)) + margin).astype(np.float32)
+    return xp, xn, flo, fhi
+
+
+def _check_no_swallowed_negative(case):
+    """For ANY label sets and ANY (catalog-wide) feature range, expansion
+    stops halfway to the nearest excluded negative — so no training
+    negative is ever inside the box union, in either trainer."""
+    xp, xn, flo, fhi = case
+    d = xp.shape[1]
+    bs = fit_dbranch(xp, xn, np.arange(d), feature_range=(flo, fhi))
+    assert (bs.contains(xn) == 0).all()
+    assert (bs.contains(xp) > 0).all()
+    lo, hi, valid = fit_dbranch_jax(
+        jnp.asarray(xp), jnp.asarray(xn), jnp.asarray(flo),
+        jnp.asarray(fhi), max_nodes=128)
+    _assert_same_boxes(bs, lo, hi, valid)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_expanded_boxes_never_swallow_excluded_negatives(seed):
+    """Seeded spot-check of the expansion-safety property (always runs;
+    the hypothesis variant below explores the space when available)."""
+    rng = np.random.default_rng(1000 + seed)
+    case = _make_label_sets(seed, int(rng.integers(2, 25)),
+                            int(rng.integers(1, 80)),
+                            int(rng.integers(2, 6)),
+                            float(rng.uniform(0, 2)),
+                            float(rng.uniform(0.1, 3.0)))
+    _check_no_swallowed_negative(case)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                         # pragma: no cover
+    st = None
+
+if st is not None:
+    settings.register_profile("fit_parity", max_examples=20, deadline=None)
+    settings.load_profile("fit_parity")
+
+    @st.composite
+    def label_sets(draw):
+        return _make_label_sets(
+            draw(st.integers(0, 2 ** 31 - 1)), draw(st.integers(2, 25)),
+            draw(st.integers(1, 80)), draw(st.integers(2, 6)),
+            draw(st.floats(0.0, 2.0)), draw(st.floats(0.1, 3.0)))
+
+    @given(label_sets())
+    def test_expanded_boxes_never_swallow_excluded_negatives_hyp(case):
+        _check_no_swallowed_negative(case)

@@ -82,9 +82,10 @@ def test_engine_index_path_equals_scan_path(engine_and_labels):
     eng, labels = engine_and_labels
     pos, neg = _query_sets(labels, 2, seed=3)
     res = eng.query(pos, neg, model="dbranch", include_training=True)
-    # rebuild the same model and scan
+    # rebuild the same model (same plumbed feature range) and scan
     from repro.core.dbranch import fit_dbranch_best_subset
-    bs = fit_dbranch_best_subset(eng.x[pos], eng.x[neg], eng.subsets)
+    bs = fit_dbranch_best_subset(eng.x[pos], eng.x[neg], eng.subsets,
+                                 feature_range=eng.frange)
     lo, hi = bs.to_full(eng.d)
     counts = np.asarray(full_scan(eng.x, lo, hi))
     ids_scan = np.nonzero(counts > 0)[0]
