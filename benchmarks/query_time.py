@@ -27,7 +27,13 @@ Extra modes (DESIGN.md §6, §9):
   --fit             the batched device-resident fit phase (DESIGN.md
                     §10) vs the sequential numpy fits (legacy seed
                     trainer AND today's vectorized oracle) at batch=8.
-  --check-json      re-validate BENCH_query_time.json (the CI gate).
+  --sharded         the sharded serving path (DESIGN.md §11): ranked
+                    batch latency, cross-shard merge µs and per-query
+                    host bytes vs n_shards in {1, 2, 4, 8}; emits
+                    BENCH_shard_query.json and fails loudly if any
+                    shard count's ids diverge from single-device.
+  --check-json      re-validate BENCH_query_time.json (and, when
+                    present, BENCH_shard_query.json) — the CI gate.
 """
 from __future__ import annotations
 
@@ -248,6 +254,124 @@ def run_ranked(batch: int = 8, sizes=(20_000, 50_000), k: int = 100,
     return rows
 
 
+def run_sharded(batch: int = 8, n: int = 50_000,
+                shard_counts=(1, 2, 4, 8), k: int = 100,
+                verbose: bool = True,
+                out_json: str = "BENCH_shard_query.json"):
+    """The sharded serving path (DESIGN.md §11) at one DB size: a ranked
+    dbranch batch through engines with n_shards in {1, 2, 4, 8}.
+
+    Three quantities per shard count: the ranked query phase per query
+    (per-shard fused query + per-shard top-k + cross-shard merge), the
+    cross-shard merge alone (micro-benchmarked on [S, batch, k] top-k
+    candidates — the only stage sharding ADDS), and measured per-query
+    host bytes — which must stay FLAT in S (the [3]-int survivor sync
+    and the merged [Q, k] are both shard-count independent). Raises if
+    any shard count's ids diverge from the single-device ranking, so the
+    CI leg fails loudly on a shard-invariance regression."""
+    from benchmarks.common import make_catalog
+    import jax.numpy as jnp
+    from repro.core.engine import SearchEngine
+    from repro.kernels import ops as kops
+
+    feats, labels = make_catalog(n)
+    classes = [CLASS_IDS["forest"], CLASS_IDS["water"]]
+    reqs = []
+    for i in range(batch):
+        pos, neg = query_sets(labels, classes[i % len(classes)], 15, 80,
+                              seed=100 + i)
+        reqs.append({"pos_ids": pos, "neg_ids": neg, "model": "dbranch",
+                     "max_results": k})
+
+    # per shard count, both execution modes: the auto mesh (shard_map
+    # across the virtual devices — the pod-shaped configuration) and the
+    # single-device fallback (one device running every shard's program —
+    # what a CPU host, whose "devices" share the same cores anyway,
+    # actually serves fastest); same bits either way. The n_shards=1
+    # single-device engine is ALWAYS measured first — it is the baseline
+    # every ids_match_single / speedup_vs_single figure reads against —
+    # and a mesh variant only runs when the backend really has the
+    # devices for it (otherwise it would silently duplicate the
+    # fallback under a "/mesh/" name)
+    import jax
+    n_dev = len(jax.devices())
+    variants = [(1, "single", {})]
+    for s in shard_counts:
+        if s <= 1:
+            continue
+        if n_dev >= s:
+            variants.append((s, "mesh", {}))
+        variants.append((s, "fallback", {"shard_mesh": False}))
+    # warm every engine first, then measure ROUND-ROBIN so load drift on
+    # a busy host spreads evenly across variants instead of biasing
+    # whichever ran last
+    engines = []
+    for s, mode, mode_kw in variants:
+        engine = SearchEngine(feats, n_subsets=24, subset_dim=6,
+                              block=256, seed=0, n_shards=s, **mode_kw)
+        engine.query_batch(reqs)            # warm: jit + device upload
+        engine.query_batch(reqs)            # ... and the capacity hints
+        engines.append(engine)
+    iters = 5
+    best = [float("inf")] * len(variants)
+    last_outs = [None] * len(variants)
+    for _ in range(iters):
+        for i, engine in enumerate(engines):
+            outs = engine.query_batch(reqs)
+            best[i] = min(best[i], outs[0].query_time_s)
+            last_outs[i] = outs
+
+    rows, base_ids, base_query = [], None, None
+    for i, (s, mode, mode_kw) in enumerate(variants):
+        engine, outs, query_s = engines[i], last_outs[i], best[i]
+        host_bytes = outs[0].stats["batch_host_bytes_transferred"]
+        if base_ids is None:
+            base_ids = [np.asarray(o.ids) for o in outs]
+            base_query = query_s
+        match = int(all(np.array_equal(np.asarray(o.ids), b)
+                        for o, b in zip(outs, base_ids)))
+        if not match:
+            raise AssertionError(
+                f"sharded ids != single-device ids at n_shards={s} — "
+                "shard-count invariance regressed")
+        # merge stage alone: per-shard top-k candidates -> global top-k
+        if s > 1:
+            rng = np.random.default_rng(0)
+            cand_sc = -np.sort(-rng.integers(
+                1, 200, (s, batch, k)).astype(np.int32), axis=2)
+            cand_id = jnp.asarray(rng.integers(0, n, (s, batch, k)),
+                                  jnp.int32)
+            cand_sc = jnp.asarray(cand_sc)
+            kops.merge_topk(cand_id, cand_sc, k=k)[0].block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(10):
+                kops.merge_topk(cand_id, cand_sc,
+                                k=k)[0].block_until_ready()
+            merge_us = 1e6 * (time.perf_counter() - t0) / 10
+        else:
+            merge_us = 0.0
+        rows.append({
+            "name": f"query_time/sharded/n{n}/s{s}/{mode}/b{batch}/k{k}",
+            "us_per_call": round(1e6 * query_s / batch, 1),
+            "query_us_per_query": round(1e6 * query_s / batch, 1),
+            "merge_us": round(merge_us, 1),
+            "host_bytes_per_query": host_bytes // batch,
+            "speedup_vs_single": round(base_query / max(query_s, 1e-9), 2),
+            "ids_match_single": match,
+            "n_shards": s,
+            "n_devices": n_dev,
+            "used_mesh": int(engine.shard_mesh is not None),
+            "n": n,
+            "batch": batch,
+            "k": k,
+        })
+    if verbose:
+        emit(rows, "query_time_sharded")
+        emit_json(rows, out_json)
+        validate_bench_json(out_json, SHARD_REQUIRED_KEYS)
+    return rows
+
+
 # keys every ranked row must carry — the CI quick-bench step fails loudly
 # when the JSON artifact is missing any of them (the wall-time regression
 # PR 2 exposed was only visible by manual inspection before)
@@ -258,21 +382,29 @@ RANKED_REQUIRED_KEYS = (
     "ids_agree",
 )
 
+# ... and the sharded rows (BENCH_shard_query.json), same mechanism
+SHARD_REQUIRED_KEYS = (
+    "name", "us_per_call", "query_us_per_query", "merge_us",
+    "host_bytes_per_query", "speedup_vs_single", "ids_match_single",
+    "n_shards", "used_mesh",
+)
 
-def validate_bench_json(path: str = "BENCH_query_time.json") -> None:
+
+def validate_bench_json(path: str = "BENCH_query_time.json",
+                        required=RANKED_REQUIRED_KEYS) -> None:
     """Fail loudly (SystemExit) unless the bench artifact exists, is
-    non-empty, and every row carries RANKED_REQUIRED_KEYS."""
+    non-empty, and every row carries the required keys."""
     import json
     import os
     if not os.path.exists(path):
         raise SystemExit(f"bench artifact {path} is missing — did the "
-                         "--ranked benchmark run?")
+                         "benchmark run?")
     with open(path) as f:
         rows = json.load(f)
     if not rows:
         raise SystemExit(f"bench artifact {path} has no rows")
     for r in rows:
-        missing = [k for k in RANKED_REQUIRED_KEYS if k not in r]
+        missing = [k for k in required if k not in r]
         if missing:
             raise SystemExit(
                 f"bench artifact {path} row {r.get('name', '?')} is "
@@ -454,11 +586,14 @@ if __name__ == "__main__":
                     help="device-ranked vs legacy scatter path")
     ap.add_argument("--fit", action="store_true",
                     help="batched device fit vs sequential numpy fits")
+    ap.add_argument("--sharded", action="store_true",
+                    help="sharded serving path vs n_shards (DESIGN.md §11)")
     ap.add_argument("--check-json", action="store_true",
-                    help="validate BENCH_query_time.json keys (CI gate)")
+                    help="validate bench artifact keys (CI gate)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--sizes", type=int, nargs="+", default=[20_000, 50_000])
+    ap.add_argument("--shards", type=int, nargs="+", default=[1, 2, 4, 8])
     ap.add_argument("--k", type=int, default=100)
     args = ap.parse_args()
     if args.batched:
@@ -469,7 +604,14 @@ if __name__ == "__main__":
         run_ranked(batch=args.batch, sizes=tuple(args.sizes), k=args.k)
     elif args.fit:
         run_fit(batch=args.batch, n=args.n)
+    elif args.sharded:
+        run_sharded(batch=args.batch, n=max(args.sizes),
+                    shard_counts=tuple(args.shards), k=args.k)
     elif args.check_json:
         validate_bench_json()
+        import os
+        if os.path.exists("BENCH_shard_query.json"):
+            validate_bench_json("BENCH_shard_query.json",
+                                SHARD_REQUIRED_KEYS)
     else:
         run()

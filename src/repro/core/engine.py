@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import knn as knn_mod
@@ -42,8 +43,12 @@ from repro.core.boxes import BoxSet, concat_box_arrays
 from repro.core.dbranch import (DBENS_SUBSET_CANDIDATES, dbens_draws,
                                 fit_dbens, fit_dbranch_best_subset,
                                 fit_select_jax, split_tables)
-from repro.core.index import (ZoneMapIndex, build_index, full_scan,
-                              fused_stats, pad_boxes, query_index)
+from repro.core.index import (ShardedZoneMapIndex, ZoneMapIndex,
+                              build_index, build_sharded_index, full_scan,
+                              fused_stats, pad_boxes, query_index,
+                              query_index_sharded, sharded_fused_stats,
+                              sharded_query_accumulate,
+                              sharded_rank_merge)
 from repro.core.subsets import make_subsets
 from repro.core.trees import fit_decision_tree, fit_random_forest
 from repro.kernels import ops as kops
@@ -88,6 +93,17 @@ class SearchEngine:
     many ranked ids a query returns AND switches ranking to the device
     top-k stage: only [Q, k] crosses device->host. With max_results=None
     the full ranked result list is returned via the host ranking oracle.
+
+    ``n_shards > 1`` (DESIGN.md §11) partitions the catalog row-space
+    into contiguous shards, each with its own per-subset zone-map index;
+    queries run the same fused prune/gather/refine per shard, scores
+    accumulate into per-shard device buffers, and ranking becomes a
+    device-side per-shard top-k + cross-shard merge that preserves the
+    pinned tie-break contract — results are bitwise-identical for every
+    shard count, and ranked host traffic stays O(k) regardless of it.
+    ``shard_mesh``: None auto-builds a "shards" mesh when the backend
+    has >= n_shards devices (shard_map via the repro.compat shim),
+    False forces the single-device vmap fallback, or pass a Mesh.
     """
 
     def __init__(
@@ -104,6 +120,8 @@ class SearchEngine:
         max_results: Optional[int] = None,
         use_jax_fit: bool = True,
         fit_max_nodes: int = 64,
+        n_shards: int = 1,
+        shard_mesh=None,
     ):
         self.x = np.ascontiguousarray(np.asarray(features, np.float32))
         self.n, self.d = self.x.shape
@@ -127,25 +145,63 @@ class SearchEngine:
         # (subset, box-count bucket); sizes the next like-shaped fused
         # gather so steady-state queries never overflow-retry
         self._cap_hints: Dict = {}
+        self.n_shards = max(int(n_shards), 1)
         t0 = time.perf_counter()
         self.subsets = make_subsets(self.d, n_subsets, subset_dim, seed=seed)
-        self.indexes: List[ZoneMapIndex] = [
-            build_index(self.x, dims, block=block, subset_id=k)
-            for k, dims in enumerate(self.subsets)
-        ]
+        if self.n_shards > 1:
+            self.shard_mesh = self._resolve_shard_mesh(shard_mesh)
+            # no mesh -> the single device runs the whole shard set as
+            # ONE flat fused index: capacities are then GLOBAL bounds,
+            # sized exactly like the single-device path's
+            self._shard_flat = self.shard_mesh is None
+            self.indexes = [
+                build_sharded_index(self.x, dims, self.n_shards,
+                                    block=block, subset_id=k)
+                for k, dims in enumerate(self.subsets)
+            ]
+        else:
+            self.shard_mesh = None
+            self._shard_flat = False
+            self.indexes = [
+                build_index(self.x, dims, block=block, subset_id=k)
+                for k, dims in enumerate(self.subsets)
+            ]
         self.build_time_s = time.perf_counter() - t0
         # global per-dim feature range (used by box expansion)
         self.frange = (self.x.min(0), self.x.max(0))
 
     # ------------------------------------------------------------------
+    def _resolve_shard_mesh(self, mesh):
+        """None -> auto: a 1-d "shards" mesh over the first n_shards
+        devices when the backend has enough, else the single-device vmap
+        fallback. False forces the fallback; a Mesh is used as given.
+        Both modes run the SAME per-shard program — the mesh only decides
+        where it executes, never what it returns."""
+        if mesh is False:
+            return None
+        if mesh is not None:
+            return mesh
+        devs = jax.devices()
+        if len(devs) >= self.n_shards:
+            from jax.sharding import Mesh
+            return Mesh(np.asarray(devs[:self.n_shards]), ("shards",))
+        return None
+
+    @staticmethod
+    def _index_nbytes(ix) -> int:
+        return (ix.rows_nbytes if isinstance(ix, ShardedZoneMapIndex)
+                else int(ix.rows.nbytes))
+
     def index_stats(self) -> Dict:
         return {
             "rows": self.n,
             "dims": self.d,
             "n_subsets": len(self.indexes),
             "subset_dim": int(self.subsets.shape[1]),
+            "n_shards": self.n_shards,
             "build_time_s": self.build_time_s,
-            "index_bytes": int(sum(ix.rows.nbytes for ix in self.indexes)),
+            "index_bytes": int(sum(self._index_nbytes(ix)
+                                   for ix in self.indexes)),
             "feature_bytes": int(self.x.nbytes),
         }
 
@@ -216,8 +272,8 @@ class SearchEngine:
             k = min(k_neighbors, self.n)
             ids_k, dists = knn_mod.knn_subset(self.indexes[0], xp, k=k)
             counts = knn_mod.knn_vote(ids_k, self.n)
-            stats = {"path": "index", "bytes_touched": int(
-                self.indexes[0].rows.nbytes)}
+            stats = {"path": "index",
+                     "bytes_touched": self._index_nbytes(self.indexes[0])}
             t_fit = 0.0
             ids, scores = self._rank(counts, pos_ids, neg_ids,
                                      include_training)
@@ -423,7 +479,33 @@ class SearchEngine:
         poison each other's capacity sizing."""
         return (sid, self._pow2ceil(max(int(n_boxes), 1)))
 
-    def _initial_capacity(self, index: ZoneMapIndex,
+    def _mesh_sharded(self) -> bool:
+        return self.n_shards > 1 and not self._shard_flat
+
+    def _cap_blocks(self, index) -> int:
+        """The block count a capacity is bounded by: the single index's
+        blocks, the PER-SHARD block bound on a mesh, or the whole
+        virtual block space in flat fallback mode."""
+        if self._mesh_sharded():
+            return index.nb_max
+        if self.n_shards > 1:
+            return index.n_shards * index.nb_max
+        return index.n_blocks
+
+    def _cap_bucket(self, v: int, n_blocks: int) -> int:
+        """Capacity shape bucket. Single-device (and flat-fallback)
+        capacities pow2-round: few jit keys, and 2x headroom is cheap
+        against ONE big gather. Mesh capacities apply PER SHARD — every
+        shard gathers the bucket — so pow2 rounding the per-shard max
+        would multiply the whole engine's refine bytes by up to 2x per
+        shard; multiples of 8 keep the waste bounded at 7 blocks/shard
+        while the key count stays ~n_blocks/8 (per-shard block counts
+        are small)."""
+        v = max(int(v), 1)
+        b = -(-v // 8) * 8 if self._mesh_sharded() else self._pow2ceil(v)
+        return min(b, n_blocks)
+
+    def _initial_capacity(self, index,
                           n_boxes: Optional[int] = None) -> int:
         """Gather capacity for a subset's fused call: the last observed
         survivor count for a like-sized boxset when one is known (the
@@ -431,14 +513,21 @@ class SearchEngine:
         size capacity just above the typical survivor count, and now the
         engine does it itself), otherwise the capacity_frac cold-start
         policy. Results stay exact either way: an under-sized guess is
-        caught by the batched overflow check and retried."""
+        caught by the batched overflow check and retried. Mesh-sharded
+        hints track the PER-SHARD max and carry 25% headroom (the
+        single-path pow2 rounding supplies headroom implicitly; the
+        tighter per-shard bucket must add its own or every drifting
+        query retries)."""
+        nbk = self._cap_blocks(index)
         if n_boxes is not None:
             hint = self._cap_hints.get(self._cap_key(index.subset_id,
                                                      n_boxes))
             if hint is not None:
-                return min(self._pow2ceil(max(hint, 1)), index.n_blocks)
-        cap = max(1, int(index.n_blocks * self.capacity_frac))
-        return min(self._pow2ceil(cap), index.n_blocks)
+                if self._mesh_sharded():
+                    hint += -(-hint // 4)
+                return self._cap_bucket(hint, nbk)
+        cap = max(1, int(nbk * self.capacity_frac))
+        return self._cap_bucket(cap, nbk)
 
     @staticmethod
     def _new_agg() -> Dict:
@@ -504,6 +593,8 @@ class SearchEngine:
         common case is exactly one sync of a few int32s per query batch —
         the per-subset blocking int(n_hit) round-trips of the old path
         are gone."""
+        if self.n_shards > 1:
+            return self._device_scores_sharded(jobs, nq)
         scores = jnp.zeros((self.n, nq), jnp.int32)
         agg = self._new_agg()
         pending = [(sid, merged, owner,
@@ -558,12 +649,98 @@ class SearchEngine:
             agg["retried_subsets"] += len(pending)
         return scores, self._finalize_agg(agg)
 
+    def _device_scores_sharded(self, jobs, nq: int):
+        """_device_scores over the sharded indexes (DESIGN.md §11): the
+        persistent score buffer is [S, Nloc_max, nq] — one shard-local
+        buffer per shard, stacked — and each subset runs ONE device
+        program (vmap on one device, shard_map across the mesh) that
+        fuses the per-shard query AND the conditional accumulation, so
+        a subset costs one dispatch instead of two.
+
+        The deferred-sync contract survives sharding with FLAT host
+        traffic: per subset the per-shard survivor counts are reduced ON
+        DEVICE to three ints (max, sum of refined, sum) before the one
+        batched round sync, so the sync is [J, 3] int32 regardless of
+        shard count. Overflow is per subset against the PER-SHARD
+        capacity (every shard gathers the same static bound); the fused
+        program discards an overflowed subset's accumulation on device
+        and the retry re-runs it with capacity >= the observed max."""
+        sidx0 = self.indexes[0]
+        scores = jnp.zeros((self.n_shards, sidx0.n_loc_max, nq), jnp.int32)
+        agg = self._new_agg()
+        agg["n_shards"] = self.n_shards
+        pending = [(sid, merged, owner,
+                    self._initial_capacity(self.indexes[sid],
+                                           merged.n_boxes))
+                   for sid, merged, owner in jobs]
+        while pending:
+            launched = []
+            for sid, merged, owner, cap in pending:
+                sindex = self.indexes[sid]
+                lo, hi, owner_p = pad_boxes(merged.lo, merged.hi, owner)
+                onehot = jnp.asarray(
+                    (owner_p[:, None] == np.arange(nq)[None]
+                     ).astype(np.float32))
+                scores, st3 = sharded_query_accumulate(
+                    sindex, scores, jnp.asarray(lo), jnp.asarray(hi),
+                    onehot, capacity=cap, mesh=self.shard_mesh,
+                    use_pallas=self.use_pallas)
+                launched.append((sid, merged, owner, cap, st3))
+            # ONE batched sync, [3] ints per subset — flat in shard count
+            hit_stats = np.asarray(jnp.stack([l[4] for l in launched]))
+            agg["n_host_syncs"] += 1
+            agg["host_bytes_transferred"] += int(hit_stats.nbytes)
+            pending = []
+            for (sid, merged, owner, cap, _), st in zip(launched,
+                                                        hit_stats):
+                sindex = self.indexes[sid]
+                mx, sum_min = int(st[0]), int(st[1])
+                key = self._cap_key(sid, merged.n_boxes)
+                self._cap_hints[key] = max(
+                    mx, (self._cap_hints.get(key, 0) * 3) // 4)
+                if mx > cap:
+                    # the discarded attempt still gathered (and priced)
+                    # cap blocks per shard (or globally, flat mode) of
+                    # device traffic
+                    gathered = cap if self._shard_flat \
+                        else self.n_shards * cap
+                    agg["blocks_gathered"] += gathered
+                    agg["bytes_touched"] += int(
+                        gathered * sindex.block * len(sindex.dims) * 4)
+                    pending.append((sid, merged, owner, self._cap_bucket(
+                        mx, self._cap_blocks(sindex))))
+                    continue
+                self._accumulate_agg(
+                    agg, sharded_fused_stats(sindex, mx, sum_min, cap,
+                                             merged.n_boxes,
+                                             flat=self._shard_flat),
+                    merged.n_boxes)
+            agg["retried_subsets"] += len(pending)
+        return scores, self._finalize_agg(agg)
+
+    def _scores_to_host(self, scores_dev) -> np.ndarray:
+        """[N, Q] int32 host counts in GLOBAL row order from the device
+        score buffer — the single transfer the max_results=None path
+        pays. Sharded buffers are [S, Nloc_max, Q]; each shard's real
+        rows land back at its global offset (padding never copied)."""
+        if self.n_shards == 1:
+            return np.asarray(scores_dev)
+        sc = np.asarray(scores_dev)
+        out = np.zeros((self.n, sc.shape[2]), sc.dtype)
+        offs = self.indexes[0].offsets
+        for s in range(self.n_shards):
+            nl = int(offs[s + 1] - offs[s])
+            if nl:
+                out[offs[s]:offs[s] + nl] = sc[s, :nl]
+        return out
+
     def _index_inference(self, boxsets: List[BoxSet]):
         """Host/oracle range-query path (use_fused=False): per-subset
         query_index with the host prune/gather reference implementation.
         Kept as the correctness oracle for the device-resident path."""
         counts = np.zeros(self.n, np.int64)
         agg = self._new_agg()
+        qfn = query_index_sharded if self.n_shards > 1 else query_index
         by_subset: Dict[int, List[BoxSet]] = {}
         for bs in boxsets:
             by_subset.setdefault(bs.subset_id, []).append(bs)
@@ -571,8 +748,8 @@ class SearchEngine:
             merged = group[0]
             for g in group[1:]:
                 merged = merged.concatenate(g)
-            c, st = query_index(self.indexes[sid], merged,
-                                use_pallas=self.use_pallas)
+            c, st = qfn(self.indexes[sid], merged,
+                        use_pallas=self.use_pallas)
             counts += c
             self._accumulate_agg(agg, st, merged.n_boxes)
         return counts, self._finalize_agg(agg)
@@ -596,7 +773,7 @@ class SearchEngine:
             jobs, bound = self._make_jobs([(bs, 0) for bs in boxsets], 1)
         scores_dev, stats = self._device_scores(jobs, 1)
         if mr is None:
-            counts = np.asarray(scores_dev)[:, 0]
+            counts = self._scores_to_host(scores_dev)[:, 0]
             stats["host_bytes_transferred"] += int(counts.nbytes)
             ids, scores = self._rank(counts, pos_ids, neg_ids,
                                      include_training)
@@ -626,8 +803,14 @@ class SearchEngine:
         """Device ranking (kops.rank_topk) over the [N, Q] device score
         buffer; only [Q, k] ids/scores plus [Q] valid counts cross to the
         host. masks: per-query (pos, neg, include_training). Returns
-        ([(ids, scores)] aligned with masks, host bytes transferred)."""
-        n, nq = int(scores_dev.shape[0]), int(scores_dev.shape[1])
+        ([(ids, scores)] aligned with masks, host bytes transferred).
+
+        Sharded engines rank the [S, Nloc_max, Q] buffer with the
+        per-shard top-k + cross-shard merge (core/index.
+        sharded_rank_merge): identical tie-break contract, identical
+        bits, still O(k) host traffic — training ids stay GLOBAL here
+        and each shard drops the ones outside its row range."""
+        n, nq = self.n, len(masks)
         # k is a static jit arg: pow2-bucket it (like capacities and the
         # tmax pad) so varied per-request max_results share compilations;
         # callers slice the valid prefix down to their own k
@@ -640,9 +823,14 @@ class SearchEngine:
             if not inc:
                 tr = np.concatenate([pos, neg])
                 tids[q, :len(tr)] = tr
-        ids_k, scores_k, n_valid = kops.rank_topk(
-            scores_dev, jnp.asarray(tids), k=kk, score_bound=score_bound,
-            scores_transposed=True)
+        if self.n_shards > 1:
+            ids_k, scores_k, n_valid = sharded_rank_merge(
+                self.indexes[0], scores_dev, jnp.asarray(tids), k=kk,
+                score_bound=score_bound, mesh=self.shard_mesh)
+        else:
+            ids_k, scores_k, n_valid = kops.rank_topk(
+                scores_dev, jnp.asarray(tids), k=kk,
+                score_bound=score_bound, scores_transposed=True)
         ids_k = np.asarray(ids_k)
         scores_k = np.asarray(scores_k)
         n_valid = np.asarray(n_valid)
@@ -798,7 +986,7 @@ class SearchEngine:
             # any full-result request forces the score buffer to the host
             # ONCE; ranking shares the oracle so truncated requests still
             # see the exact device-ranking prefix
-            counts = np.ascontiguousarray(np.asarray(scores_dev).T)
+            counts = np.ascontiguousarray(self._scores_to_host(scores_dev).T)
             agg["host_bytes_transferred"] += int(counts.nbytes)
             ranked = []
             for q, (_, _, _, pos, neg, incl, m, _) in enumerate(fitted):

@@ -16,8 +16,9 @@ each shard prunes/refines locally (distributed_query).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -131,7 +132,9 @@ def build_index(x: np.ndarray, dims: np.ndarray, block: int = 1024,
             [rows, np.full((pad, rows.shape[1]), np.inf, np.float32)])
         perm = np.concatenate([perm, np.full(pad, -1, perm.dtype)])
     nb = rows.shape[0] // block
-    blocks = rows.reshape(nb, block, -1)
+    # explicit trailing dim: -1 cannot be inferred for an EMPTY shard
+    # (zero rows -> zero blocks), which sharded partitions may produce
+    blocks = rows.reshape(nb, block, sub.shape[1])
     # zone maps over REAL rows only: padded +inf rows would otherwise leak
     # into the tail block's zhi, making it overlap every box and inflating
     # blocks_touched/bytes_touched (the tail block has >= 1 real row, so
@@ -326,6 +329,415 @@ def full_scan(x: np.ndarray, lo: np.ndarray, hi: np.ndarray,
 
 
 # ----------------------------------------------------------------------
+# sharded index: the catalog row-space partitioned across devices
+# ----------------------------------------------------------------------
+
+def shard_offsets(n: int, n_shards: int) -> np.ndarray:
+    """[S + 1] global row offsets of an even ceil-split partition: every
+    shard owns ceil(n / S) rows except a RAGGED tail (the last occupied
+    shard is short; pathological tiny catalogs may leave trailing shards
+    empty — the stacked device mirrors make empty shards inert rather
+    than illegal, so shard-count invariance holds all the way down)."""
+    per = -(-max(int(n), 1) // n_shards)
+    return np.minimum(np.arange(n_shards + 1, dtype=np.int64) * per, n)
+
+
+@dataclass
+class ShardedZoneMapIndex:
+    """One feature subset's index, row-range-partitioned across shards.
+
+    Shard s owns global rows [offsets[s], offsets[s+1]) and holds its OWN
+    ZoneMapIndex over them (Morton order is shard-local; a row's global
+    id is its shard offset + local id, so ids never need a lookup table).
+    The device mirror stacks every shard to the SAME padded geometry —
+    [S, NBmax, block, d'] rows, [S, NBmax, d'] zones, [S, Nloc_max]
+    inverse permutations — so one program (vmapped on a single device,
+    shard_map'd across a mesh) serves every shard: padded zones are empty
+    intervals that survive no prune, padded rows are +inf and inside no
+    box, and padded inverse-permutation slots point at ``NBmax * block``,
+    which accumulate_scores' extended slot table resolves to a zero
+    gather. Query results are therefore bitwise-independent of the shard
+    count (tests/test_sharded_query.py pins it)."""
+    dims: np.ndarray
+    shards: List[ZoneMapIndex]    # per-shard local indexes
+    offsets: np.ndarray           # [S + 1] global row offsets
+    block: int
+    n_rows: int
+    subset_id: int = -1
+    _dev: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = field(
+        default=None, repr=False, compare=False)
+    _dev_inv_perm: Optional[jax.Array] = field(
+        default=None, repr=False, compare=False)
+    # mesh the cached mirrors were committed for (device placement only —
+    # the VALUES are identical however the arrays are laid out)
+    _dev_mesh: object = field(default=None, repr=False, compare=False)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def nb_max(self) -> int:
+        """Per-shard block-count bound — the stacked mirror's NBmax."""
+        return max(max(sh.n_blocks for sh in self.shards), 1)
+
+    @property
+    def n_blocks(self) -> int:
+        """PER-SHARD blocks (== nb_max): capacities bound the gather each
+        shard performs, so capacity sizing reads the per-shard figure
+        exactly like the single-device index exposes its own."""
+        return self.nb_max
+
+    @property
+    def total_blocks(self) -> int:
+        return sum(sh.n_blocks for sh in self.shards)
+
+    @property
+    def n_loc_max(self) -> int:
+        """Rows of the widest shard — the stacked score-buffer width."""
+        return max(max(sh.n_rows for sh in self.shards), 1)
+
+    @property
+    def shard_rows(self) -> np.ndarray:
+        return np.asarray([sh.n_rows for sh in self.shards], np.int64)
+
+    @property
+    def rows_nbytes(self) -> int:
+        return int(sum(sh.rows.nbytes for sh in self.shards))
+
+    @staticmethod
+    def _put(arr: np.ndarray, mesh) -> jax.Array:
+        """Upload sharded over the mesh's "shards" axis (axis 0) so the
+        per-call jit never pays a reshard — or plainly when no mesh."""
+        if mesh is None:
+            return jnp.asarray(arr)
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        return jax.device_put(arr, NamedSharding(mesh, P("shards")))
+
+    def device_arrays(self, mesh=None) -> Tuple[jax.Array, jax.Array,
+                                                jax.Array]:
+        """(rows4 [S, NBmax, block, d'], zlo3, zhi3 [S, NBmax, d']),
+        uploaded ONCE and cached — same contract as the single-device
+        mirror, one stacked copy for the whole shard set, committed
+        shard-per-device when a mesh is given."""
+        if self._dev is None or self._dev_mesh is not mesh:
+            s, nbm, d = self.n_shards, self.nb_max, len(self.dims)
+            rows4 = np.full((s, nbm, self.block, d), np.inf, np.float32)
+            zlo3 = np.full((s, nbm, d), np.inf, np.float32)
+            zhi3 = np.full((s, nbm, d), -np.inf, np.float32)
+            for i, sh in enumerate(self.shards):
+                nb = sh.n_blocks
+                rows4[i, :nb] = sh.rows.reshape(nb, self.block, d)
+                zlo3[i, :nb] = sh.zlo
+                zhi3[i, :nb] = sh.zhi
+            self._dev = (self._put(rows4, mesh), self._put(zlo3, mesh),
+                         self._put(zhi3, mesh))
+            self._dev_mesh = mesh
+            self._dev_inv_perm = None      # re-commit alongside
+        return self._dev
+
+    def device_inv_perm(self, mesh=None) -> jax.Array:
+        """[S, Nloc_max] int32 shard-local inverse permutations, padded
+        with ``NBmax * block`` — the sentinel accumulate_scores' extended
+        slot table maps to a zero gather, so a ragged shard's padding
+        rows always score 0 and can never rank.
+
+        With ``mesh=None`` the VIRTUAL formulation comes back instead:
+        each shard's Morton positions offset by its block range in the
+        flattened [S * NBmax] block space (padding -> the global
+        sentinel), so the whole shard set can run as ONE fused index on
+        a single device (the fallback's flat fast path)."""
+        if self._dev_inv_perm is None or self._dev_mesh is not mesh:
+            s, nbm = self.n_shards, self.nb_max
+            pad = (s if mesh is None else 1) * nbm * self.block
+            inv = np.full((s, self.n_loc_max), pad, np.int32)
+            for i, sh in enumerate(self.shards):
+                if sh.n_rows:
+                    base = i * nbm * self.block if mesh is None else 0
+                    inv[i, :sh.n_rows] = \
+                        np.asarray(sh.device_inv_perm()) + base
+            self.device_arrays(mesh)       # keep one mesh for the mirror
+            self._dev_inv_perm = self._put(inv, mesh)
+        return self._dev_inv_perm
+
+    def stats(self) -> dict:
+        return {"n_shards": self.n_shards, "blocks": self.total_blocks,
+                "blocks_per_shard_max": self.nb_max,
+                "block_rows": self.block, "rows": self.n_rows,
+                "shard_rows": self.shard_rows.tolist(),
+                "dims": self.dims.tolist(), "bytes": self.rows_nbytes}
+
+
+def build_sharded_index(x: np.ndarray, dims: np.ndarray, n_shards: int,
+                        block: int = 1024,
+                        subset_id: int = -1) -> ShardedZoneMapIndex:
+    """Partition the catalog row-space into ``n_shards`` contiguous
+    ranges and build one ZoneMapIndex per range. Global ids are offset +
+    local id, so the partition IS the id map."""
+    n = np.asarray(x).shape[0]
+    offs = shard_offsets(n, n_shards)
+    shards = [build_index(np.asarray(x)[offs[s]:offs[s + 1]], dims,
+                          block=block, subset_id=subset_id)
+              for s in range(n_shards)]
+    return ShardedZoneMapIndex(np.asarray(dims), shards, offs, block, n,
+                               subset_id)
+
+
+def query_index_sharded(sindex: ShardedZoneMapIndex, boxes: BoxSet,
+                        use_pallas: bool = True) -> Tuple[np.ndarray, dict]:
+    """Host-oracle counterpart of query_index for a sharded index:
+    per-shard query_index, counts reassembled into GLOBAL row order.
+    Counts are bitwise those of the unsharded index (membership is a
+    per-row predicate — the partition only relocates rows)."""
+    out = np.zeros(sindex.n_rows, np.int32)
+    agg = {"blocks_touched": 0, "blocks_total": 0, "rows_touched": 0,
+           "bytes_touched": 0, "bytes_total": 0}
+    for sh, o0 in zip(sindex.shards, sindex.offsets[:-1]):
+        if sh.n_rows == 0:
+            continue
+        c, st = query_index(sh, boxes, use_pallas=use_pallas)
+        out[o0:o0 + sh.n_rows] = c
+        for k in agg:
+            agg[k] += st[k]
+    agg["prune_fraction"] = 1.0 - agg["blocks_touched"] / max(
+        agg["blocks_total"], 1)
+    agg["n_shards"] = sindex.n_shards
+    return out, agg
+
+
+def _shard_call(local, mesh, n_sharded: int, n_repl: int):
+    """Lift a per-shard ``local`` to a function over stacked [S, ...]
+    arrays: vmap over the leading axis when ``mesh`` is None (the
+    single-device fallback — same math, same bits), else shard_map over
+    the mesh's "shards" axis via the repro.compat shim (jax 0.4.x keeps
+    working). ``local`` sees unbatched per-shard arrays either way;
+    scalars come back as [S]. The first ``n_sharded`` arguments are
+    stacked/sharded, the rest replicated."""
+    if mesh is None:
+        return jax.vmap(local, in_axes=(0,) * n_sharded + (None,) * n_repl)
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    def wrapped(*args):
+        sh = [a[0] for a in args[:n_sharded]]     # strip the size-1 axis
+        out = local(*sh, *args[n_sharded:])
+        return tuple(jnp.asarray(o)[None] for o in out)
+
+    return shard_map(wrapped, mesh=mesh,
+                     in_specs=(P("shards"),) * n_sharded + (P(),) * n_repl,
+                     out_specs=P("shards"), check_vma=False)
+
+
+# the jit-builder caches are BOUNDED: their keys hold Mesh references,
+# and a serving process that periodically rebuilds its engine (catalog
+# refresh) must not retain every old mesh + compiled closure forever
+@functools.lru_cache(maxsize=128)
+def _flat_query_acc_fn(capacity: int, use_pallas: bool):
+    """Single-device fallback scoring: the stacked shard mirrors run as
+    ONE fused index over the [S * NBmax] virtual block space (padding
+    blocks have empty zones and survive no prune), with the virtual
+    inverse permutation folding counts straight into the [S, Nloc_max,
+    Q] buffer's flat view. One device doing all shards' work pays the
+    SINGLE-index cost — one global capacity, no per-shard rounding waste
+    — while returning the same bits as the mesh formulation.
+    ``capacity`` is GLOBAL here (the engine sizes it like the
+    single-device path)."""
+
+    def fn(rows4, zlo3, zhi3, inv_virt, scores, lo, hi, oh):
+        s, nbm, block, d = rows4.shape
+        nlm, q = scores.shape[1], scores.shape[2]
+        counts, cand, n_hit = kops.fused_query(
+            rows4.reshape(s * nbm, block, d),
+            zlo3.reshape(s * nbm, d), zhi3.reshape(s * nbm, d),
+            lo, hi, oh, capacity=capacity, use_pallas=use_pallas)
+        flat = scores.reshape(s * nlm, q)
+        acc = kops.accumulate_scores(flat, counts, cand,
+                                     inv_virt.reshape(s * nlm),
+                                     nb=s * nbm)
+        # same [3]-int stat contract as the mesh path, with the GLOBAL
+        # survivor count in every slot (there is no per-shard max here)
+        st3 = jnp.stack([n_hit, jnp.minimum(n_hit, capacity), n_hit])
+        ok = n_hit <= capacity
+        return jnp.where(ok, acc, flat).reshape(scores.shape), st3
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=128)
+def _sharded_query_acc_fn(mesh, capacity: int, use_pallas: bool, nb: int):
+    """jit'd (and cached — eager shard_map re-traces per CALL, which is
+    exactly the dispatch overhead the fused path exists to avoid) fused
+    per-shard query + survivor-stat reduction + CONDITIONAL score
+    accumulation, all as ONE device program per subset."""
+
+    def local(rows3, zlo, zhi, inv, sc, lo, hi, oh):
+        counts, cand, n_hit = kops.fused_query(
+            rows3, zlo, zhi, lo, hi, oh, capacity=capacity,
+            use_pallas=use_pallas)
+        acc = kops.accumulate_scores(sc, counts, cand, inv, nb=nb)
+        return acc, n_hit
+
+    inner = _shard_call(local, mesh, 5, 3)
+
+    def fn(rows4, zlo3, zhi3, inv2, scores, lo, hi, oh):
+        acc, n_hit = inner(rows4, zlo3, zhi3, inv2, scores, lo, hi, oh)
+        # reduce the [S] survivor counts to THREE ints inside the program
+        # (max -> retry capacity, sum-refined + sum -> stats): the one
+        # batched host sync stays flat in shard count
+        st3 = jnp.stack([n_hit.max(),
+                         jnp.minimum(n_hit, capacity).sum(),
+                         n_hit.sum()])
+        # keep the accumulation ONLY if no shard overflowed: an overflow
+        # dropped survivors, so the whole subset re-runs at a bigger
+        # capacity next round (speculating the common no-overflow case
+        # saves a second dispatch per subset; the wasted adds on the
+        # rare overflow cost less than that dispatch did)
+        ok = st3[0] <= capacity
+        return jnp.where(ok, acc, scores), st3
+
+    return jax.jit(fn)
+
+
+def sharded_query_accumulate(sindex: ShardedZoneMapIndex,
+                             scores: jax.Array, blo: jax.Array,
+                             bhi: jax.Array, onehot: jax.Array, *,
+                             capacity: int, mesh=None,
+                             use_pallas: bool = True):
+    """One subset's boxes against every shard, ONE device program: each
+    shard runs the SAME fused zone-prune -> bounded gather -> segmented
+    box-scan (kernels/ops.fused_query) over its slice of the stacked
+    device mirror and folds its counts into its [Nloc_max, Q] slice of
+    the score buffer (kernels/ops.accumulate_scores; the extended slot
+    table keeps ragged-shard padding at 0). ``capacity`` bounds the
+    gather PER SHARD; if ANY shard overflows the accumulation is
+    discarded on device and the caller retries the subset.
+
+    Returns (scores' [S, Nloc_max, Q],
+             hit_stats [3] int32 device scalars =
+                 (max n_hit, sum of min(n_hit, C), sum n_hit)) —
+    nothing crosses to the host here.
+
+    With ``mesh=None`` (single device) the shard set runs as ONE fused
+    index over the virtual block space instead (_flat_query_acc_fn):
+    identical bits, single-index cost — and ``capacity`` is then the
+    GLOBAL gather bound, with the returned stats carrying the global
+    survivor count in each slot."""
+    rows4, zlo3, zhi3 = sindex.device_arrays(mesh)
+    if mesh is None:
+        fn = _flat_query_acc_fn(int(capacity), bool(use_pallas))
+    else:
+        fn = _sharded_query_acc_fn(mesh, int(capacity), bool(use_pallas),
+                                   sindex.nb_max)
+    return fn(rows4, zlo3, zhi3, sindex.device_inv_perm(mesh), scores,
+              blo, bhi, onehot)
+
+
+@functools.lru_cache(maxsize=128)
+def _sharded_rank_fn(mesh, k: int, score_bound, method,
+                     flat: bool = False):
+    if mesh is None and flat:
+        # single-device fallback: the ceil-split partition makes virtual
+        # position (shard * Nloc_max + local) EQUAL the global row id
+        # (offsets are Nloc_max multiples; tail/empty-shard padding rows
+        # carry score 0 and sit past n, so they never rank and the
+        # catalog-size training-id pad lands on them harmlessly) — so
+        # one flat rank_topk over the reshaped buffer IS the per-shard
+        # top-k + merge, minus S-1 extraction passes the one device
+        # would run back to back
+        def flat(scores, offs, nloc, tids):
+            s, nlm, q = scores.shape
+            return kops.rank_topk(scores.reshape(s * nlm, q), tids,
+                                  k=min(k, s * nlm),
+                                  score_bound=score_bound, method=method,
+                                  scores_transposed=True)
+
+        return jax.jit(flat)
+
+    local = functools.partial(kops.shard_local_topk, k=k,
+                              score_bound=score_bound, method=method)
+    inner = _shard_call(lambda s, o, nl, t: local(s, t, o, nl), mesh, 3, 1)
+
+    def fn(scores, offs, nloc, tids):
+        gids, sc, _ = inner(scores, offs, nloc, tids)
+        if mesh is not None:
+            # replicate the tiny [S, Q, k] candidate lists BEFORE the
+            # merge sort: without the constraint GSPMD partitions the
+            # sort over the flattened shard axis and runs a distributed
+            # sort — orders of magnitude more collective traffic than
+            # the one small all-gather these lists actually need
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            rep = NamedSharding(mesh, P())
+            gids = jax.lax.with_sharding_constraint(gids, rep)
+            sc = jax.lax.with_sharding_constraint(sc, rep)
+        return kops.merge_topk(gids, sc, k=k)
+
+    return jax.jit(fn)
+
+
+def sharded_rank_merge(sindex: ShardedZoneMapIndex, scores: jax.Array,
+                       train_ids: jax.Array, *, k: int,
+                       score_bound: Optional[int] = None, mesh=None,
+                       method: Optional[str] = None):
+    """Device-side per-shard top-k (kernels/ops.shard_local_topk: local
+    rank_topk + local->global id remap) followed by the cross-shard
+    merged global top-k (kernels/ops.merge_topk), as ONE cached jit.
+    Honors the pinned tie-break contract end to end — descending score,
+    ascending GLOBAL id — so the result is bitwise the single-device
+    ranking, and only the merged [Q, k] ever needs to reach the host:
+    per-query host traffic stays O(k) regardless of shard count.
+
+    ``score_bound`` is pow2-bucketed before keying the jit cache — a
+    LOOSER bound is always valid (it only sizes the threshold search /
+    method choice), and bucketing keeps the cache from growing with
+    every distinct per-query box count."""
+    sb = (None if score_bound is None
+          else 1 << int(max(score_bound, 1)).bit_length())
+    # the flat single-device shortcut needs virtual position == global
+    # id, i.e. the standard ceil-split offsets; anything custom falls
+    # back to the general per-shard + merge formulation
+    nlm = sindex.n_loc_max
+    flat = bool(np.array_equal(
+        sindex.offsets[:-1],
+        np.minimum(np.arange(sindex.n_shards, dtype=np.int64) * nlm,
+                   sindex.n_rows)))
+    fn = _sharded_rank_fn(mesh, int(k), sb, method, flat)
+    return fn(scores, jnp.asarray(sindex.offsets[:-1], jnp.int32),
+              jnp.asarray(sindex.shard_rows, jnp.int32), train_ids)
+
+
+def sharded_fused_stats(sindex: ShardedZoneMapIndex, max_hit: int,
+                        sum_min_hit: int, capacity: int, n_boxes: int,
+                        flat: bool = False) -> dict:
+    """fused_stats for the sharded path. The gather figures price what
+    the devices really read — every shard gathers ``capacity`` blocks
+    (``flat`` mode gathers ``capacity`` GLOBALLY — one device, one
+    bound) — and ``survivors`` reports the quantity the retry capacity
+    must cover (per-shard max, or the global count in flat mode), while
+    ``blocks_touched`` sums the genuinely-refined survivor blocks
+    (comparable to the host path)."""
+    s, d = sindex.n_shards, len(sindex.dims)
+    gathered = capacity if flat else s * capacity
+    return {
+        "blocks_touched": int(sum_min_hit),
+        "blocks_gathered": gathered,
+        "blocks_total": sindex.total_blocks,
+        "rows_touched": int(gathered * sindex.block),
+        "bytes_touched": int(gathered * sindex.block * d * 4),
+        "bytes_total": sindex.rows_nbytes,
+        "prune_fraction": 1.0 - gathered / max(sindex.total_blocks, 1),
+        "capacity": capacity,
+        "survivors": int(max_hit),
+        "overflowed": int(max_hit) > capacity,
+        "n_boxes": n_boxes,
+        "n_shards": s,
+    }
+
+
+# ----------------------------------------------------------------------
 # distributed query (shard_map over the data axis)
 # ----------------------------------------------------------------------
 
@@ -358,6 +770,32 @@ def distributed_query(index_rows: jax.Array, zlo: jax.Array, zhi: jax.Array,
     return fn(index_rows, zlo, zhi, blo, bhi)
 
 
+def pruned_local_step(block: int, capacity: int):
+    """The production per-shard step of the pruned distributed query:
+    zone-prune local zones, gather <= ``capacity`` surviving blocks
+    (static shape — the padded-result idiom), refine only those, scatter
+    counts back to block positions. Returns
+    ``local(rows [nb_loc, block, d'], zlo, zhi, blo, bhi) -> [nb_loc *
+    block] int32`` — the function distributed_query_pruned shard_maps AND
+    the one launch/search_dryrun.py lowers at paper scale, so the HLO the
+    dry-run prices is exactly the step the engine would run."""
+
+    def local(rows, lo_z, hi_z, lo_b, hi_b):
+        nb_loc = rows.shape[0]
+        m = kref.zone_prune_ref(lo_z, hi_z, lo_b, hi_b).any(1)   # [nb_loc]
+        cand, = jnp.nonzero(m, size=capacity, fill_value=0)      # [C]
+        valid = jnp.arange(capacity) < m.sum()
+        sel = rows[cand]                                         # [C, blk, d]
+        counts = kref.box_scan_ref(sel.reshape(-1, sel.shape[-1]),
+                                   lo_b, hi_b).reshape(capacity, block)
+        counts = counts * valid[:, None]
+        out = jnp.zeros((nb_loc, block), jnp.int32)
+        out = out.at[cand].max(counts)     # cand may repeat at fill slots
+        return out.reshape(-1)
+
+    return local
+
+
 def distributed_query_pruned(index_rows: jax.Array, zlo: jax.Array,
                              zhi: jax.Array, blo: jax.Array, bhi: jax.Array,
                              mesh, block: int, capacity: int) -> jax.Array:
@@ -373,21 +811,8 @@ def distributed_query_pruned(index_rows: jax.Array, zlo: jax.Array,
 
     from repro.compat import shard_map
 
-    def local(rows, lo_z, hi_z, lo_b, hi_b):
-        nb_loc = rows.shape[0]
-        m = kref.zone_prune_ref(lo_z, hi_z, lo_b, hi_b).any(1)   # [nb_loc]
-        cand, = jnp.nonzero(m, size=capacity, fill_value=0)      # [C]
-        valid = jnp.arange(capacity) < m.sum()
-        sel = rows[cand]                                         # [C, blk, d]
-        counts = kref.box_scan_ref(sel.reshape(-1, sel.shape[-1]),
-                                   lo_b, hi_b).reshape(capacity, block)
-        counts = counts * valid[:, None]
-        out = jnp.zeros((nb_loc, block), jnp.int32)
-        out = out.at[cand].max(counts)     # cand may repeat at fill slots
-        return out.reshape(-1)
-
     fn = shard_map(
-        local, mesh=mesh,
+        pruned_local_step(block, capacity), mesh=mesh,
         in_specs=(P("data"), P("data"), P("data"), P(), P()),
         out_specs=P("data"),
         check_vma=False)

@@ -15,14 +15,36 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.index import ZoneMapIndex
+from repro.core.index import ShardedZoneMapIndex, ZoneMapIndex
 from repro.kernels import ops as kops
 
 
-def knn_subset(index: ZoneMapIndex, queries_full: np.ndarray, k: int = 1000
+def knn_subset(index, queries_full: np.ndarray, k: int = 1000
                ) -> Tuple[np.ndarray, np.ndarray]:
     """Top-k over the index's subset dims. queries_full: [Q, D_full].
-    Returns (ids [Q, k] original row ids, dists [Q, k])."""
+    Returns (ids [Q, k] original row ids, dists [Q, k]).
+
+    A ShardedZoneMapIndex follows the same local-topk -> merge shape as
+    the ranked query path: per-shard top-k over the shard's Morton rows,
+    local ids offset to global, then a (distance, global id) merge — the
+    id tie key makes duplicate-distance results shard-count invariant."""
+    if isinstance(index, ShardedZoneMapIndex):
+        q = jnp.asarray(
+            np.asarray(queries_full, np.float32)[:, index.dims])
+        k = min(k, index.n_rows)
+        per_ids, per_d = [], []
+        for sh, off in zip(index.shards, index.offsets[:-1]):
+            if sh.n_rows == 0:
+                continue
+            kk = min(k, sh.n_rows)
+            d, idx = kops.knn_topk(jnp.asarray(sh.rows[:sh.n_rows]), q, kk)
+            per_ids.append(sh.perm[np.asarray(idx)] + int(off))
+            per_d.append(np.asarray(d))
+        all_ids = np.concatenate(per_ids, axis=1)
+        all_d = np.concatenate(per_d, axis=1)
+        order = np.lexsort((all_ids, all_d), axis=1)[:, :k]
+        return (np.take_along_axis(all_ids, order, 1),
+                np.take_along_axis(all_d, order, 1))
     q = jnp.asarray(np.asarray(queries_full, np.float32)[:, index.dims])
     rows = jnp.asarray(index.rows[: index.n_rows])
     k = min(k, index.n_rows)

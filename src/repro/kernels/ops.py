@@ -189,17 +189,21 @@ def accumulate_scores(scores: jax.Array, counts: jax.Array, cand: jax.Array,
     ids; inv_perm: [N] int32 original-row -> Morton-position map
     (ZoneMapIndex.device_inv_perm); nb: the index's block count (static).
 
-    Formulated as a GATHER, not a scatter: a tiny [nb] block->slot table
-    (C-element scatter — nonzero emits survivors in ascending block
+    Formulated as a GATHER, not a scatter: a tiny [nb + 1] block->slot
+    table (C-element scatter — nonzero emits survivors in ascending block
     order, so a genuine survivor's slot always beats the zero-count fill
     slots that alias block 0 under min) lets every original row pull its
     own count straight out of the compact fused result through the
     inverse permutation — one dense vectorised pass, no row-granular
     scatter. Blocks absent from ``cand`` resolve out of range and gather
-    0 (mode="fill"). Nothing here ever touches the host — this replaces
-    the old [Q, n_rows] host scatter."""
+    0 (mode="fill"). The extra slot-table entry serves the sharded path:
+    inv_perm rows PADDED to ``nb * block`` land on slot nb (never a
+    survivor, cand < nb) and gather 0 too, so ragged shards stack into
+    one rectangular buffer without polluting real rows' scores. Nothing
+    here ever touches the host — this replaces the old [Q, n_rows] host
+    scatter."""
     c, block, q = counts.shape
-    slot = jnp.full((nb,), c, jnp.int32).at[cand].min(
+    slot = jnp.full((nb + 1,), c, jnp.int32).at[cand].min(
         jnp.arange(c, dtype=jnp.int32))
     idx = slot[inv_perm // block] * block + inv_perm % block      # [N]
     return scores + jnp.take(counts.reshape(c * block, q), idx, axis=0,
@@ -377,6 +381,72 @@ def _rank_threshold(scores, train_ids, *, k: int, sbits: int,
     out_scores = jnp.maximum(-sneg[:, :k], 0)
     out_ids = jnp.where(out_scores > 0, sids[:, :k], -1)
     return out_ids.astype(jnp.int32), out_scores.astype(jnp.int32), kq
+
+
+def shard_local_topk(scores: jax.Array, train_ids: jax.Array,
+                     offset: jax.Array, n_local: jax.Array, *, k: int,
+                     score_bound: int | None = None,
+                     method: str | None = None):
+    """Shard-local ranking stage of the sharded serving path: rank ONE
+    shard's score buffer with rank_topk (same tie-break contract) and
+    remap the winners into GLOBAL row ids.
+
+    scores: [Nloc, Q] this shard's per-row scores in shard-local row
+    order (row-major, like the engine's buffer; padded rows past
+    ``n_local`` must carry score 0 — the sharded accumulate guarantees
+    it); train_ids: [Q, T] GLOBAL training ids to exclude (pad with the
+    catalog size); offset / n_local: this shard's global row offset and
+    real row count (traced scalars — one program serves every shard
+    under vmap or shard_map).
+
+    Global ids in [offset, offset + n_local) map to local ids by
+    subtraction; every other training id (another shard's rows, or the
+    catalog-size pad) maps to Nloc, which rank_topk's mode="drop" mask
+    discards. Returned ids are local winners + offset, so the cross-
+    shard merge (merge_topk) orders by GLOBAL id on score ties — shards
+    own disjoint ascending id ranges, making (descending score,
+    ascending global id) a total order identical to the single-device
+    ranking. Invalid slots stay -1."""
+    nloc = scores.shape[0]
+    t = jnp.where((train_ids >= offset) & (train_ids < offset + n_local),
+                  train_ids - offset, nloc).astype(jnp.int32)
+    ids, sc, nv = rank_topk(scores, t, k=k, score_bound=score_bound,
+                            method=method, scores_transposed=True)
+    gids = jnp.where(ids >= 0, ids + offset.astype(jnp.int32),
+                     jnp.int32(-1))
+    return gids.astype(jnp.int32), sc, nv
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk(ids: jax.Array, scores: jax.Array, *, k: int):
+    """Cross-shard merge of per-shard top-k lists, ON DEVICE.
+
+    ids: [S, Q, ks] int32 GLOBAL ids (-1 invalid); scores: [S, Q, ks]
+    int32 (> 0 on valid slots, 0 on invalid — rank_topk's convention).
+    Returns (ids [Q, k'] int32, scores [Q, k'] int32, n_valid [Q] int32)
+    with k' = min(k, S * ks); only this O(k) result ever needs to cross
+    to the host, independent of shard count.
+
+    One 2-key ``lax.sort`` over the S*ks candidates per query pins the
+    SAME tie-break contract as rank_topk / the host oracle: descending
+    score, ascending global id within equal scores — including ties at
+    the global k-th score, where the lowest global ids win regardless of
+    which shards they came from. Invalid slots carry score 0 (every real
+    score is >= 1) so they sort past every valid candidate; their ids
+    come back -1. Because any global top-k row is necessarily within its
+    own shard's top-k, merging per-shard top-k lists loses nothing."""
+    s, q, ks = ids.shape
+    fids = jnp.swapaxes(ids, 0, 1).reshape(q, s * ks)
+    fsc = jnp.swapaxes(scores, 0, 1).reshape(q, s * ks)
+    valid = fsc > 0
+    # invalid ids (-1) would win ascending-id ties: push them to +inf-ish
+    key_id = jnp.where(valid, fids, jnp.int32(2 ** 31 - 1))
+    sneg, sids = jax.lax.sort((-fsc, key_id), dimension=-1, num_keys=2)
+    kk = min(int(k), s * ks)
+    out_scores = -sneg[:, :kk]
+    out_ids = jnp.where(out_scores > 0, sids[:, :kk], -1)
+    return (out_ids.astype(jnp.int32), out_scores.astype(jnp.int32),
+            (out_scores > 0).sum(1).astype(jnp.int32))
 
 
 def l2dist(x: jax.Array, q: jax.Array,

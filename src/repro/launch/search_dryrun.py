@@ -54,30 +54,18 @@ def search_step_specs(*, n_rows: int, d_sub: int, block: int, n_boxes: int):
 
 def make_index_query_step(mesh, block: int, capacity: int):
     """The engine's sharded query step — the capacity-bounded PRUNED
-    formulation (core/index.distributed_query_pruned): zone-prune, gather
-    surviving blocks (static capacity), refine only those. Bytes touched
-    scale with selectivity, which is the whole point of the paper."""
+    formulation. The local per-shard program is imported from
+    core/index.pruned_local_step (NOT re-implemented here), so the HLO
+    this dry-run lowers at paper scale is byte-for-byte the production
+    step distributed_query_pruned shard_maps."""
     from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
-    from repro.kernels import ref as kref
-
-    def local(rows, zlo, zhi, blo, bhi):
-        nb_loc = rows.shape[0]
-        m = kref.zone_prune_ref(zlo, zhi, blo, bhi).any(1)      # [nb_loc]
-        cand, = jnp.nonzero(m, size=capacity, fill_value=0)
-        valid = jnp.arange(capacity) < m.sum()
-        sel = rows[cand]
-        counts = kref.box_scan_ref(sel.reshape(-1, sel.shape[-1]),
-                                   blo, bhi).reshape(capacity, block)
-        counts = counts * valid[:, None]
-        out = jnp.zeros((nb_loc, block), jnp.int32)
-        out = out.at[cand].max(counts)
-        return out.reshape(-1)
+    from repro.core.index import pruned_local_step
 
     dp = tuple(a for a in mesh.axis_names if a in ("pod", "data", "model"))
     spec = P(dp)
-    return shard_map(local, mesh=mesh,
+    return shard_map(pruned_local_step(block, capacity), mesh=mesh,
                      in_specs=(spec, spec, spec, P(), P()),
                      out_specs=spec, check_vma=False)
 

@@ -14,7 +14,11 @@ Production notes:
     feature subset, per-box ownership map de-muxing counts per query —
     DESIGN.md §6);
   * the feature DB / indexes shard over hosts; each host runs one
-    QueryServer on its shard and a stateless front end merges id lists;
+    QueryServer on its shard and a stateless front end merges id lists —
+    WITHIN a host, ``SearchEngine(n_shards=...)`` row-partitions the
+    catalog across that host's devices and merges top-k lists on device
+    (DESIGN.md §11; ``merge_shard_results`` below stays as the host
+    oracle of that merge);
   * per-request deadline + error isolation: one bad query never takes
     down the batch.
 """
@@ -70,7 +74,8 @@ class QueryServer:
         self._thread: Optional[threading.Thread] = None
         self.stats = {"served": 0, "errors": 0, "batches": 0,
                       "batched_queries": 0, "latency_sum": 0.0,
-                      "fit_s_sum": 0.0, "host_bytes": 0}
+                      "fit_s_sum": 0.0, "host_bytes": 0,
+                      "sharded_queries": 0}
 
     def _query_kwargs(self, req: QueryRequest) -> Dict:
         kw = dict(req.kwargs)
@@ -89,6 +94,8 @@ class QueryServer:
             self.stats["host_bytes"] += res.stats.get(
                 "host_bytes_transferred", 0)
             self.stats["fit_s_sum"] += res.train_time_s
+            self.stats["sharded_queries"] += \
+                1 if res.stats.get("n_shards", 1) > 1 else 0
         except Exception as e:  # noqa: BLE001 — per-request isolation
             resp = QueryResponse(req.request_id, False, None, f"{e}",
                                  time.perf_counter() - t0)
@@ -141,6 +148,9 @@ class QueryServer:
                 else:
                     self.stats["host_bytes"] += out.stats.get(
                         "host_bytes_transferred", 0)
+                self.stats["sharded_queries"] += 1 if out.stats.get(
+                    "batch_n_shards", out.stats.get("n_shards", 1)) > 1 \
+                    else 0
             self.stats["served"] += 1
             self.stats["errors"] += 0 if resp.ok else 1
             self.stats["latency_sum"] += resp.latency_s
@@ -187,19 +197,28 @@ class QueryServer:
     def summary(self) -> Dict:
         served = max(self.stats["served"], 1)
         return {**self.stats,
+                "n_shards": getattr(self.engine, "n_shards", 1),
                 "mean_latency_s": self.stats["latency_sum"] / served,
                 "mean_fit_s": self.stats["fit_s_sum"] / served}
 
 
 def merge_shard_results(per_shard: List[QueryResult],
                         shard_offsets: List[int]) -> Tuple[np.ndarray, np.ndarray]:
-    """Front-end merge of per-host results: offset local ids to global,
-    concatenate, re-rank by score. Pure function — stateless front end."""
+    """HOST ORACLE for the cross-shard merge: offset local ids to global,
+    concatenate, re-rank. Pure function — the stateless front-end merge
+    as it ran before the device-side sharded path existed, kept as the
+    reference the sharded tests compare kernels/ops.merge_topk against.
+
+    Ordering is pinned to the rank_topk tie-break contract (DESIGN.md
+    §9/§11): descending score, ascending GLOBAL id within equal scores —
+    a stable sort on -score alone would instead break ties by shard
+    arrival order, which only coincides with the contract when shards
+    arrive pre-sorted and in offset order."""
     ids, scores = [], []
     for res, off in zip(per_shard, shard_offsets):
-        ids.append(res.ids + off)
-        scores.append(res.scores)
+        ids.append(np.asarray(res.ids) + off)
+        scores.append(np.asarray(res.scores))
     ids = np.concatenate(ids) if ids else np.empty(0, np.int64)
     scores = np.concatenate(scores) if scores else np.empty(0)
-    order = np.argsort(-scores, kind="stable")
+    order = np.lexsort((ids, -scores))
     return ids[order], scores[order]

@@ -14,7 +14,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.boxes import BoxSet, boxes_contain
 from repro.core.dbranch import fit_dbranch
-from repro.core.index import build_index, query_index
+from repro.core.index import build_index, morton_code, query_index
 from repro.core.kdtree import build_kdtree, range_query
 
 settings.register_profile("ci", max_examples=25, deadline=None)
@@ -127,6 +127,56 @@ def test_dbranch_subset_constraint(args):
     other = np.setdiff1d(np.arange(d), dims)
     assert np.all(np.isinf(lo_full[:, other]))
     assert np.all(np.isinf(hi_full[:, other]))
+
+
+@st.composite
+def distinct_matrix(draw):
+    """[n, d] float32 with DISTINCT values per dim (shuffled linspace):
+    rank quantisation is only permutation-equivariant when no dim has
+    ties — tied values take their rank from input order, which is the
+    stable-sort contract, not a bug."""
+    seed = draw(st.integers(0, 2**31 - 1))
+    n = draw(st.integers(2, 300))
+    d = draw(st.integers(1, 5))
+    rng = np.random.default_rng(seed)
+    x = np.stack([rng.permutation(np.linspace(-3.0, 3.0, n))
+                  for _ in range(d)], axis=1).astype(np.float32)
+    return x, rng.permutation(n)
+
+
+@given(distinct_matrix())
+def test_morton_code_permutation_equivariance(args):
+    """Reordering the rows reorders the codes the SAME way — so the code
+    MULTISET is permutation-invariant, and the single-argsort rank trick
+    (the PR 2 fix: ranks[order] = arange instead of argsort(argsort))
+    assigns ranks independent of row order. Zone-map quality therefore
+    cannot depend on catalog ingestion order."""
+    x, perm = args
+    codes = morton_code(x)
+    np.testing.assert_array_equal(morton_code(x[perm]), codes[perm])
+    np.testing.assert_array_equal(np.sort(morton_code(x[perm])),
+                                  np.sort(codes))
+
+
+@given(distinct_matrix())
+def test_morton_rank_inverse_permutation_roundtrip(args):
+    """The rank table IS the inverse of the sort permutation: pushing
+    codes through the permutation and back recovers them exactly, and
+    the scatter-built ranks equal the double-argsort formulation the
+    single-argsort fix replaced."""
+    x, perm = args
+    n = x.shape[0]
+    inv = np.empty(n, np.int64)
+    inv[perm] = np.arange(n)
+    codes = morton_code(x)
+    np.testing.assert_array_equal(morton_code(x[perm])[inv], codes)
+    for j in range(x.shape[1]):
+        order = np.argsort(x[:, j], kind="stable")
+        ranks = np.empty(n, np.int64)
+        ranks[order] = np.arange(n)          # the single-argsort fix
+        np.testing.assert_array_equal(
+            ranks, np.argsort(np.argsort(x[:, j], kind="stable"),
+                              kind="stable"))
 
 
 @given(st.integers(0, 2**31 - 1), st.integers(10, 300), st.integers(1, 5))

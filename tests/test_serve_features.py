@@ -71,6 +71,33 @@ def test_merge_shard_results():
     np.testing.assert_array_equal(scores, [5.0, 3.0, 1.0])
 
 
+def test_server_error_isolation_in_sharded_batch(small_engine):
+    """One poisoned request inside a SHARDED batching window (empty
+    positive set -> the fit fails) must fail alone: the surrounding
+    requests return ids identical to their sequential single-device
+    answers, and the server counts exactly one error."""
+    eng, labels = small_engine
+    feats = eng.x
+    sharded = SearchEngine(feats, n_subsets=8, subset_dim=5, block=64,
+                           n_shards=4, max_results=25)
+    srv = QueryServer(sharded, max_results=25)
+    pos = np.nonzero(labels[:800] == 2)[0][:10]
+    neg = np.nonzero(labels[:800] != 2)[0][:40]
+    good0 = QueryRequest(0, pos, neg, "dbranch")
+    bad = QueryRequest(1, [], neg[:5], "dbranch")      # no positives
+    good2 = QueryRequest(2, pos[:6], neg[:20], "dbranch")
+    out = srv.handle_batch([good0, bad, good2])
+    assert out[0].ok and not out[1].ok and out[2].ok
+    assert srv.stats["errors"] == 1 and srv.stats["served"] == 3
+    assert srv.stats["sharded_queries"] == 2
+    assert srv.summary()["n_shards"] == 4
+    for resp, req in ((out[0], good0), (out[2], good2)):
+        want = eng.query(req.pos_ids, req.neg_ids, model="dbranch",
+                         max_results=25)
+        np.testing.assert_array_equal(resp.result.ids, want.ids)
+        np.testing.assert_array_equal(resp.result.scores, want.scores)
+
+
 # ----------------------------------------------------------------------
 # features
 # ----------------------------------------------------------------------
