@@ -32,8 +32,15 @@ Extra modes (DESIGN.md §6, §9):
                     host bytes vs n_shards in {1, 2, 4, 8}; emits
                     BENCH_shard_query.json and fails loudly if any
                     shard count's ids diverge from single-device.
+  --live            live catalog ingestion (DESIGN.md §12): append
+                    throughput vs a full monolithic rebuild at n=50k,
+                    and ranked-query wall overhead vs the delta fraction
+                    (share of rows living in delta segments); emits
+                    BENCH_ingest.json and fails loudly if segmented ids
+                    ever diverge from the monolithic engine's.
   --check-json      re-validate BENCH_query_time.json (and, when
-                    present, BENCH_shard_query.json) — the CI gate.
+                    present, BENCH_shard_query.json / BENCH_ingest.json)
+                    — the CI gate.
 """
 from __future__ import annotations
 
@@ -372,6 +379,113 @@ def run_sharded(batch: int = 8, n: int = 50_000,
     return rows
 
 
+def run_live(n: int = 50_000, batch: int = 8, k: int = 100,
+             append_rows: int = 2_000, delta_fracs=(0.05, 0.10, 0.25),
+             verbose: bool = True, out_json: str = "BENCH_ingest.json"):
+    """Live catalog ingestion (DESIGN.md §12), two quantities:
+
+    * APPEND THROUGHPUT: sealing ``append_rows`` new rows into a delta
+      segment of a live n-row engine vs the only option the frozen
+      engine had — a full monolithic rebuild over n + append_rows rows.
+      The append Morton-orders ONLY the new rows, so the ratio is
+      roughly n / append_rows discounted by the O(n) feature memcpy.
+    * RANKED-QUERY OVERHEAD vs DELTA FRACTION: a ranked dbranch batch on
+      a live engine whose catalog is (1 - frac) base + frac delta
+      segments, against a monolithic engine over the same rows. Same
+      rows, same global ids -> the ids must MATCH BITWISE (raises
+      otherwise), and the wall ratio prices what the segmented virtual
+      block space costs: extra tail blocks, weaker per-delta Morton
+      locality, and the tombstone mask multiply.
+    """
+    from benchmarks.common import make_catalog
+    from repro.core.engine import SearchEngine
+
+    eng_kw = dict(n_subsets=24, subset_dim=6, block=256, seed=0)
+    feats, labels = make_catalog(n)
+    xnew, _ = make_catalog(append_rows, seed=7)
+    rows = []
+
+    # ---- append vs full rebuild -------------------------------------
+    live = SearchEngine(feats, **eng_kw, live=True)
+    t0 = time.perf_counter()
+    live.append(xnew)
+    t_append = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    SearchEngine(np.concatenate([feats, xnew]), **eng_kw)
+    t_rebuild = time.perf_counter() - t0
+    rows.append({
+        "name": f"query_time/live/append/n{n}/m{append_rows}",
+        "kind": "append",
+        "us_per_call": round(1e6 * t_append, 1),
+        "append_ms": round(1e3 * t_append, 1),
+        "rebuild_ms": round(1e3 * t_rebuild, 1),
+        "speedup_append_vs_rebuild": round(
+            t_rebuild / max(t_append, 1e-9), 2),
+        "rows_appended": append_rows,
+        "n": n,
+    })
+
+    # ---- ranked-query wall vs delta fraction ------------------------
+    classes = [CLASS_IDS["forest"], CLASS_IDS["water"]]
+    reqs = []
+    for i in range(batch):
+        pos, neg = query_sets(labels, classes[i % len(classes)], 15, 80,
+                              seed=100 + i)
+        reqs.append({"pos_ids": pos, "neg_ids": neg, "model": "dbranch",
+                     "max_results": k})
+    # warm every engine first, then measure ROUND-ROBIN (like --sharded)
+    # so load drift on a busy host spreads evenly across variants
+    # instead of biasing whichever ran last
+    engines = [("mono", None, SearchEngine(feats, **eng_kw))]
+    for frac in delta_fracs:
+        base_n = n - int(n * frac)
+        eng = SearchEngine(feats[:base_n], **eng_kw, live=True)
+        # the delta arrives as a few passes, not one convenient blob
+        for d in np.array_split(feats[base_n:], 3):
+            eng.append(d)
+        engines.append(("live", frac, eng))
+    for _, _, eng in engines:
+        eng.query_batch(reqs)
+        eng.query_batch(reqs)            # warm jit + capacity hints
+    iters = 5
+    best = [float("inf")] * len(engines)
+    last_outs = [None] * len(engines)
+    for _ in range(iters):
+        for i, (_, _, eng) in enumerate(engines):
+            t0 = time.perf_counter()
+            last_outs[i] = eng.query_batch(reqs)
+            best[i] = min(best[i], time.perf_counter() - t0)
+    mono_wall, mono_out = best[0], last_outs[0]
+    for (kind, frac, eng), live_wall, outs in zip(engines[1:], best[1:],
+                                                  last_outs[1:]):
+        match = int(all(np.array_equal(a.ids, b.ids)
+                        and np.array_equal(a.scores, b.scores)
+                        for a, b in zip(outs, mono_out)))
+        if not match:
+            raise AssertionError(
+                f"segmented ids/scores != monolithic at delta "
+                f"fraction {frac} — live-catalog parity regressed")
+        rows.append({
+            "name": f"query_time/live/query/n{n}/delta{frac}/b{batch}",
+            "kind": "query",
+            "us_per_call": round(1e6 * live_wall / batch, 1),
+            "mono_us_per_query": round(1e6 * mono_wall / batch, 1),
+            "query_wall_ratio_vs_monolithic": round(
+                live_wall / max(mono_wall, 1e-9), 3),
+            "delta_fraction": frac,
+            "n_segments": eng.index_stats()["n_segments"],
+            "ids_match_monolithic": match,
+            "n": n,
+            "batch": batch,
+            "k": k,
+        })
+    if verbose:
+        emit(rows, "query_time_live")
+        emit_json(rows, out_json)
+        validate_live_json(out_json)
+    return rows
+
+
 # keys every ranked row must carry — the CI quick-bench step fails loudly
 # when the JSON artifact is missing any of them (the wall-time regression
 # PR 2 exposed was only visible by manual inspection before)
@@ -388,6 +502,47 @@ SHARD_REQUIRED_KEYS = (
     "host_bytes_per_query", "speedup_vs_single", "ids_match_single",
     "n_shards", "used_mesh",
 )
+
+# ... and the live-ingest rows (BENCH_ingest.json): rows are
+# heterogeneous ("append" throughput vs "query" overhead), so each kind
+# carries its own required keys on top of a common core
+LIVE_REQUIRED_KEYS = ("name", "us_per_call", "kind", "n")
+LIVE_KIND_KEYS = {
+    "append": ("append_ms", "rebuild_ms", "speedup_append_vs_rebuild",
+               "rows_appended"),
+    "query": ("mono_us_per_query", "query_wall_ratio_vs_monolithic",
+              "delta_fraction", "n_segments", "ids_match_monolithic"),
+}
+
+
+def validate_live_json(path: str = "BENCH_ingest.json") -> None:
+    """BENCH_ingest.json gate: common keys on every row, kind-specific
+    keys per row, and BOTH kinds present (an artifact that silently
+    dropped the append or the query experiment should fail CI)."""
+    import json
+    import os
+    if not os.path.exists(path):
+        raise SystemExit(f"bench artifact {path} is missing — did the "
+                         "benchmark run?")
+    with open(path) as f:
+        rows = json.load(f)
+    if not rows:
+        raise SystemExit(f"bench artifact {path} has no rows")
+    kinds = set()
+    for r in rows:
+        missing = [k for k in LIVE_REQUIRED_KEYS if k not in r]
+        kind = r.get("kind", "?")
+        missing += [k for k in LIVE_KIND_KEYS.get(kind, ()) if k not in r]
+        if missing:
+            raise SystemExit(
+                f"bench artifact {path} row {r.get('name', '?')} is "
+                f"missing keys: {missing}")
+        kinds.add(kind)
+    if kinds != set(LIVE_KIND_KEYS):
+        raise SystemExit(
+            f"bench artifact {path} must carry both row kinds "
+            f"{sorted(LIVE_KIND_KEYS)}, got {sorted(kinds)}")
+    print(f"{path}: {len(rows)} rows, all required keys present")
 
 
 def validate_bench_json(path: str = "BENCH_query_time.json",
@@ -588,6 +743,9 @@ if __name__ == "__main__":
                     help="batched device fit vs sequential numpy fits")
     ap.add_argument("--sharded", action="store_true",
                     help="sharded serving path vs n_shards (DESIGN.md §11)")
+    ap.add_argument("--live", action="store_true",
+                    help="live-catalog ingestion: append vs rebuild, "
+                         "ranked overhead vs delta fraction (§12)")
     ap.add_argument("--check-json", action="store_true",
                     help="validate bench artifact keys (CI gate)")
     ap.add_argument("--batch", type=int, default=8)
@@ -607,11 +765,15 @@ if __name__ == "__main__":
     elif args.sharded:
         run_sharded(batch=args.batch, n=max(args.sizes),
                     shard_counts=tuple(args.shards), k=args.k)
+    elif args.live:
+        run_live(n=max(args.sizes), batch=args.batch, k=args.k)
     elif args.check_json:
         validate_bench_json()
         import os
         if os.path.exists("BENCH_shard_query.json"):
             validate_bench_json("BENCH_shard_query.json",
                                 SHARD_REQUIRED_KEYS)
+        if os.path.exists("BENCH_ingest.json"):
+            validate_live_json("BENCH_ingest.json")
     else:
         run()

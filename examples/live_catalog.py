@@ -1,0 +1,82 @@
+"""Live catalog ingestion: a catalog that grows with every satellite
+pass (DESIGN.md §12).
+
+    PYTHONPATH=src python examples/live_catalog.py
+
+1. Build a LIVE engine over yesterday's catalog (one base segment).
+2. Query it, then ingest today's pass with ``append`` — only the new
+   rows are Morton-ordered; no rebuild, and every old row keeps its id.
+3. Re-run the query: newly ingested matches appear immediately.
+4. Retire bad patches with ``delete`` — tombstones in a device-resident
+   validity mask; ranked results never surface them again.
+5. ``compact`` in the background: segments merge into one fresh Morton
+   order off the serving thread and swap in atomically under a new
+   epoch, while queries keep running on the snapshot they started with.
+"""
+import time
+
+import numpy as np
+
+from repro.core.engine import SearchEngine
+from repro.data.synthetic import (CLASS_IDS, PatchDatasetConfig,
+                                  generate_patches, handcrafted_features)
+
+
+def make_pass(n, seed):
+    data = generate_patches(PatchDatasetConfig(n_patches=n, seed=seed))
+    return handcrafted_features(data["images"]), data["labels"]
+
+
+def main():
+    print("=== RapidEarth live catalog ===")
+    feats, labels = make_pass(12_000, seed=7)
+    engine = SearchEngine(feats, n_subsets=24, subset_dim=6, seed=7,
+                          live=True, max_results=200)
+    st = engine.index_stats()
+    print(f"[1] live engine over {st['rows']} rows, "
+          f"{st['n_segments']} segment, epoch {st['epoch']}")
+
+    cls = CLASS_IDS["forest"]
+    rng = np.random.default_rng(0)
+    pos = rng.choice(np.nonzero(labels == cls)[0], 20, replace=False)
+    neg = rng.choice(np.nonzero(labels != cls)[0], 120, replace=False)
+    res = engine.query(pos, neg, model="dbranch")
+    print(f"[2] {res.summary()}")
+
+    # today's pass arrives: append seals it into a delta segment
+    new_feats, new_labels = make_pass(3_000, seed=11)
+    t0 = time.perf_counter()
+    new_ids = engine.append(new_feats)
+    st = engine.index_stats()
+    print(f"[3] appended {len(new_ids)} rows in "
+          f"{time.perf_counter() - t0:.3f}s -> {st['n_segments']} "
+          f"segments, epoch {st['epoch']} (ids "
+          f"{new_ids[0]}..{new_ids[-1]}, stable forever)")
+
+    res2 = engine.query(pos, neg, model="dbranch", max_results=None)
+    fresh = np.intersect1d(res2.ids, new_ids)
+    print(f"[4] re-query (full results): {res2.n_found} matches, "
+          f"{len(fresh)} from today's pass")
+
+    # an analyst flags some results as bad imagery: tombstone them
+    dead = [int(i) for i in res2.ids[:5]]
+    engine.delete(dead)
+    res3 = engine.query(pos, neg, model="dbranch")
+    assert not np.intersect1d(res3.ids, dead).size
+    st = engine.index_stats()
+    print(f"[5] deleted {len(dead)} rows (tombstoned: "
+          f"{st['rows_tombstoned']}); they no longer rank")
+
+    # background compaction: merge segments off the serving thread
+    t = engine.compact(background=True)
+    res4 = engine.query(pos, neg, model="dbranch")   # serves meanwhile
+    t.join()
+    st = engine.index_stats()
+    print(f"[6] compacted -> {st['n_segments']} segment, epoch "
+          f"{st['epoch']}; results unchanged: "
+          f"{np.array_equal(res3.ids, engine.query(pos, neg).ids)}")
+    assert np.array_equal(res3.ids, res4.ids)
+
+
+if __name__ == "__main__":
+    main()

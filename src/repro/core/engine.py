@@ -29,6 +29,7 @@ traffic is O(k), independent of catalog size.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -49,6 +50,9 @@ from repro.core.index import (ShardedZoneMapIndex, ZoneMapIndex,
                               query_index_sharded, sharded_fused_stats,
                               sharded_query_accumulate,
                               sharded_rank_merge)
+from repro.core.segments import (SegmentedCatalog, SegmentedZoneMapIndex,
+                                 segmented_fused_stats,
+                                 segmented_query_accumulate)
 from repro.core.subsets import make_subsets
 from repro.core.trees import fit_decision_tree, fit_random_forest
 from repro.kernels import ops as kops
@@ -81,6 +85,26 @@ class QueryResult:
                 f"query {1e3 * self.query_time_s:.1f})")
 
 
+@dataclass
+class _EngineView:
+    """What one query (or batch window) binds at entry: the index set,
+    feature matrix, feature range and validity mask of ONE consistent
+    catalog state. Static engines hand out a trivial view over their own
+    fields; live engines hand out the SegmentedCatalog snapshot of the
+    moment — so an append/delete/compact landing mid-window changes
+    nothing for queries already in flight (DESIGN.md §12)."""
+    indexes: Sequence
+    n: int
+    x: np.ndarray
+    frange: Tuple[np.ndarray, np.ndarray]
+    epoch: int = 0
+    geom: int = 0        # compaction generation — capacity-hint key tag
+    live: bool = False
+    valid: Optional[jax.Array] = None          # [n] int32 device mask
+    valid_host: Optional[np.ndarray] = None    # [n] bool host mirror
+    live_rows: int = -1                        # -1 -> all n rows live
+
+
 class SearchEngine:
     """End-to-end engine over an in-memory feature shard.
 
@@ -104,6 +128,16 @@ class SearchEngine:
     ``shard_mesh``: None auto-builds a "shards" mesh when the backend
     has >= n_shards devices (shard_map via the repro.compat shim),
     False forces the single-device vmap fallback, or pass a Mesh.
+
+    ``live=True`` (DESIGN.md §12) makes the catalog MUTABLE: ``append``
+    seals new rows into delta segments (global ids append-ordered and
+    stable forever), ``delete`` tombstones rows in a device-resident
+    validity mask, and ``compact`` merges segments back into one Morton
+    order off the serving thread. Queries bind an immutable snapshot at
+    entry, run base + deltas as one fused program over the concatenated
+    virtual block space, and return bitwise the ids/scores a monolithic
+    rebuild over the surviving rows would. With ``n_shards > 1`` live
+    engines run the flat fallback with per-shard delta tails.
     """
 
     def __init__(
@@ -122,6 +156,7 @@ class SearchEngine:
         fit_max_nodes: int = 64,
         n_shards: int = 1,
         shard_mesh=None,
+        live: bool = False,
     ):
         self.x = np.ascontiguousarray(np.asarray(features, np.float32))
         self.n, self.d = self.x.shape
@@ -146,9 +181,25 @@ class SearchEngine:
         # gather so steady-state queries never overflow-retry
         self._cap_hints: Dict = {}
         self.n_shards = max(int(n_shards), 1)
+        self.live = bool(live)
+        self._catalog: Optional[SegmentedCatalog] = None
+        self._sync_lock = threading.Lock()
         t0 = time.perf_counter()
         self.subsets = make_subsets(self.d, n_subsets, subset_dim, seed=seed)
-        if self.n_shards > 1:
+        if self.live:
+            # live catalogs (DESIGN.md §12) run the segmented flat path
+            # on every backend; with n_shards > 1 the base is the usual
+            # ceil-split partition and deltas land on per-shard tails —
+            # composition at the flat-fallback level (a mesh leg for
+            # live segments would need per-shard delta mirrors and is
+            # future work, so shard_mesh is ignored here)
+            self.shard_mesh = None
+            self._shard_flat = self.n_shards > 1
+            self._catalog = SegmentedCatalog(self.x, self.subsets,
+                                             block=block,
+                                             n_shards=self.n_shards)
+            self.indexes = list(self._catalog.snapshot().indexes)
+        elif self.n_shards > 1:
             self.shard_mesh = self._resolve_shard_mesh(shard_mesh)
             # no mesh -> the single device runs the whole shard set as
             # ONE flat fused index: capacities are then GLOBAL bounds,
@@ -189,11 +240,89 @@ class SearchEngine:
 
     @staticmethod
     def _index_nbytes(ix) -> int:
-        return (ix.rows_nbytes if isinstance(ix, ShardedZoneMapIndex)
+        return (ix.rows_nbytes
+                if isinstance(ix, (ShardedZoneMapIndex,
+                                   SegmentedZoneMapIndex))
                 else int(ix.rows.nbytes))
 
+    def _view(self) -> _EngineView:
+        """Bind the catalog state one query (or batch window) runs
+        against. Live engines read the current snapshot ONCE here; every
+        downstream stage takes the view, never self.indexes/self.n."""
+        if self._catalog is None:
+            return _EngineView(self.indexes, self.n, self.x, self.frange)
+        s = self._catalog.snapshot()
+        return _EngineView(s.indexes, s.n, s.x, s.frange, epoch=s.epoch,
+                           geom=s.geom, live=True, valid=s.valid_device(),
+                           valid_host=s.valid_host, live_rows=s.live_rows)
+
+    # ------------------------------------------------------------------
+    # live-catalog lifecycle (DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def _require_live(self) -> SegmentedCatalog:
+        if self._catalog is None:
+            raise RuntimeError(
+                "this engine is static — construct SearchEngine(..., "
+                "live=True) to append/delete/compact")
+        return self._catalog
+
+    def _sync_live(self) -> None:
+        """Refresh the engine-level mirrors of the catalog head (what
+        index_stats and external callers read); queries never use these
+        directly — they bind a snapshot via _view(). Serialised against
+        itself (a background compaction finishes on its own thread) and
+        safe against concurrent hint inserts from a serving thread: the
+        prune works on an atomic copy and swaps the dict wholesale."""
+        with self._sync_lock:
+            s = self._catalog.snapshot()
+            self.indexes = list(s.indexes)
+            self.x = s.x
+            self.n = s.n
+            self.frange = s.frange
+            # capacity hints are tagged with the compaction GENERATION
+            # (not the mutation epoch — hints survive appends/deletes,
+            # whose geometry they still describe); pruning dead
+            # generations keeps a long-running server's table bounded
+            hints = self._cap_hints.copy()
+            self._cap_hints = {k: v for k, v in hints.items()
+                               if k[0] == s.geom}
+
+    def append(self, features: np.ndarray) -> np.ndarray:
+        """Seal new rows into a delta segment; returns their global ids
+        (append-ordered, stable forever). O(new rows) index build — no
+        rebuild, no re-upload of existing segments."""
+        ids = self._require_live().append(features)
+        self._sync_live()
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone global ids in the device-resident validity mask;
+        returns how many rows went live -> dead. Ranked queries never
+        surface tombstoned rows again (masked at score accumulation)."""
+        nd = self._require_live().delete(ids)
+        self._sync_live()
+        return nd
+
+    def compact(self, background: bool = False):
+        """Merge all sealed segments into one re-sorted segment and swap
+        it in atomically under a new epoch. ``background=True`` runs the
+        (heavy, O(catalog)) merge off the calling thread and returns the
+        started Thread; serving continues on the old snapshot until the
+        swap. Synchronous calls return the compaction stats dict."""
+        cat = self._require_live()
+        if background:
+            t = threading.Thread(target=self._compact_now, daemon=True)
+            t.start()
+            return t
+        return self._compact_now()
+
+    def _compact_now(self) -> Dict:
+        st = self._catalog.compact()
+        self._sync_live()
+        return st
+
     def index_stats(self) -> Dict:
-        return {
+        st = {
             "rows": self.n,
             "dims": self.d,
             "n_subsets": len(self.indexes),
@@ -204,6 +333,10 @@ class SearchEngine:
                                    for ix in self.indexes)),
             "feature_bytes": int(self.x.nbytes),
         }
+        if self._catalog is not None:
+            st["live"] = True
+            st.update(self._catalog.stats())
+        return st
 
     # ------------------------------------------------------------------
     def query(
@@ -227,9 +360,10 @@ class SearchEngine:
         if model not in MODELS:
             raise ValueError(f"unknown model {model!r}; choose from {MODELS}")
         mr = self.max_results if max_results is _UNSET else max_results
+        view = self._view()
         pos_ids = np.asarray(list(pos_ids), np.int64)
         neg_ids = np.asarray(list(neg_ids), np.int64)
-        xp, xn = self.x[pos_ids], self.x[neg_ids]
+        xp, xn = view.x[pos_ids], view.x[neg_ids]
 
         t0 = time.perf_counter()
         if model in ("dbranch", "dbens"):
@@ -238,7 +372,7 @@ class SearchEngine:
                 # crosses to the host (DESIGN.md §10)
                 lo_c, hi_c, entries = self._fit_boxes_batched(
                     [(model, xp, xn, n_models, seed)], max_depth=max_depth,
-                    return_device=True)
+                    return_device=True, frange=view.frange)
                 if isinstance(entries[0], Exception):
                     raise entries[0]
                 boxes = ("device", lo_c, hi_c, entries[0])
@@ -247,7 +381,7 @@ class SearchEngine:
                 # host inference AND the numpy trainer (DESIGN.md §10)
                 boxes = self._fit_boxes(model, xp, xn, max_depth=max_depth,
                                         n_models=n_models, seed=seed,
-                                        use_jax=False)
+                                        use_jax=False, frange=view.frange)
         elif model == "dtree":
             xtr = np.concatenate([xp, xn])
             ytr = np.concatenate([np.ones(len(xp)), np.zeros(len(xn))])
@@ -264,27 +398,33 @@ class SearchEngine:
         stats: Dict = {}
         if model in ("dbranch", "dbens"):
             ids, scores, stats = self._run_index_path(
-                boxes, pos_ids, neg_ids, include_training, mr)
+                boxes, pos_ids, neg_ids, include_training, mr, view)
             stats["path"] = "index"
             stats["fit_path"] = ("jax" if self.use_jax_fit and self.use_fused
                                  else "numpy")
         elif model == "knn":
-            k = min(k_neighbors, self.n)
-            ids_k, dists = knn_mod.knn_subset(self.indexes[0], xp, k=k)
-            counts = knn_mod.knn_vote(ids_k, self.n)
+            n_live = view.live_rows if view.live else view.n
+            k = min(k_neighbors, n_live)
+            ids_k, dists = knn_mod.knn_subset(view.indexes[0], xp, k=k,
+                                              live=view.valid_host)
+            counts = knn_mod.knn_vote(ids_k, view.n)
             stats = {"path": "index",
-                     "bytes_touched": self._index_nbytes(self.indexes[0])}
+                     "bytes_touched": self._index_nbytes(view.indexes[0])}
             t_fit = 0.0
             ids, scores = self._rank(counts, pos_ids, neg_ids,
                                      include_training)
         else:
             lo, hi = (tree.lo, tree.hi) if model == "dtree" else forest.boxes()
             if len(lo) == 0:
-                counts = np.zeros(self.n, np.int32)
+                counts = np.zeros(view.n, np.int32)
             else:
-                counts = np.asarray(full_scan(self.x, lo, hi,
+                counts = np.asarray(full_scan(view.x, lo, hi,
                                               use_pallas=self.use_pallas))
-            stats = {"path": "scan", "bytes_touched": int(self.x.nbytes),
+            if view.valid_host is not None:
+                # scan models see every physical row; tombstoned rows
+                # must not surface from this path either
+                counts = np.where(view.valid_host, counts, 0)
+            stats = {"path": "scan", "bytes_touched": int(view.x.nbytes),
                      "n_boxes": int(len(lo))}
             ids, scores = self._rank(counts, pos_ids, neg_ids,
                                      include_training)
@@ -297,27 +437,33 @@ class SearchEngine:
     # ------------------------------------------------------------------
     def _fit_boxes(self, model: str, xp: np.ndarray, xn: np.ndarray, *,
                    max_depth: int, n_models: int, seed: int,
-                   use_jax: Optional[bool] = None) -> List[BoxSet]:
+                   use_jax: Optional[bool] = None,
+                   frange=None) -> List[BoxSet]:
         """Fit an index-path model; both query() and query_batch() go
         through here so batched and sequential answers train identically.
         The engine's feature range is plumbed into both trainers so box
-        expansion sees the catalog's spread, not the training sample's.
+        expansion sees the catalog's spread, not the training sample's
+        (live engines pass their snapshot's LIVE-row range via
+        ``frange`` — the monolithic-rebuild parity contract needs it).
         ``use_jax`` overrides the engine default (benchmarks pin the
         numpy oracle as their legacy baseline)."""
         use_jax = self.use_jax_fit if use_jax is None else use_jax
+        frange = self.frange if frange is None else frange
         if use_jax:
             return self._fit_boxes_batched(
-                [(model, xp, xn, n_models, seed)], max_depth=max_depth)[0]
+                [(model, xp, xn, n_models, seed)], max_depth=max_depth,
+                frange=frange)[0]
         if model == "dbranch":
             return [fit_dbranch_best_subset(xp, xn, self.subsets,
                                             max_depth=max_depth,
-                                            feature_range=self.frange)]
+                                            feature_range=frange)]
         return fit_dbens(xp, xn, self.subsets, n_models=n_models,
                          max_depth=max_depth, seed=seed,
-                         feature_range=self.frange)
+                         feature_range=frange)
 
     def _fit_boxes_batched(self, specs: Sequence[Tuple], *,
-                           max_depth: int, return_device: bool = False):
+                           max_depth: int, return_device: bool = False,
+                           frange=None):
         """Device-resident batched fit (DESIGN.md §10): train EVERY model
         of a batch window — (candidate subsets x ensemble members x
         requests) lanes — on device (one capped jit'd round over all
@@ -334,6 +480,7 @@ class SearchEngine:
         bucketed (P, Ng, lanes, groups) so varied label-set sizes share
         compilations; the only device->host result traffic is one [2, G]
         (winner lane, box count) sync plus the round-1 survivor flags."""
+        frange = self.frange if frange is None else frange
         n_sub = len(self.subsets)
         dsub = int(self.subsets.shape[1])
         groups = []     # (spec_idx, cand ids, lane start, boot pos, boot neg)
@@ -377,8 +524,8 @@ class SearchEngine:
                 x_b[l0:l0 + c, p_pad:p_pad + len(bn)] = \
                     bn[:, dims].transpose(1, 0, 2)
                 m_b[l0:l0 + c, p_pad:p_pad + len(bn)] = True
-            fr_b[l0:l0 + c, 0] = self.frange[0][dims]
-            fr_b[l0:l0 + c, 1] = self.frange[1][dims]
+            fr_b[l0:l0 + c, 0] = frange[0][dims]
+            fr_b[l0:l0 + c, 1] = frange[1][dims]
             gid_b[l0:l0 + c] = g
         # split-search tables on the host: numpy sorts the whole lane
         # stack in one shot, the device program never sorts
@@ -472,24 +619,29 @@ class SearchEngine:
             return cls._pow2ceil(v)
         return quantum * (-(-v // quantum))
 
-    def _cap_key(self, sid: int, n_boxes: int):
-        """Hints are keyed by (subset, pow2-bucketed box count): survivor
-        counts scale with the merged boxset's surface, so a single query
-        (few boxes) and a batch window's union (many boxes) must not
-        poison each other's capacity sizing."""
-        return (sid, self._pow2ceil(max(int(n_boxes), 1)))
+    def _cap_key(self, sid: int, n_boxes: int, geom: int = 0):
+        """Hints are keyed by (geometry generation, subset, pow2-bucketed
+        box count): survivor counts scale with the merged boxset's
+        surface, so a single query (few boxes) and a batch window's union
+        (many boxes) must not poison each other's capacity sizing — and
+        the GENERATION tag means a live catalog's hints die with the
+        geometry they were observed on (a pre-compaction survivor count
+        says nothing about the re-sorted block space and must never be
+        consulted again), while surviving appends and deletes, which only
+        extend or overlay the geometry the hint describes."""
+        return (int(geom), sid, self._pow2ceil(max(int(n_boxes), 1)))
 
     def _mesh_sharded(self) -> bool:
         return self.n_shards > 1 and not self._shard_flat
 
     def _cap_blocks(self, index) -> int:
         """The block count a capacity is bounded by: the single index's
-        blocks, the PER-SHARD block bound on a mesh, or the whole
-        virtual block space in flat fallback mode."""
-        if self._mesh_sharded():
-            return index.nb_max
-        if self.n_shards > 1:
-            return index.n_shards * index.nb_max
+        blocks, the PER-SHARD block bound on a mesh, the whole virtual
+        block space in flat fallback mode — and a segmented index
+        reports its concatenated virtual space directly."""
+        if isinstance(index, ShardedZoneMapIndex):
+            return (index.nb_max if self._mesh_sharded()
+                    else index.n_shards * index.nb_max)
         return index.n_blocks
 
     def _cap_bucket(self, v: int, n_blocks: int) -> int:
@@ -505,8 +657,8 @@ class SearchEngine:
         b = -(-v // 8) * 8 if self._mesh_sharded() else self._pow2ceil(v)
         return min(b, n_blocks)
 
-    def _initial_capacity(self, index,
-                          n_boxes: Optional[int] = None) -> int:
+    def _initial_capacity(self, index, n_boxes: Optional[int] = None,
+                          geom: int = 0) -> int:
         """Gather capacity for a subset's fused call: the last observed
         survivor count for a like-sized boxset when one is known (the
         deferred-sync rounds report it for free — DESIGN.md §6 says to
@@ -521,7 +673,7 @@ class SearchEngine:
         nbk = self._cap_blocks(index)
         if n_boxes is not None:
             hint = self._cap_hints.get(self._cap_key(index.subset_id,
-                                                     n_boxes))
+                                                     n_boxes, geom))
             if hint is not None:
                 if self._mesh_sharded():
                     hint += -(-hint // 4)
@@ -547,10 +699,13 @@ class SearchEngine:
         agg["n_boxes"] += n_boxes
         agg["n_range_queries"] += n_boxes
 
-    def _finalize_agg(self, agg: Dict) -> Dict:
-        agg["scan_bytes_equiv"] = int(self.x.nbytes)
+    @staticmethod
+    def _finalize_agg(agg: Dict, view: _EngineView) -> Dict:
+        # priced against the catalog the query actually BOUND: a live
+        # engine's head may have grown by the time the stats finalize
+        agg["scan_bytes_equiv"] = int(view.x.nbytes)
         agg["bytes_saved_frac"] = 1.0 - agg["bytes_touched"] / max(
-            self.x.nbytes, 1)
+            view.x.nbytes, 1)
         return agg
 
     # ------------------------------------------------------------------
@@ -579,7 +734,7 @@ class SearchEngine:
             totals += np.bincount(owner, minlength=nq)
         return jobs, (int(totals.max()) if jobs else 0)
 
-    def _device_scores(self, jobs, nq: int):
+    def _device_scores(self, jobs, nq: int, view: _EngineView):
         """Answer every subset's boxes and accumulate all counts into ONE
         persistent [n, nq] device score buffer in ORIGINAL row order
         (row-major so each block's scatter update is contiguous).
@@ -593,18 +748,20 @@ class SearchEngine:
         common case is exactly one sync of a few int32s per query batch —
         the per-subset blocking int(n_hit) round-trips of the old path
         are gone."""
+        if view.live:
+            return self._device_scores_segmented(jobs, nq, view)
         if self.n_shards > 1:
-            return self._device_scores_sharded(jobs, nq)
-        scores = jnp.zeros((self.n, nq), jnp.int32)
+            return self._device_scores_sharded(jobs, nq, view)
+        scores = jnp.zeros((view.n, nq), jnp.int32)
         agg = self._new_agg()
         pending = [(sid, merged, owner,
-                    self._initial_capacity(self.indexes[sid],
+                    self._initial_capacity(view.indexes[sid],
                                            merged.n_boxes))
                    for sid, merged, owner in jobs]
         while pending:
             launched = []
             for sid, merged, owner, cap in pending:
-                index = self.indexes[sid]
+                index = view.indexes[sid]
                 rows3, zlo, zhi = index.device_arrays()
                 lo, hi, owner_p = pad_boxes(merged.lo, merged.hi, owner)
                 onehot = jnp.asarray(
@@ -622,7 +779,7 @@ class SearchEngine:
             pending = []
             for (sid, merged, owner, cap, counts, cand, _), nh in zip(
                     launched, n_hits):
-                index = self.indexes[sid]
+                index = view.indexes[sid]
                 nh = int(nh)
                 # size the NEXT like-shaped query right: rise to a new
                 # peak instantly, decay old peaks slowly so one light
@@ -647,9 +804,9 @@ class SearchEngine:
                     agg, fused_stats(index, nh, cap, merged.n_boxes),
                     merged.n_boxes)
             agg["retried_subsets"] += len(pending)
-        return scores, self._finalize_agg(agg)
+        return scores, self._finalize_agg(agg, view)
 
-    def _device_scores_sharded(self, jobs, nq: int):
+    def _device_scores_sharded(self, jobs, nq: int, view: _EngineView):
         """_device_scores over the sharded indexes (DESIGN.md §11): the
         persistent score buffer is [S, Nloc_max, nq] — one shard-local
         buffer per shard, stacked — and each subset runs ONE device
@@ -716,14 +873,79 @@ class SearchEngine:
                                              flat=self._shard_flat),
                     merged.n_boxes)
             agg["retried_subsets"] += len(pending)
-        return scores, self._finalize_agg(agg)
+        return scores, self._finalize_agg(agg, view)
 
-    def _scores_to_host(self, scores_dev) -> np.ndarray:
+    def _device_scores_segmented(self, jobs, nq: int, view: _EngineView):
+        """_device_scores over a live catalog's segmented indexes
+        (DESIGN.md §12): the score buffer is [N_total, nq] with row index
+        == global id (the concatenated virtual space needs no remap), one
+        fused program per subset covers base + every delta, tombstoned
+        rows are masked to 0 inside the accumulate, and the batched
+        deferred sync carries [1 + S] ints per subset — the survivor
+        total for the overflow check plus the per-segment refined-block
+        attribution the honest stats report."""
+        scores = jnp.zeros((view.n, nq), jnp.int32)
+        agg = self._new_agg()
+        n_segs = view.indexes[0].n_segments
+        agg["n_segments"] = n_segs
+        agg["rows_live"] = view.live_rows
+        agg["rows_tombstoned"] = view.n - view.live_rows
+        per_seg_agg = np.zeros(n_segs, np.int64)
+        pending = [(sid, merged, owner,
+                    self._initial_capacity(view.indexes[sid],
+                                           merged.n_boxes,
+                                           geom=view.geom))
+                   for sid, merged, owner in jobs]
+        while pending:
+            launched = []
+            for sid, merged, owner, cap in pending:
+                segx = view.indexes[sid]
+                lo, hi, owner_p = pad_boxes(merged.lo, merged.hi, owner)
+                onehot = jnp.asarray(
+                    (owner_p[:, None] == np.arange(nq)[None]
+                     ).astype(np.float32))
+                scores, stvec = segmented_query_accumulate(
+                    segx, scores, jnp.asarray(lo), jnp.asarray(hi),
+                    onehot, view.valid, capacity=cap,
+                    use_pallas=self.use_pallas)
+                launched.append((sid, merged, owner, cap, stvec))
+            # ONE batched sync: [J, 1 + S] int32 for the whole round
+            stvecs = np.asarray(jnp.stack([l[4] for l in launched]))
+            agg["n_host_syncs"] += 1
+            agg["host_bytes_transferred"] += int(stvecs.nbytes)
+            pending = []
+            for (sid, merged, owner, cap, _), st in zip(launched, stvecs):
+                segx = view.indexes[sid]
+                nh = int(st[0])
+                key = self._cap_key(sid, merged.n_boxes, view.geom)
+                self._cap_hints[key] = max(
+                    nh, (self._cap_hints.get(key, 0) * 3) // 4)
+                if nh > cap:
+                    # the discarded attempt still gathered (and priced)
+                    # cap blocks of the virtual space
+                    agg["blocks_gathered"] += cap
+                    agg["bytes_touched"] += int(
+                        cap * segx.block * len(segx.dims) * 4)
+                    pending.append((sid, merged, owner,
+                                    min(self._pow2ceil(nh), segx.n_blocks)))
+                    continue
+                st_d = segmented_fused_stats(segx, nh, st[1:], cap,
+                                             merged.n_boxes,
+                                             view.live_rows)
+                per_seg_agg += np.asarray(
+                    st_d["per_segment_blocks_touched"], np.int64)
+                self._accumulate_agg(agg, st_d, merged.n_boxes)
+            agg["retried_subsets"] += len(pending)
+        agg["per_segment_blocks_touched"] = per_seg_agg.tolist()
+        return scores, self._finalize_agg(agg, view)
+
+    def _scores_to_host(self, scores_dev, view: _EngineView) -> np.ndarray:
         """[N, Q] int32 host counts in GLOBAL row order from the device
         score buffer — the single transfer the max_results=None path
         pays. Sharded buffers are [S, Nloc_max, Q]; each shard's real
-        rows land back at its global offset (padding never copied)."""
-        if self.n_shards == 1:
+        rows land back at its global offset (padding never copied).
+        Segmented (live) buffers are already in global id order."""
+        if view.live or self.n_shards == 1:
             return np.asarray(scores_dev)
         sc = np.asarray(scores_dev)
         out = np.zeros((self.n, sc.shape[2]), sc.dtype)
@@ -734,13 +956,27 @@ class SearchEngine:
                 out[offs[s]:offs[s] + nl] = sc[s, :nl]
         return out
 
-    def _index_inference(self, boxsets: List[BoxSet]):
+    def _index_inference(self, boxsets: List[BoxSet], view: _EngineView):
         """Host/oracle range-query path (use_fused=False): per-subset
         query_index with the host prune/gather reference implementation.
-        Kept as the correctness oracle for the device-resident path."""
-        counts = np.zeros(self.n, np.int64)
+        Kept as the correctness oracle for the device-resident path.
+        Live catalogs run it per segment (counts land at each segment's
+        global offset) with tombstoned rows zeroed afterwards — the host
+        oracle of the masked segmented path."""
+        counts = np.zeros(view.n, np.int64)
         agg = self._new_agg()
-        qfn = query_index_sharded if self.n_shards > 1 else query_index
+        if view.live:
+            def qfn(segx, merged, use_pallas):
+                c = np.zeros(view.n, np.int64)
+                st_sum: Dict = {}
+                for seg, off in zip(segx.segs, segx.offsets[:-1]):
+                    cs, st = query_index(seg, merged, use_pallas=use_pallas)
+                    c[off:off + seg.n_rows] = cs
+                    for k, v in st.items():
+                        st_sum[k] = st_sum.get(k, 0) + v
+                return c, st_sum
+        else:
+            qfn = query_index_sharded if self.n_shards > 1 else query_index
         by_subset: Dict[int, List[BoxSet]] = {}
         for bs in boxsets:
             by_subset.setdefault(bs.subset_id, []).append(bs)
@@ -748,20 +984,23 @@ class SearchEngine:
             merged = group[0]
             for g in group[1:]:
                 merged = merged.concatenate(g)
-            c, st = qfn(self.indexes[sid], merged,
+            c, st = qfn(view.indexes[sid], merged,
                         use_pallas=self.use_pallas)
             counts += c
             self._accumulate_agg(agg, st, merged.n_boxes)
-        return counts, self._finalize_agg(agg)
+        if view.valid_host is not None:
+            counts = np.where(view.valid_host, counts, 0)
+        return counts, self._finalize_agg(agg, view)
 
     def _run_index_path(self, boxsets, pos_ids, neg_ids,
-                        include_training: bool, mr: Optional[int]):
+                        include_training: bool, mr: Optional[int],
+                        view: _EngineView):
         """Single-query index inference + ranking; fused engines score on
         device and, with ``mr`` set, rank on device too. ``boxsets`` is a
         List[BoxSet], or the ("device", lo, hi, entries) form handed out
         by the batched device fit — those boxes never touch the host."""
         if not self.use_fused:
-            counts, stats = self._index_inference(boxsets)
+            counts, stats = self._index_inference(boxsets, view)
             ids, scores = self._rank(counts, pos_ids, neg_ids,
                                      include_training)
             return ids, scores, stats    # query() applies the mr cut
@@ -771,16 +1010,16 @@ class SearchEngine:
                 [(lo_c, hi_c, g, sid, cnt, 0) for g, sid, cnt in ent], 1)
         else:
             jobs, bound = self._make_jobs([(bs, 0) for bs in boxsets], 1)
-        scores_dev, stats = self._device_scores(jobs, 1)
+        scores_dev, stats = self._device_scores(jobs, 1, view)
         if mr is None:
-            counts = self._scores_to_host(scores_dev)[:, 0]
+            counts = self._scores_to_host(scores_dev, view)[:, 0]
             stats["host_bytes_transferred"] += int(counts.nbytes)
             ids, scores = self._rank(counts, pos_ids, neg_ids,
                                      include_training)
         else:
             ranked, hb = self._rank_device(
                 scores_dev, [(pos_ids, neg_ids, include_training)], mr,
-                bound)
+                bound, view)
             stats["host_bytes_transferred"] += hb
             ids, scores = ranked[0]
         return ids, scores, stats
@@ -799,7 +1038,8 @@ class SearchEngine:
         ids = found[order]
         return ids, counts[ids].astype(np.float64)
 
-    def _rank_device(self, scores_dev, masks, k: int, score_bound: int):
+    def _rank_device(self, scores_dev, masks, k: int, score_bound: int,
+                     view: _EngineView):
         """Device ranking (kops.rank_topk) over the [N, Q] device score
         buffer; only [Q, k] ids/scores plus [Q] valid counts cross to the
         host. masks: per-query (pos, neg, include_training). Returns
@@ -809,8 +1049,10 @@ class SearchEngine:
         per-shard top-k + cross-shard merge (core/index.
         sharded_rank_merge): identical tie-break contract, identical
         bits, still O(k) host traffic — training ids stay GLOBAL here
-        and each shard drops the ones outside its row range."""
-        n, nq = self.n, len(masks)
+        and each shard drops the ones outside its row range. Segmented
+        (live) buffers are global-id-ordered and already tombstone-
+        masked, so they rank exactly like the single-device path."""
+        n, nq = view.n, len(masks)
         # k is a static jit arg: pow2-bucket it (like capacities and the
         # tmax pad) so varied per-request max_results share compilations;
         # callers slice the valid prefix down to their own k
@@ -823,9 +1065,9 @@ class SearchEngine:
             if not inc:
                 tr = np.concatenate([pos, neg])
                 tids[q, :len(tr)] = tr
-        if self.n_shards > 1:
+        if self.n_shards > 1 and not view.live:
             ids_k, scores_k, n_valid = sharded_rank_merge(
-                self.indexes[0], scores_dev, jnp.asarray(tids), k=kk,
+                view.indexes[0], scores_dev, jnp.asarray(tids), k=kk,
                 score_bound=score_bound, mesh=self.shard_mesh)
         else:
             ids_k, scores_k, n_valid = kops.rank_topk(
@@ -866,6 +1108,10 @@ class SearchEngine:
         are namespaced ``batch_*``; the only per-request figure is
         ``n_boxes`` (that request's own box count)."""
         results: List = [None] * len(requests)
+        # the WHOLE window binds one catalog snapshot: appends/deletes/
+        # compactions landing while this batch runs take effect for the
+        # NEXT window, never mid-flight (DESIGN.md §12)
+        view = self._view()
         to_fit = []   # (slot, model, pos, neg, incl, mr, depth, n_models, seed)
         for i, req in enumerate(requests):
             try:
@@ -906,9 +1152,9 @@ class SearchEngine:
             for depth, items in by_depth.items():
                 try:
                     lo_c, hi_c, entries = self._fit_boxes_batched(
-                        [(it[1], self.x[it[2]], self.x[it[3]], it[7], it[8])
+                        [(it[1], view.x[it[2]], view.x[it[3]], it[7], it[8])
                          for it in items], max_depth=depth,
-                        return_device=True)
+                        return_device=True, frange=view.frange)
                 except Exception:  # noqa: BLE001 — degrade, don't die
                     entries = None  # batch-wide failure: per-request oracle
                 for j, it in enumerate(items):
@@ -922,9 +1168,9 @@ class SearchEngine:
                     # one bad label set never drags the batch down
                     try:
                         boxsets_by_slot[it[0]] = self._fit_boxes(
-                            it[1], self.x[it[2]], self.x[it[3]],
+                            it[1], view.x[it[2]], view.x[it[3]],
                             max_depth=it[6], n_models=it[7], seed=it[8],
-                            use_jax=False)
+                            use_jax=False, frange=view.frange)
                     except Exception as e:  # noqa: BLE001
                         results[it[0]] = e
             fit_wall = time.perf_counter() - t0
@@ -939,8 +1185,9 @@ class SearchEngine:
                 t1 = time.perf_counter()
                 try:
                     boxsets = self._fit_boxes(
-                        it[1], self.x[it[2]], self.x[it[3]],
-                        max_depth=it[6], n_models=it[7], seed=it[8])
+                        it[1], view.x[it[2]], view.x[it[3]],
+                        max_depth=it[6], n_models=it[7], seed=it[8],
+                        frange=view.frange)
                 except Exception as e:  # noqa: BLE001
                     results[it[0]] = e
                     continue
@@ -971,7 +1218,7 @@ class SearchEngine:
             # a request's boxes live entirely in one form, so per-query
             # score bounds combine by max
             jobs, bound = jobs + j2, max(bound, b2)
-        scores_dev, agg = self._device_scores(jobs, nq)
+        scores_dev, agg = self._device_scores(jobs, nq, view)
 
         # ---- ranking ---------------------------------------------------
         mrs = [f[6] for f in fitted]
@@ -979,14 +1226,15 @@ class SearchEngine:
             masks = [(pos, neg, incl)
                      for (_, _, _, pos, neg, incl, _, _) in fitted]
             ranked, hb = self._rank_device(scores_dev, masks, max(mrs),
-                                           bound)
+                                           bound, view)
             agg["host_bytes_transferred"] += hb
             ranked = [(ids[:m], sc[:m]) for (ids, sc), m in zip(ranked, mrs)]
         else:
             # any full-result request forces the score buffer to the host
             # ONCE; ranking shares the oracle so truncated requests still
             # see the exact device-ranking prefix
-            counts = np.ascontiguousarray(self._scores_to_host(scores_dev).T)
+            counts = np.ascontiguousarray(
+                self._scores_to_host(scores_dev, view).T)
             agg["host_bytes_transferred"] += int(counts.nbytes)
             ranked = []
             for q, (_, _, _, pos, neg, incl, m, _) in enumerate(fitted):

@@ -16,10 +16,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.index import ShardedZoneMapIndex, ZoneMapIndex
+from repro.core.segments import SegmentedZoneMapIndex
 from repro.kernels import ops as kops
 
 
-def knn_subset(index, queries_full: np.ndarray, k: int = 1000
+def knn_subset(index, queries_full: np.ndarray, k: int = 1000,
+               live: Optional[np.ndarray] = None
                ) -> Tuple[np.ndarray, np.ndarray]:
     """Top-k over the index's subset dims. queries_full: [Q, D_full].
     Returns (ids [Q, k] original row ids, dists [Q, k]).
@@ -27,7 +29,40 @@ def knn_subset(index, queries_full: np.ndarray, k: int = 1000
     A ShardedZoneMapIndex follows the same local-topk -> merge shape as
     the ranked query path: per-shard top-k over the shard's Morton rows,
     local ids offset to global, then a (distance, global id) merge — the
-    id tie key makes duplicate-distance results shard-count invariant."""
+    id tie key makes duplicate-distance results shard-count invariant.
+
+    A SegmentedZoneMapIndex (live catalog, DESIGN.md §12) searches each
+    segment's LIVE rows only (``live``: [n] bool validity mask — the
+    snapshot's tombstone overlay; tombstoned rows never become
+    neighbours) and merges per-segment lists by the same (distance,
+    global id) tie-break, so results are bitwise those of brute force
+    over the concatenated surviving rows."""
+    if isinstance(index, SegmentedZoneMapIndex):
+        q = jnp.asarray(
+            np.asarray(queries_full, np.float32)[:, index.dims])
+        per_ids, per_d, n_live = [], [], 0
+        for seg, off in zip(index.segs, index.offsets[:-1]):
+            vm = seg.perm >= 0                  # real (non-pad) slots
+            loc = seg.perm[vm]                  # original local ids
+            rows = seg.rows[vm]
+            if live is not None:
+                keep = live[loc + int(off)]
+                rows, loc = rows[keep], loc[keep]
+            if len(loc) == 0:
+                continue
+            n_live += len(loc)
+            kk = min(k, len(loc))
+            d, idx = kops.knn_topk(jnp.asarray(rows), q, kk)
+            per_ids.append(loc[np.asarray(idx)] + int(off))
+            per_d.append(np.asarray(d))
+        if not per_ids:
+            nq = q.shape[0]
+            return (np.empty((nq, 0), np.int64), np.empty((nq, 0)))
+        all_ids = np.concatenate(per_ids, axis=1)
+        all_d = np.concatenate(per_d, axis=1)
+        order = np.lexsort((all_ids, all_d), axis=1)[:, :min(k, n_live)]
+        return (np.take_along_axis(all_ids, order, 1),
+                np.take_along_axis(all_d, order, 1))
     if isinstance(index, ShardedZoneMapIndex):
         q = jnp.asarray(
             np.asarray(queries_full, np.float32)[:, index.dims])

@@ -180,14 +180,21 @@ def batch_box_membership(x: jax.Array, lo: jax.Array, hi: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("nb",))
 def accumulate_scores(scores: jax.Array, counts: jax.Array, cand: jax.Array,
-                      inv_perm: jax.Array, *, nb: int) -> jax.Array:
+                      inv_perm: jax.Array, valid: jax.Array | None = None,
+                      *, nb: int) -> jax.Array:
     """Add one subset's fused counts into the persistent per-query score
     buffer, ON DEVICE and in ORIGINAL row order.
 
     scores: [N, Q] int32 running scores; counts: [C, block, Q] from
     fused_query (overflow slots already zeroed); cand: [C] gathered block
     ids; inv_perm: [N] int32 original-row -> Morton-position map
-    (ZoneMapIndex.device_inv_perm); nb: the index's block count (static).
+    (ZoneMapIndex.device_inv_perm); nb: the index's block count (static);
+    valid: optional [N] int32/bool row-liveness mask — a tombstoned row's
+    gathered count is zeroed HERE, at accumulation time, so a live
+    catalog's dead rows carry score 0 through every later stage and can
+    never rank (rank_topk treats score <= 0 as invalid). Masking the
+    increment rather than the final buffer keeps the contract local: any
+    mix of masked and unmasked subsets still sums to a masked total.
 
     Formulated as a GATHER, not a scatter: a tiny [nb + 1] block->slot
     table (C-element scatter — nonzero emits survivors in ascending block
@@ -206,8 +213,11 @@ def accumulate_scores(scores: jax.Array, counts: jax.Array, cand: jax.Array,
     slot = jnp.full((nb + 1,), c, jnp.int32).at[cand].min(
         jnp.arange(c, dtype=jnp.int32))
     idx = slot[inv_perm // block] * block + inv_perm % block      # [N]
-    return scores + jnp.take(counts.reshape(c * block, q), idx, axis=0,
-                             mode="fill", fill_value=0)
+    inc = jnp.take(counts.reshape(c * block, q), idx, axis=0,
+                   mode="fill", fill_value=0)
+    if valid is not None:
+        inc = inc * valid.astype(inc.dtype)[:, None]
+    return scores + inc
 
 
 def rank_topk(scores: jax.Array, train_ids: jax.Array, *, k: int,
@@ -243,7 +253,12 @@ def rank_topk(scores: jax.Array, train_ids: jax.Array, *, k: int,
       O(N log(score_bound)) elementwise work, never a full-width sort.
 
     Rows with score <= 0 (incl. masked training rows) are invalid: their
-    ids come back -1 and n_valid excludes them.
+    ids come back -1 and n_valid excludes them. Tombstoned rows of a live
+    catalog arrive here already zeroed (accumulate_scores' valid mask),
+    so they fall under the same rule — and because masking only LOWERS
+    scores, any ``score_bound`` that was valid for the unmasked buffer
+    (the per-query box count) stays valid under tombstones, down to the
+    all-dead edge where every query simply yields n_valid == 0.
 
     ``scores_transposed=True`` accepts the engine's row-major [N, Q]
     buffer directly; the flip happens inside the jit where XLA fuses it

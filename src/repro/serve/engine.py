@@ -45,12 +45,28 @@ class QueryRequest:
 
 
 @dataclass
+class IngestRequest:
+    """A live-catalog mutation riding the same queue as queries
+    (DESIGN.md §12): op is "append" (``features`` [m, D] -> new global
+    ids in the response info), "delete" (``ids`` to tombstone) or
+    "compact". The serving loop applies ingests BETWEEN query windows in
+    arrival order — an ingest closes the current batching window, so
+    queries batched before it run on the pre-ingest snapshot and queries
+    after it see the new epoch."""
+    request_id: int
+    op: str
+    features: Optional[np.ndarray] = None
+    ids: Optional[Sequence[int]] = None
+
+
+@dataclass
 class QueryResponse:
     request_id: int
     ok: bool
     result: Optional[QueryResult] = None
     error: str = ""
     latency_s: float = 0.0
+    info: Dict = field(default_factory=dict)   # ingest acks land here
 
 
 class QueryServer:
@@ -72,10 +88,15 @@ class QueryServer:
         self._q: "queue.Queue[Tuple[QueryRequest, queue.Queue]]" = queue.Queue()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._held = None            # ingest that closed a batch window
+        self._compact_thread: Optional[threading.Thread] = None
         self.stats = {"served": 0, "errors": 0, "batches": 0,
                       "batched_queries": 0, "latency_sum": 0.0,
                       "fit_s_sum": 0.0, "host_bytes": 0,
-                      "sharded_queries": 0}
+                      "sharded_queries": 0,
+                      "ingests": 0, "ingest_errors": 0, "ingest_s_sum": 0.0,
+                      "rows_appended": 0, "rows_deleted": 0,
+                      "compactions": 0}
 
     def _query_kwargs(self, req: QueryRequest) -> Dict:
         kw = dict(req.kwargs)
@@ -84,6 +105,42 @@ class QueryServer:
         return kw
 
     # ------------------------------------------------------------------
+    def handle_ingest(self, req: IngestRequest) -> QueryResponse:
+        """Apply one live-catalog mutation (engine must be live=True).
+        Returns an ack response whose ``info`` carries the op's outcome
+        (append -> the new rows' global ids). Per-request error
+        isolation: a bad ingest never takes down the server."""
+        t0 = time.perf_counter()
+        try:
+            if req.op == "append":
+                ids = self.engine.append(req.features)
+                info = {"op": "append", "ids": ids, "rows": int(len(ids))}
+                self.stats["rows_appended"] += int(len(ids))
+            elif req.op == "delete":
+                nd = self.engine.delete(req.ids)
+                info = {"op": "delete", "rows": nd}
+                self.stats["rows_deleted"] += nd
+            elif req.op == "compact":
+                # the heavy merge runs OFF the serving loop (the whole
+                # point of background compaction — a synchronous rebuild
+                # here would stall every queued query for seconds);
+                # queries keep serving the old snapshot until the swap
+                self._compact_thread = self.engine.compact(background=True)
+                info = {"op": "compact", "background": True}
+                self.stats["compactions"] += 1
+            else:
+                raise ValueError(f"unknown ingest op {req.op!r}")
+            resp = QueryResponse(req.request_id, True, None,
+                                 latency_s=time.perf_counter() - t0,
+                                 info=info)
+        except Exception as e:  # noqa: BLE001 — per-request isolation
+            resp = QueryResponse(req.request_id, False, None, f"{e}",
+                                 time.perf_counter() - t0)
+            self.stats["ingest_errors"] += 1
+        self.stats["ingests"] += 1
+        self.stats["ingest_s_sum"] += resp.latency_s
+        return resp
+
     def handle(self, req: QueryRequest) -> QueryResponse:
         t0 = time.perf_counter()
         try:
@@ -164,25 +221,45 @@ class QueryServer:
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
-    def submit(self, req: QueryRequest) -> "queue.Queue[QueryResponse]":
+    def submit(self, req) -> "queue.Queue[QueryResponse]":
+        """Enqueue a QueryRequest OR an IngestRequest; both resolve to a
+        QueryResponse on the returned queue."""
         out: "queue.Queue[QueryResponse]" = queue.Queue(maxsize=1)
         self._q.put((req, out))
         return out
 
+    def _next_item(self, timeout: float):
+        if self._held is not None:
+            item, self._held = self._held, None
+            return item
+        return self._q.get(timeout=timeout)
+
     def _loop(self):
+        """Batching loop with ingest interleaving: ingests apply BETWEEN
+        query windows, in arrival order. An ingest at the head of the
+        queue runs immediately; one arriving mid-window closes the
+        window (the collected queries run on the snapshot they arrived
+        under) and applies before the next window opens."""
         while not self._stop.is_set():
             try:
-                first = self._q.get(timeout=0.05)
+                first = self._next_item(0.05)
             except queue.Empty:
+                continue
+            if isinstance(first[0], IngestRequest):
+                first[1].put(self.handle_ingest(first[0]))
                 continue
             batch = [first]
             deadline = time.perf_counter() + self.batch_window_s
             while len(batch) < self.max_batch:
                 try:
-                    batch.append(self._q.get(
-                        timeout=max(deadline - time.perf_counter(), 0)))
+                    item = self._next_item(
+                        max(deadline - time.perf_counter(), 0))
                 except queue.Empty:
                     break
+                if isinstance(item[0], IngestRequest):
+                    self._held = item      # closes this window; runs next
+                    break
+                batch.append(item)
             reqs = [b[0] for b in batch]
             resps = self.handle_batch(reqs)
             for (_, out), resp in zip(batch, resps):
@@ -192,14 +269,27 @@ class QueryServer:
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=2.0)
+        if self._compact_thread is not None:
+            self._compact_thread.join(timeout=30.0)
 
     # ------------------------------------------------------------------
     def summary(self) -> Dict:
         served = max(self.stats["served"], 1)
-        return {**self.stats,
-                "n_shards": getattr(self.engine, "n_shards", 1),
-                "mean_latency_s": self.stats["latency_sum"] / served,
-                "mean_fit_s": self.stats["fit_s_sum"] / served}
+        out = {**self.stats,
+               "n_shards": getattr(self.engine, "n_shards", 1),
+               "live": getattr(self.engine, "live", False),
+               "mean_latency_s": self.stats["latency_sum"] / served,
+               "mean_fit_s": self.stats["fit_s_sum"] / served,
+               "mean_ingest_s": (self.stats["ingest_s_sum"]
+                                 / max(self.stats["ingests"], 1))}
+        cat = getattr(self.engine, "_catalog", None)
+        if cat is not None:
+            out["epoch"] = cat.epoch
+            snap = cat.snapshot()
+            out["n_segments"] = len(snap.segments)
+            out["rows_live"] = snap.live_rows
+            out["rows_tombstoned"] = snap.n - snap.live_rows
+        return out
 
 
 def merge_shard_results(per_shard: List[QueryResult],
