@@ -486,6 +486,110 @@ def run_live(n: int = 50_000, batch: int = 8, k: int = 100,
     return rows
 
 
+def run_scale(n: int = 1_000_000, batch: int = 8, k: int = 100,
+              parity_n: int = 50_000, budget_frac: float = 0.10,
+              verbose: bool = True, out_json: str = "BENCH_scale.json"):
+    """Survivor-sparse scale gate (DESIGN.md §13): n=1M on whatever
+    backend is present (CI runs it on CPU).
+
+    Two checks, both loud:
+      * PARITY at n<=parity_n: a sparse engine's ranked ids AND scores
+        are bitwise a dense engine's on the same requests, device-ranked
+        and host-ranked — the correctness half of the memory claim;
+      * MEMORY at n: the measured peak device score-buffer bytes of the
+        ranked batch stay under ``budget_frac`` of the dense N*Q*4
+        equivalent (the buffer the dense formulation would allocate),
+        and device->host traffic stays O(k) per query — the scale half.
+
+    Features are synthetic clustered Gaussians (the zone-map's intended
+    regime: Morton ordering gives blocks tight zones, queries select a
+    cluster), NOT the image pipeline — building 1M rows of patch
+    features would swamp the quantity under test."""
+    from repro.core.engine import SearchEngine
+
+    d, n_clusters = 24, 1024
+    rng = np.random.default_rng(0)
+    centers = rng.normal(0, 5.0, (n_clusters, d)).astype(np.float32)
+    assign = rng.integers(0, n_clusters, n)
+    feats = (centers[assign]
+             + rng.normal(0, 0.3, (n, d))).astype(np.float32)
+
+    # labelled queries over two clusters; label rows drawn from the
+    # parity prefix so the SAME requests run at both catalog sizes
+    qrng = np.random.default_rng(1)
+    reqs = []
+    for i in range(batch):
+        c = i % 2
+        in_c = np.nonzero(assign[:parity_n] == c)[0]
+        out_c = np.nonzero(assign[:parity_n] != c)[0]
+        reqs.append({"pos_ids": qrng.choice(in_c, 15, replace=False),
+                     "neg_ids": qrng.choice(out_c, 80, replace=False),
+                     "model": "dbranch", "max_results": k})
+
+    eng_kw = dict(n_subsets=8, subset_dim=6, block=4096, seed=0)
+
+    # ---- parity gate at n<=50k: sparse bitwise == dense --------------
+    es = SearchEngine(feats[:parity_n], **eng_kw, score_mode="sparse")
+    ed = SearchEngine(feats[:parity_n], **eng_kw, score_mode="dense")
+    for mr in (None, k):
+        rq = [{**r, "max_results": mr} for r in reqs]
+        for a, b in zip(es.query_batch(rq), ed.query_batch(rq)):
+            if not (np.array_equal(a.ids, b.ids)
+                    and np.array_equal(a.scores, b.scores)):
+                raise AssertionError(
+                    f"sparse ids/scores != dense at n={parity_n}, "
+                    f"max_results={mr} — sparse scoring regressed")
+
+    # ---- the at-scale run --------------------------------------------
+    t0 = time.perf_counter()
+    eng = SearchEngine(feats, **eng_kw, score_mode="sparse")
+    build_s = time.perf_counter() - t0
+    eng.query_batch(reqs)              # warm: jit + mirrors + hints
+    t0 = time.perf_counter()
+    outs = eng.query_batch(reqs)
+    wall = time.perf_counter() - t0
+    st = outs[0].stats
+    peak = int(st["batch_score_buffer_bytes_peak"])
+    dense_eq = int(st["batch_dense_score_bytes_equiv"])
+    host_bytes = int(st["batch_host_bytes_transferred"])
+    budget = int(budget_frac * dense_eq)
+    if peak > budget:
+        raise AssertionError(
+            f"peak device score-buffer bytes {peak} exceed the budget "
+            f"{budget} ({budget_frac:.0%} of the dense {dense_eq}-byte "
+            f"equivalent) at n={n} — the sparse memory bound regressed")
+    host_per_query = host_bytes // batch
+    host_budget = 16 * k * 4           # O(k): [k] ids+scores + stat syncs
+    if host_per_query > host_budget:
+        raise AssertionError(
+            f"device->host bytes per query {host_per_query} exceed the "
+            f"O(k) budget {host_budget} at n={n} — ranked host traffic "
+            "regressed")
+    rows = [{
+        "name": f"query_time/scale/n{n}/b{batch}/k{k}",
+        "us_per_call": round(1e6 * wall / batch, 1),
+        "n": n,
+        "batch": batch,
+        "k": k,
+        "build_s": round(build_s, 2),
+        "score_buffer_bytes_peak": peak,
+        "dense_score_bytes_equiv": dense_eq,
+        "score_buffer_frac_of_dense": round(peak / max(dense_eq, 1), 5),
+        "budget_bytes": budget,
+        "within_budget": 1,
+        "score_rows": int(st["batch_score_rows"]),
+        "host_bytes_per_query": host_per_query,
+        "host_bytes_budget_per_query": host_budget,
+        "parity_n": parity_n,
+        "parity_ok": 1,
+    }]
+    if verbose:
+        emit(rows, "query_time_scale")
+        emit_json(rows, out_json)
+        validate_bench_json(out_json, SCALE_REQUIRED_KEYS)
+    return rows
+
+
 # keys every ranked row must carry — the CI quick-bench step fails loudly
 # when the JSON artifact is missing any of them (the wall-time regression
 # PR 2 exposed was only visible by manual inspection before)
@@ -506,6 +610,16 @@ SHARD_REQUIRED_KEYS = (
 # ... and the live-ingest rows (BENCH_ingest.json): rows are
 # heterogeneous ("append" throughput vs "query" overhead), so each kind
 # carries its own required keys on top of a common core
+# ... and the sparse-at-scale rows (BENCH_scale.json): the memory-wall
+# gate — a row missing the budget verdict or the parity flag means the
+# scale run silently skipped one half of the claim
+SCALE_REQUIRED_KEYS = (
+    "name", "us_per_call", "n", "score_buffer_bytes_peak",
+    "dense_score_bytes_equiv", "score_buffer_frac_of_dense",
+    "budget_bytes", "within_budget", "score_rows",
+    "host_bytes_per_query", "parity_n", "parity_ok",
+)
+
 LIVE_REQUIRED_KEYS = ("name", "us_per_call", "kind", "n")
 LIVE_KIND_KEYS = {
     "append": ("append_ms", "rebuild_ms", "speedup_append_vs_rebuild",
@@ -746,6 +860,11 @@ if __name__ == "__main__":
     ap.add_argument("--live", action="store_true",
                     help="live-catalog ingestion: append vs rebuild, "
                          "ranked overhead vs delta fraction (§12)")
+    ap.add_argument("--scale", action="store_true",
+                    help="survivor-sparse memory wall at n=1M: peak "
+                         "score-buffer bytes vs the dense budget plus "
+                         "the n<=50k bitwise parity gate (§13)")
+    ap.add_argument("--scale-n", type=int, default=1_000_000)
     ap.add_argument("--check-json", action="store_true",
                     help="validate bench artifact keys (CI gate)")
     ap.add_argument("--batch", type=int, default=8)
@@ -767,6 +886,8 @@ if __name__ == "__main__":
                     shard_counts=tuple(args.shards), k=args.k)
     elif args.live:
         run_live(n=max(args.sizes), batch=args.batch, k=args.k)
+    elif args.scale:
+        run_scale(n=args.scale_n, batch=args.batch, k=args.k)
     elif args.check_json:
         validate_bench_json()
         import os
@@ -775,5 +896,7 @@ if __name__ == "__main__":
                                 SHARD_REQUIRED_KEYS)
         if os.path.exists("BENCH_ingest.json"):
             validate_live_json("BENCH_ingest.json")
+        if os.path.exists("BENCH_scale.json"):
+            validate_bench_json("BENCH_scale.json", SCALE_REQUIRED_KEYS)
     else:
         run()

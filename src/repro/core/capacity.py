@@ -1,0 +1,59 @@
+"""Capacity-bucketing helpers shared by the engine, index and segment layers.
+
+Device kernels are jit-compiled per static capacity, so every capacity that
+reaches a kernel must come from a small set of buckets or the jit cache blows
+up. Historically the rounding rules were copy-pasted across ``core/engine.py``,
+``core/index.py`` and ``core/segments.py`` with two *different* pow2 flavours
+living side by side:
+
+- ``pow2ceil(v)``  — smallest power of two >= v (4 -> 4). Used for gather
+  capacities and row-tile sizing, where v itself is a valid capacity.
+- ``pow2above(v)`` — smallest power of two strictly > v (4 -> 8). Used for
+  score bounds in the ranked merge, where the bound must exceed the value.
+
+Both are kept as distinct, named functions on purpose: collapsing them was a
+real bug source (an off-by-one-bucket either doubles compile cache pressure or
+silently truncates a merge).
+"""
+from __future__ import annotations
+
+__all__ = ["pow2ceil", "pow2above", "quantum_bucket", "hybrid_bucket",
+           "fit_bucket"]
+
+
+def pow2ceil(v: int) -> int:
+    """Smallest power of two >= max(v, 1). pow2ceil(4) == 4."""
+    return 1 << max(int(v) - 1, 0).bit_length()
+
+
+def pow2above(v: int) -> int:
+    """Smallest power of two strictly greater than max(v, 1).
+    pow2above(4) == 8."""
+    return 1 << int(max(v, 1)).bit_length()
+
+
+def quantum_bucket(v: int, quantum: int) -> int:
+    """Round v up to a multiple of ``quantum`` (ceil-div). Used where many
+    near-identical capacities would otherwise each get their own jit entry
+    but pow2 rounding would overshoot (e.g. per-shard block capacities)."""
+    v = int(v)
+    q = int(quantum)
+    return -(-v // q) * q
+
+
+def hybrid_bucket(v: int, *, quantum: int) -> int:
+    """pow2ceil below ``quantum`` (tiny sizes share a handful of jit
+    entries), quantum multiples above it (relative slop bounded by
+    quantum/v instead of the ~2x a pure pow2 round can cost). Used for
+    survivor-tile row capacities, where the tile IS the score memory and
+    pow2 overshoot at large survivor counts directly inflates the peak
+    the scale gate budgets."""
+    v = max(int(v), 1)
+    q = int(quantum)
+    return pow2ceil(v) if v <= q else quantum_bucket(v, q)
+
+
+def fit_bucket(v: int, *, floor: int) -> int:
+    """Bucket a fit-phase batch size: pow2ceil with a lower floor so tiny
+    batches share one compile entry."""
+    return max(pow2ceil(v), int(floor))

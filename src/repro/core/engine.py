@@ -44,15 +44,21 @@ from repro.core.boxes import BoxSet, concat_box_arrays
 from repro.core.dbranch import (DBENS_SUBSET_CANDIDATES, dbens_draws,
                                 fit_dbens, fit_dbranch_best_subset,
                                 fit_select_jax, split_tables)
+from repro.core.capacity import hybrid_bucket as _cap_hybrid
+from repro.core.capacity import pow2ceil as _cap_pow2ceil
+from repro.core.capacity import quantum_bucket as _cap_quantum
 from repro.core.index import (ShardedZoneMapIndex, ZoneMapIndex,
                               build_index, build_sharded_index, full_scan,
                               fused_stats, pad_boxes, query_index,
-                              query_index_sharded, sharded_fused_stats,
-                              sharded_query_accumulate,
-                              sharded_rank_merge)
+                              query_index_sharded, quantized_compact,
+                              quantized_probe, quantized_recheck,
+                              sharded_fused_stats, sharded_query_accumulate,
+                              sharded_rank_merge, sharded_sparse_probe,
+                              sharded_survivor_tiles, sparse_probe)
 from repro.core.segments import (SegmentedCatalog, SegmentedZoneMapIndex,
                                  segmented_fused_stats,
-                                 segmented_query_accumulate)
+                                 segmented_query_accumulate,
+                                 segmented_sparse_probe)
 from repro.core.subsets import make_subsets
 from repro.core.trees import fit_decision_tree, fit_random_forest
 from repro.kernels import ops as kops
@@ -103,6 +109,25 @@ class _EngineView:
     valid: Optional[jax.Array] = None          # [n] int32 device mask
     valid_host: Optional[np.ndarray] = None    # [n] bool host mirror
     live_rows: int = -1                        # -1 -> all n rows live
+
+
+@dataclass
+class SparseScores:
+    """Survivor-sparse device score form (DESIGN.md §13): the scores of
+    one query batch as row tiles keyed on GLOBAL id — ``keys`` [R] int32
+    (TILE_INVALID padding), ``vals`` [R, Q] int32 per-query vote counts
+    (zero padding). R is bounded by the survivor-row count across
+    subsets, never by N; a global id may appear in several tiles (one
+    per subset that matched it) and the consumers sum duplicates —
+    int32 addition is exactly associative, so any merge order is
+    bitwise-equal to the dense [N, Q] accumulation."""
+    keys: jax.Array               # [R] int32 global ids
+    vals: jax.Array               # [R, Q] int32 counts
+    n: int                        # catalog rows (dense-equivalent height)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.keys.nbytes) + int(self.vals.nbytes)
 
 
 class SearchEngine:
@@ -157,6 +182,8 @@ class SearchEngine:
         n_shards: int = 1,
         shard_mesh=None,
         live: bool = False,
+        score_mode: str = "sparse",
+        mirror: str = "f32",
     ):
         self.x = np.ascontiguousarray(np.asarray(features, np.float32))
         self.n, self.d = self.x.shape
@@ -182,6 +209,31 @@ class SearchEngine:
         self._cap_hints: Dict = {}
         self.n_shards = max(int(n_shards), 1)
         self.live = bool(live)
+        # score accumulation form (DESIGN.md §13): "sparse" keeps device
+        # scores as survivor tiles keyed on global id — bounded by the
+        # survivor count, never N*Q — while "dense" materialises the full
+        # [N, Q] buffer (the original formulation, kept as the oracle).
+        # int32 vote addition is exactly associative, so both forms are
+        # bitwise-identical end to end.
+        self.score_mode = str(score_mode)
+        if self.score_mode not in ("sparse", "dense"):
+            raise ValueError(f"score_mode must be 'sparse' or 'dense', "
+                             f"got {score_mode!r}")
+        # "quantized" probes int8/f16 device mirrors with a conservative
+        # code-space prune, then re-checks the candidate set against the
+        # exact f32 rows — results stay bitwise, device bytes drop ~4x
+        self.mirror = str(mirror)
+        if self.mirror not in ("f32", "quantized"):
+            raise ValueError(f"mirror must be 'f32' or 'quantized', "
+                             f"got {mirror!r}")
+        if self.mirror == "quantized" and (
+                self.score_mode != "sparse" or not self.use_fused
+                or self.live or self.n_shards > 1):
+            raise ValueError(
+                "mirror='quantized' requires score_mode='sparse', "
+                "use_fused=True and a static non-sharded catalog")
+        # high-water mark of device score-buffer bytes across queries
+        self._score_bytes_peak = 0
         self._catalog: Optional[SegmentedCatalog] = None
         self._sync_lock = threading.Lock()
         t0 = time.perf_counter()
@@ -332,7 +384,24 @@ class SearchEngine:
             "index_bytes": int(sum(self._index_nbytes(ix)
                                    for ix in self.indexes)),
             "feature_bytes": int(self.x.nbytes),
+            "score_mode": self.score_mode,
+            "mirror": self.mirror,
         }
+        # ACTUAL device-mirror residency, by kind and per index — only
+        # mirrors that have been uploaded count (lazy caches report 0
+        # until first use), so this is what the accelerator really holds
+        dev: Dict[str, int] = {}
+        per_index = []
+        for ix in self.indexes:
+            db = ix.device_bytes()
+            per_index.append({"subset_id": int(ix.subset_id),
+                              **{k: int(v) for k, v in db.items()},
+                              "total": int(sum(db.values()))})
+            for k, v in db.items():
+                dev[k] = dev.get(k, 0) + int(v)
+        st["device_bytes"] = {**dev, "total": int(sum(dev.values()))}
+        st["device_bytes_per_index"] = per_index
+        st["score_buffer_bytes_peak"] = int(self._score_bytes_peak)
         if self._catalog is not None:
             st["live"] = True
             st.update(self._catalog.stats())
@@ -605,19 +674,22 @@ class SearchEngine:
             totals += np.bincount(owner, minlength=nq)
         return jobs, (int(totals.max()) if jobs else 0)
 
+    # capacity/shape bucketing is shared policy (core/capacity.py) — the
+    # engine methods survive as thin delegates because they are part of
+    # the class surface tests and subclasses poke at
     @staticmethod
     def _pow2ceil(v: int) -> int:
-        return 1 << max(int(v) - 1, 0).bit_length()
+        return _cap_pow2ceil(v)
 
-    @classmethod
-    def _fit_bucket(cls, v: int, quantum: int) -> int:
+    @staticmethod
+    def _fit_bucket(v: int, quantum: int) -> int:
         """Shape bucket for the batched trainer: pow2 below ``quantum``
         (few keys for tiny sizes), then quantum multiples (a 128-lane
         dbens window pads to 640 lanes, not 1024)."""
         v = max(int(v), 1)
         if v <= quantum:
-            return cls._pow2ceil(v)
-        return quantum * (-(-v // quantum))
+            return _cap_pow2ceil(v)
+        return _cap_quantum(v, quantum)
 
     def _cap_key(self, sid: int, n_boxes: int, geom: int = 0):
         """Hints are keyed by (geometry generation, subset, pow2-bucketed
@@ -654,7 +726,7 @@ class SearchEngine:
         while the key count stays ~n_blocks/8 (per-shard block counts
         are small)."""
         v = max(int(v), 1)
-        b = -(-v // 8) * 8 if self._mesh_sharded() else self._pow2ceil(v)
+        b = _cap_quantum(v, 8) if self._mesh_sharded() else _cap_pow2ceil(v)
         return min(b, n_blocks)
 
     def _initial_capacity(self, index, n_boxes: Optional[int] = None,
@@ -747,7 +819,16 @@ class SearchEngine:
         into the score buffer on device (kops.accumulate_scores). The
         common case is exactly one sync of a few int32s per query batch —
         the per-subset blocking int(n_hit) round-trips of the old path
-        are gone."""
+        are gone.
+
+        score_mode="sparse" (the default, DESIGN.md §13) replaces the
+        persistent dense buffer with survivor tiles: same rounds, same
+        sync cadence, same retries — the accumulation form is the only
+        difference, and it is bitwise-equivalent."""
+        if self.score_mode == "sparse":
+            if self.mirror == "quantized":
+                return self._device_scores_quantized(jobs, nq, view)
+            return self._device_scores_sparse(jobs, nq, view)
         if view.live:
             return self._device_scores_segmented(jobs, nq, view)
         if self.n_shards > 1:
@@ -804,6 +885,7 @@ class SearchEngine:
                     agg, fused_stats(index, nh, cap, merged.n_boxes),
                     merged.n_boxes)
             agg["retried_subsets"] += len(pending)
+        self._note_dense_buffer(agg, scores, nq, view)
         return scores, self._finalize_agg(agg, view)
 
     def _device_scores_sharded(self, jobs, nq: int, view: _EngineView):
@@ -873,6 +955,7 @@ class SearchEngine:
                                              flat=self._shard_flat),
                     merged.n_boxes)
             agg["retried_subsets"] += len(pending)
+        self._note_dense_buffer(agg, scores, nq, view)
         return scores, self._finalize_agg(agg, view)
 
     def _device_scores_segmented(self, jobs, nq: int, view: _EngineView):
@@ -937,14 +1020,301 @@ class SearchEngine:
                 self._accumulate_agg(agg, st_d, merged.n_boxes)
             agg["retried_subsets"] += len(pending)
         agg["per_segment_blocks_touched"] = per_seg_agg.tolist()
+        self._note_dense_buffer(agg, scores, nq, view)
         return scores, self._finalize_agg(agg, view)
+
+    def _note_dense_buffer(self, agg: Dict, scores, nq: int,
+                           view: _EngineView) -> None:
+        """Dense-path memory accounting, symmetric with the sparse form:
+        the peak device score footprint IS the full persistent buffer."""
+        agg["score_buffer_bytes_peak"] = int(scores.nbytes)
+        agg["score_rows"] = int(scores.nbytes) // (4 * max(nq, 1))
+        agg["dense_score_bytes_equiv"] = int(view.n) * nq * 4
+        self._score_bytes_peak = max(self._score_bytes_peak,
+                                     int(scores.nbytes))
+
+    def _device_scores_sparse(self, jobs, nq: int, view: _EngineView):
+        """The survivor-sparse accumulation (tentpole, DESIGN.md §13).
+
+        Identical round structure to the dense methods — same probes and
+        capacities, same ONE batched stat sync per round, same hint
+        updates, same overflow pricing and requeue buckets — so every
+        pinned sync/retry contract holds unchanged. The difference is
+        Phase B: instead of scatter-adding into an [N, Q] buffer, each
+        round's non-overflowed subsets compact their surviving rows
+        into one packed, EXACTLY-sized tile (the stat sync that cleared
+        the overflow check also reported the match counts, so tiles can
+        never overflow and never add a retry round). The zone prune is
+        conservative — every row with a nonzero count lives in a
+        surviving block — and int32 vote addition is associative, so
+        the tile merge is bitwise-equal to the dense accumulation."""
+        agg = self._new_agg()
+        live = view.live
+        sharded = (not live) and self.n_shards > 1
+        mesh_mode = sharded and not self._shard_flat
+        per_seg_agg = None
+        if live:
+            n_segs = view.indexes[0].n_segments
+            agg["n_segments"] = n_segs
+            agg["rows_live"] = view.live_rows
+            agg["rows_tombstoned"] = view.n - view.live_rows
+            per_seg_agg = np.zeros(n_segs, np.int64)
+        if sharded:
+            agg["n_shards"] = self.n_shards
+        geom = view.geom if live else 0
+        tile_parts, tile_bytes, score_rows = [], 0, 0
+        # every per-row, per-query count is bounded by its round's merged
+        # box count, so when the whole batch stays below 2**15 the tile
+        # values fit int16 exactly — half the value bytes, upcast to
+        # int32 before any summation (sparse_topk / host export)
+        val_dt = (jnp.int16
+                  if max(m.n_boxes for _, m, _ in jobs) < 2 ** 15
+                  else jnp.int32)
+        val_sz = np.dtype(val_dt).itemsize
+        transient = 0
+        pending = [(sid, merged, owner,
+                    self._initial_capacity(view.indexes[sid],
+                                           merged.n_boxes, geom=geom))
+                   for sid, merged, owner in jobs]
+        while pending:
+            launched, round_parts, round_rcaps = [], [], []
+            for sid, merged, owner, cap in pending:
+                index = view.indexes[sid]
+                lo, hi, owner_p = pad_boxes(merged.lo, merged.hi, owner)
+                onehot = jnp.asarray(
+                    (owner_p[:, None] == np.arange(nq)[None]
+                     ).astype(np.float32))
+                lo_d, hi_d = jnp.asarray(lo), jnp.asarray(hi)
+                if live:
+                    probe = segmented_sparse_probe(
+                        index, lo_d, hi_d, onehot, view.valid,
+                        capacity=cap, use_pallas=self.use_pallas)
+                elif sharded:
+                    probe = sharded_sparse_probe(
+                        index, lo_d, hi_d, onehot, capacity=cap,
+                        mesh=self.shard_mesh, use_pallas=self.use_pallas)
+                else:
+                    probe = sparse_probe(index, lo_d, hi_d, onehot,
+                                         capacity=cap,
+                                         use_pallas=self.use_pallas)
+                launched.append((sid, merged, owner, cap) + probe)
+            # ONE batched sync: a FIXED-width int vector per subset —
+            # flat in shard count, exactly the dense cadence
+            stvecs = np.asarray(jnp.stack([l[7] for l in launched]))
+            agg["n_host_syncs"] += 1
+            agg["host_bytes_transferred"] += int(stvecs.nbytes)
+            pending = []
+            for (sid, merged, owner, cap, counts, gids, ok, _), st in zip(
+                    launched, stvecs):
+                index = view.indexes[sid]
+                nh = int(st[0])
+                key = self._cap_key(sid, merged.n_boxes, geom)
+                self._cap_hints[key] = max(
+                    nh, (self._cap_hints.get(key, 0) * 3) // 4)
+                if nh > cap:
+                    # the failed attempt still gathered (and priced) cap
+                    # blocks — per shard on a mesh, globally otherwise
+                    if sharded:
+                        gathered = cap if self._shard_flat \
+                            else self.n_shards * cap
+                        retry = self._cap_bucket(nh,
+                                                 self._cap_blocks(index))
+                    else:
+                        gathered = cap
+                        retry = min(self._pow2ceil(nh), index.n_blocks)
+                    agg["blocks_gathered"] += gathered
+                    agg["bytes_touched"] += int(
+                        gathered * index.block * len(index.dims) * 4)
+                    pending.append((sid, merged, owner, retry))
+                    continue
+                if live:
+                    st_d = segmented_fused_stats(index, nh, st[2:], cap,
+                                                 merged.n_boxes,
+                                                 view.live_rows)
+                    per_seg_agg += np.asarray(
+                        st_d["per_segment_blocks_touched"], np.int64)
+                    nm = int(st[1])
+                    score_rows += nm
+                elif sharded:
+                    st_d = sharded_fused_stats(index, nh, int(st[1]), cap,
+                                               merged.n_boxes,
+                                               flat=self._shard_flat)
+                    nm = int(st[3])     # per-shard max (flat: global)
+                    score_rows += int(st[4])
+                else:
+                    st_d = fused_stats(index, nh, cap, merged.n_boxes)
+                    nm = int(st[1])
+                    score_rows += nm
+                self._accumulate_agg(agg, st_d, merged.n_boxes)
+                if mesh_mode:
+                    # pow2 keeps the tile divisible across mesh shards
+                    rcap = self._pow2ceil(max(nm, 1))
+                    keys, vals = sharded_survivor_tiles(
+                        counts, gids, ok, row_capacity=rcap,
+                        mesh=self.shard_mesh)
+                    tile_parts.append((keys, vals))
+                    tile_bytes += int(keys.nbytes) + int(vals.nbytes)
+                else:
+                    # quantum bucketing above 512 rows: at large survivor
+                    # counts the tile IS the score memory, and the ~2x a
+                    # pow2 round can overshoot would land straight on
+                    # the scale gate's peak-bytes budget
+                    rcap = _cap_hybrid(max(nm, 1), quantum=512)
+                    round_parts.append((counts, gids, ok))
+                    round_rcaps.append(rcap)
+            if len(round_parts) == 1:
+                # single-subset round: the compaction's output IS the
+                # merged tile — no slice writes, no packing scratch
+                keys, vals, _ = kops.survivor_tiles(
+                    *round_parts[0], row_capacity=round_rcaps[0],
+                    val_dtype=val_dt)
+                tile_parts.append((keys, vals))
+                tile_bytes += int(keys.nbytes) + int(vals.nbytes)
+            elif round_parts:
+                # one jit packs every subset of this round straight into
+                # a single merged tile (in-place slice writes): peak is
+                # the merged tile + one subset's scratch, never the
+                # per-subset tiles PLUS a concatenated copy
+                keys, vals = kops.packed_survivor_tiles(
+                    tuple(round_parts), row_capacities=tuple(round_rcaps),
+                    val_dtype=val_dt)
+                tile_parts.append((keys, vals))
+                tile_bytes += int(keys.nbytes) + int(vals.nbytes)
+                transient = max(transient,
+                                max(rc * (4 + nq * val_sz)
+                                    for rc in round_rcaps))
+            agg["retried_subsets"] += len(pending)
+        if live:
+            agg["per_segment_blocks_touched"] = per_seg_agg.tolist()
+        return self._finish_sparse(tile_parts, tile_bytes, score_rows,
+                                   agg, nq, view,
+                                   transient_bytes=transient)
+
+    def _device_scores_quantized(self, jobs, nq: int, view: _EngineView):
+        """Sparse scoring against the COMPRESSED device mirrors
+        (DESIGN.md §13, mirror='quantized'): the probe prunes zones in
+        outward-widened f16 and tests rows in int8 code space with
+        conservative thresholds — it can only OVER-select, never drop a
+        true survivor — then the candidate ids cross to the host and the
+        exact f32 rows of ONLY those candidates are staged back up for
+        the bitwise re-check that emits the tiles. Device-resident row
+        bytes drop ~4x; host staging is O(candidates) per subset. The
+        extra per-subset candidate sync is why this path is opt-in: it
+        trades the dense/sparse paths' pinned one-sync-per-round cadence
+        for mirror compression."""
+        agg = self._new_agg()
+        tile_parts, tile_bytes, score_rows = [], 0, 0
+        pending = [(sid, merged, owner,
+                    self._initial_capacity(view.indexes[sid],
+                                           merged.n_boxes))
+                   for sid, merged, owner in jobs]
+        while pending:
+            launched = []
+            for sid, merged, owner, cap in pending:
+                index = view.indexes[sid]
+                lo, hi, owner_p = pad_boxes(merged.lo, merged.hi, owner)
+                onehot = jnp.asarray(
+                    (owner_p[:, None] == np.arange(nq)[None]
+                     ).astype(np.float32))
+                lo_d, hi_d = jnp.asarray(lo), jnp.asarray(hi)
+                gids, cmask, st = quantized_probe(index, lo_d, hi_d,
+                                                  capacity=cap)
+                launched.append((sid, merged, owner, cap, gids, cmask,
+                                 st, lo_d, hi_d, onehot))
+            stvecs = np.asarray(jnp.stack([l[6] for l in launched]))
+            agg["n_host_syncs"] += 1
+            agg["host_bytes_transferred"] += int(stvecs.nbytes)
+            pending = []
+            for (sid, merged, owner, cap, gids, cmask, _, lo_d, hi_d,
+                 onehot), st in zip(launched, stvecs):
+                index = view.indexes[sid]
+                nh, ncand = int(st[0]), int(st[1])
+                key = self._cap_key(sid, merged.n_boxes)
+                self._cap_hints[key] = max(
+                    nh, (self._cap_hints.get(key, 0) * 3) // 4)
+                if nh > cap:
+                    agg["blocks_gathered"] += cap
+                    # the discarded gather moved int8 rows: 1 byte/dim
+                    agg["bytes_touched"] += int(
+                        cap * index.block * len(index.dims))
+                    pending.append((sid, merged, owner,
+                                    min(self._pow2ceil(nh),
+                                        index.n_blocks)))
+                    continue
+                st_d = fused_stats(index, nh, cap, merged.n_boxes)
+                # the surviving gather also moved int8, not f32
+                st_d["bytes_touched"] = int(st_d["bytes_touched"]) // 4
+                self._accumulate_agg(agg, st_d, merged.n_boxes)
+                rcap = self._pow2ceil(max(ncand, 1))
+                cgids_dev, _ = quantized_compact(gids, cmask,
+                                                 row_capacity=rcap)
+                cgids = np.asarray(cgids_dev)      # O(candidates) sync
+                agg["n_host_syncs"] += 1
+                agg["host_bytes_transferred"] += int(cgids.nbytes)
+                # stage the EXACT f32 rows of only the candidate set;
+                # +inf pad rows match nothing and carry zeroed vals
+                xsub = np.full((rcap, len(index.dims)), np.inf,
+                               np.float32)
+                livem = cgids >= 0
+                if livem.any():
+                    xsub[livem] = view.x[cgids[livem]][:, index.dims]
+                agg["host_bytes_transferred"] += int(xsub.nbytes)
+                keys, vals = quantized_recheck(jnp.asarray(xsub),
+                                               jnp.asarray(cgids),
+                                               lo_d, hi_d, onehot)
+                score_rows += ncand
+                tile_parts.append((keys, vals))
+                tile_bytes += int(keys.nbytes) + int(vals.nbytes)
+            agg["retried_subsets"] += len(pending)
+        return self._finish_sparse(tile_parts, tile_bytes, score_rows,
+                                   agg, nq, view)
+
+    def _finish_sparse(self, tile_parts, tile_bytes: int, score_rows: int,
+                       agg: Dict, nq: int, view: _EngineView, *,
+                       transient_bytes: int = 0):
+        """Merge the survivor tile parts into ONE SparseScores and close
+        out the memory accounting. On the packed path there is exactly
+        one part per round — already a single merged buffer, no copy —
+        so the peak is the tiles plus the packing scratch the caller
+        measured (``transient_bytes``). Multi-part rounds (mesh shards,
+        the quantized re-check, retry rounds) still pay a concatenated
+        copy, and the accounting says so. Either way the footprint is
+        bounded by survivors, never by N*Q."""
+        copied = 0
+        if tile_parts:
+            if len(tile_parts) == 1:
+                keys, vals = tile_parts[0]
+            else:
+                keys = jnp.concatenate([t[0] for t in tile_parts])
+                vals = jnp.concatenate([t[1] for t in tile_parts])
+                copied = int(keys.nbytes) + int(vals.nbytes)
+        else:
+            keys = jnp.full((1,), kops.TILE_INVALID, jnp.int32)
+            vals = jnp.zeros((1, nq), jnp.int32)
+        sp = SparseScores(keys, vals, int(view.n))
+        peak = int(tile_bytes) + max(copied, int(transient_bytes))
+        agg["score_buffer_bytes_peak"] = peak
+        agg["score_rows"] = int(score_rows)
+        agg["dense_score_bytes_equiv"] = int(view.n) * nq * 4
+        self._score_bytes_peak = max(self._score_bytes_peak, peak)
+        return sp, self._finalize_agg(agg, view)
 
     def _scores_to_host(self, scores_dev, view: _EngineView) -> np.ndarray:
         """[N, Q] int32 host counts in GLOBAL row order from the device
         score buffer — the single transfer the max_results=None path
         pays. Sharded buffers are [S, Nloc_max, Q]; each shard's real
         rows land back at its global offset (padding never copied).
-        Segmented (live) buffers are already in global id order."""
+        Segmented (live) buffers are already in global id order.
+        SparseScores transfer only the survivor tiles and de-duplicate
+        by scatter-add — int32 addition makes the result bitwise equal
+        to the dense transfer at O(survivors) traffic."""
+        if isinstance(scores_dev, SparseScores):
+            keys = np.asarray(scores_dev.keys)
+            vals = np.asarray(scores_dev.vals)
+            out = np.zeros((scores_dev.n, vals.shape[1]), np.int32)
+            m = keys != int(kops.TILE_INVALID)
+            np.add.at(out, keys[m], vals[m])
+            return out
         if view.live or self.n_shards == 1:
             return np.asarray(scores_dev)
         sc = np.asarray(scores_dev)
@@ -1013,7 +1383,10 @@ class SearchEngine:
         scores_dev, stats = self._device_scores(jobs, 1, view)
         if mr is None:
             counts = self._scores_to_host(scores_dev, view)[:, 0]
-            stats["host_bytes_transferred"] += int(counts.nbytes)
+            # sparse buffers cross as tiles: price what actually moved
+            stats["host_bytes_transferred"] += (
+                scores_dev.nbytes if isinstance(scores_dev, SparseScores)
+                else int(counts.nbytes))
             ids, scores = self._rank(counts, pos_ids, neg_ids,
                                      include_training)
         else:
@@ -1065,7 +1438,13 @@ class SearchEngine:
             if not inc:
                 tr = np.concatenate([pos, neg])
                 tids[q, :len(tr)] = tr
-        if self.n_shards > 1 and not view.live:
+        if isinstance(scores_dev, SparseScores):
+            # the tiles carry GLOBAL ids, so one streaming merge + top-k
+            # serves every configuration — monolithic, sharded and live
+            # alike; no per-shard extraction stage, still [Q, k] out
+            ids_k, scores_k, n_valid = kops.sparse_topk(
+                scores_dev.keys, scores_dev.vals, jnp.asarray(tids), k=kk)
+        elif self.n_shards > 1 and not view.live:
             ids_k, scores_k, n_valid = sharded_rank_merge(
                 view.indexes[0], scores_dev, jnp.asarray(tids), k=kk,
                 score_bound=score_bound, mesh=self.shard_mesh)
@@ -1235,7 +1614,10 @@ class SearchEngine:
             # see the exact device-ranking prefix
             counts = np.ascontiguousarray(
                 self._scores_to_host(scores_dev, view).T)
-            agg["host_bytes_transferred"] += int(counts.nbytes)
+            # sparse buffers cross as tiles: price what actually moved
+            agg["host_bytes_transferred"] += (
+                scores_dev.nbytes if isinstance(scores_dev, SparseScores)
+                else int(counts.nbytes))
             ranked = []
             for q, (_, _, _, pos, neg, incl, m, _) in enumerate(fitted):
                 ids, sc = self._rank(counts[q], pos, neg, incl)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.boxes import BoxSet, concat_box_arrays
+from repro.core.capacity import pow2above, quantum_bucket
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -82,6 +83,13 @@ class ZoneMapIndex:
     # lazily-populated device inverse-permutation mirror [n_rows] int32
     _dev_inv_perm: Optional[jax.Array] = field(
         default=None, repr=False, compare=False)
+    # lazily-populated global-row-id mirror [NB, block] int32 (-1 padding)
+    _dev_gids: Optional[jax.Array] = field(
+        default=None, repr=False, compare=False)
+    # lazily-populated quantized mirror (survivor-sparse serving):
+    # (qrows3 int8, c0 f32, scale f32, zlo16 f16, zhi16 f16)
+    _dev_quant: Optional[Tuple[jax.Array, ...]] = field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_blocks(self) -> int:
@@ -111,6 +119,82 @@ class ZoneMapIndex:
             inv[self.perm[valid]] = np.nonzero(valid)[0].astype(np.int32)
             self._dev_inv_perm = jnp.asarray(inv)
         return self._dev_inv_perm
+
+    def device_gids(self) -> jax.Array:
+        """[NB, block] int32 GLOBAL row id per (block, slot) — the
+        permutation reshaped to the block grid, -1 on padding slots.
+        The survivor-sparse path labels fused tiles with it
+        (kernels/ops.tile_candidates); uploaded once and cached like the
+        other mirrors. For a monolithic index global id == original row
+        id; sharded/segmented wrappers add their own offsets."""
+        if self._dev_gids is None:
+            self._dev_gids = jnp.asarray(
+                np.ascontiguousarray(self.perm.astype(np.int32).reshape(
+                    self.n_blocks, self.block)))
+        return self._dev_gids
+
+    def device_quantized(self) -> Tuple[jax.Array, ...]:
+        """Compressed device mirror for the quantized-prune serving path:
+        (qrows3 [NB, block, d'] int8, c0 [d'] f32, scale [d'] f32,
+         zlo16 [NB, d'] f16, zhi16 [NB, d'] f16).
+
+        Rows are per-dim affine-quantized (the train/compression.py
+        per-tensor int8 idiom, per-DIM here because subset dims have
+        unrelated ranges): code t = round((x - c0) / scale) in [0, 254],
+        stored as int8 t - 127, so |x - (c0 + t * scale)| <= scale / 2.
+        Zone maps are cast to f16 WIDENED outward (zlo rounded down, zhi
+        rounded up via nextafter) so the f16 zone prune keeps every block
+        the f32 prune keeps. Both halves make the quantized prune
+        CONSERVATIVE: it may keep false candidates, never drop a true
+        survivor — the exact f32 re-check on the candidate set restores
+        bitwise-exact counts (DESIGN.md §13). ~4.6x fewer resident bytes
+        than the f32 mirror (int8 rows + f16 zones vs f32 both)."""
+        if self._dev_quant is None:
+            real = self.perm >= 0
+            rows = self.rows
+            rr = rows[real]
+            if rr.size:
+                c0 = rr.min(0).astype(np.float32)
+                s = np.maximum((rr.max(0) - c0) / 254.0,
+                               1e-12).astype(np.float32)
+            else:
+                c0 = np.zeros(rows.shape[1], np.float32)
+                s = np.full(rows.shape[1], 1e-12, np.float32)
+            t = np.full(rows.shape, 254.0, np.float32)   # padding: inert
+            t[real] = np.clip(np.round((rr - c0) / s), 0.0, 254.0)
+            q = (t - 127.0).astype(np.int8).reshape(
+                self.n_blocks, self.block, -1)
+            zlo16 = self.zlo.astype(np.float16)
+            zhi16 = self.zhi.astype(np.float16)
+            # widen outward where the nearest-even cast rounded inward
+            zlo16 = np.where(zlo16.astype(np.float32) > self.zlo,
+                             np.nextafter(zlo16, np.float16(-np.inf)),
+                             zlo16)
+            zhi16 = np.where(zhi16.astype(np.float32) < self.zhi,
+                             np.nextafter(zhi16, np.float16(np.inf)),
+                             zhi16)
+            self._dev_quant = (jnp.asarray(q), jnp.asarray(c0),
+                               jnp.asarray(s), jnp.asarray(zlo16),
+                               jnp.asarray(zhi16))
+        return self._dev_quant
+
+    def device_bytes(self) -> dict:
+        """Actual RESIDENT device-mirror bytes by kind (0 for mirrors not
+        yet uploaded) — what index_stats aggregates so the memory claims
+        are measurable rather than inferred."""
+        out = {"rows": 0, "zones": 0, "inv_perm": 0, "gids": 0,
+               "quantized": 0}
+        if self._dev is not None:
+            rows3, zlo, zhi = self._dev
+            out["rows"] = int(rows3.nbytes)
+            out["zones"] = int(zlo.nbytes) + int(zhi.nbytes)
+        if self._dev_inv_perm is not None:
+            out["inv_perm"] = int(self._dev_inv_perm.nbytes)
+        if self._dev_gids is not None:
+            out["gids"] = int(self._dev_gids.nbytes)
+        if self._dev_quant is not None:
+            out["quantized"] = int(sum(a.nbytes for a in self._dev_quant))
+        return out
 
     def stats(self) -> dict:
         return {"blocks": self.n_blocks, "block_rows": self.block,
@@ -205,7 +289,7 @@ def pad_boxes(lo: np.ndarray, hi: np.ndarray, owner: Optional[np.ndarray]):
     from the batched trainer) are padded on device; the owner map is
     always host-side."""
     b = lo.shape[0]
-    pad = (-b) % _BOX_BUCKET
+    pad = quantum_bucket(b, _BOX_BUCKET) - b
     if pad == 0:
         return lo, hi, owner
     d = lo.shape[1]
@@ -368,6 +452,8 @@ class ShardedZoneMapIndex:
         default=None, repr=False, compare=False)
     _dev_inv_perm: Optional[jax.Array] = field(
         default=None, repr=False, compare=False)
+    _dev_gids: Optional[jax.Array] = field(
+        default=None, repr=False, compare=False)
     # mesh the cached mirrors were committed for (device placement only —
     # the VALUES are identical however the arrays are laid out)
     _dev_mesh: object = field(default=None, repr=False, compare=False)
@@ -435,6 +521,7 @@ class ShardedZoneMapIndex:
                          self._put(zhi3, mesh))
             self._dev_mesh = mesh
             self._dev_inv_perm = None      # re-commit alongside
+            self._dev_gids = None
         return self._dev
 
     def device_inv_perm(self, mesh=None) -> jax.Array:
@@ -460,6 +547,41 @@ class ShardedZoneMapIndex:
             self.device_arrays(mesh)       # keep one mesh for the mirror
             self._dev_inv_perm = self._put(inv, mesh)
         return self._dev_inv_perm
+
+    def device_gids(self, mesh=None) -> jax.Array:
+        """[S, NBmax, block] int32 GLOBAL row ids per (shard, block,
+        slot), -1 on padding slots AND padding blocks. A shard's global
+        id is its offset + local Morton permutation — the same content
+        serves the mesh formulation (sharded per device) and the flat
+        single-device fallback (reshaped to [S * NBmax, block] inside
+        the jit), because global ids do not depend on placement."""
+        if self._dev_gids is None or self._dev_mesh is not mesh:
+            s, nbm = self.n_shards, self.nb_max
+            g = np.full((s, nbm, self.block), -1, np.int32)
+            for i, sh in enumerate(self.shards):
+                if sh.n_rows:
+                    loc = sh.perm.astype(np.int32).reshape(
+                        sh.n_blocks, self.block)
+                    g[i, :sh.n_blocks] = np.where(
+                        loc >= 0, loc + np.int32(self.offsets[i]), -1)
+            self.device_arrays(mesh)       # keep one mesh for the mirror
+            self._dev_gids = self._put(g, mesh)
+        return self._dev_gids
+
+    def device_bytes(self) -> dict:
+        """Resident device-mirror bytes by kind for the STACKED mirrors
+        (the per-shard host indexes never upload their own)."""
+        out = {"rows": 0, "zones": 0, "inv_perm": 0, "gids": 0,
+               "quantized": 0}
+        if self._dev is not None:
+            rows4, zlo3, zhi3 = self._dev
+            out["rows"] = int(rows4.nbytes)
+            out["zones"] = int(zlo3.nbytes) + int(zhi3.nbytes)
+        if self._dev_inv_perm is not None:
+            out["inv_perm"] = int(self._dev_inv_perm.nbytes)
+        if self._dev_gids is not None:
+            out["gids"] = int(self._dev_gids.nbytes)
+        return out
 
     def stats(self) -> dict:
         return {"n_shards": self.n_shards, "blocks": self.total_blocks,
@@ -635,6 +757,250 @@ def sharded_query_accumulate(sindex: ShardedZoneMapIndex,
               blo, bhi, onehot)
 
 
+# ----------------------------------------------------------------------
+# survivor-sparse scoring path (DESIGN.md §13)
+# ----------------------------------------------------------------------
+# Two-phase per subset: a PROBE jit (fused zone-prune -> bounded gather ->
+# refine -> tile labelling, plus a fixed-size int stat vector) runs for
+# every pending subset, then ONE batched host sync of the stacked stat
+# vectors sizes the survivor-tile compaction EXACTLY (row_capacity =
+# pow2ceil(n_match)), so the tile extraction never overflows and the
+# host-sync count stays identical to the dense path. The probe's stat
+# vector is a FIXED length per formulation — host traffic cannot vary
+# with shard count or survivor population.
+
+@functools.lru_cache(maxsize=128)
+def _sparse_probe_fn(capacity: int, use_pallas: bool):
+    """Monolithic sparse probe: fused_query + tile labelling.
+    Returns (counts [C, block, Q], gids [C, block], ok [C, block],
+             st [2] int32 = (n_hit, n_match))."""
+
+    def fn(rows3, zlo, zhi, gids_b, lo, hi, oh):
+        counts, cand, n_hit = kops.fused_query(
+            rows3, zlo, zhi, lo, hi, oh, capacity=capacity,
+            use_pallas=use_pallas)
+        gids, ok = kops.tile_candidates(counts, cand, gids_b)
+        st = jnp.stack([n_hit, ok.sum().astype(jnp.int32)])
+        return counts, gids, ok, st
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=128)
+def _flat_sparse_probe_fn(capacity: int, use_pallas: bool):
+    """Single-device sparse probe over the stacked shard mirrors run as
+    ONE fused index on the virtual block space (the sparse analogue of
+    _flat_query_acc_fn). ``capacity`` is GLOBAL. Returns flat tiles
+    (counts [C, block, Q], gids/ok [C, block]) and the same [5] stat
+    contract as the mesh probe — global figures in the per-shard slots."""
+
+    def fn(rows4, zlo3, zhi3, gids3, lo, hi, oh):
+        s, nbm, block, d = rows4.shape
+        counts, cand, n_hit = kops.fused_query(
+            rows4.reshape(s * nbm, block, d),
+            zlo3.reshape(s * nbm, d), zhi3.reshape(s * nbm, d),
+            lo, hi, oh, capacity=capacity, use_pallas=use_pallas)
+        gids, ok = kops.tile_candidates(counts, cand,
+                                        gids3.reshape(s * nbm, block))
+        nm = ok.sum().astype(jnp.int32)
+        st = jnp.stack([n_hit, jnp.minimum(n_hit, capacity), n_hit,
+                        nm, nm])
+        return counts, gids, ok, st
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=128)
+def _sharded_sparse_probe_fn(mesh, capacity: int, use_pallas: bool):
+    """Mesh sparse probe: per-shard fused_query + tile labelling under
+    shard_map, stats reduced to FIVE ints inside the program —
+    (max n_hit, sum min(n_hit, C), sum n_hit, max n_match, sum n_match):
+    max n_hit drives overflow retry exactly like the dense path, max
+    n_match sizes the per-shard tile compaction, the sums feed stats.
+    Returns sharded (counts [S, C, block, Q], gids/ok [S, C, block],
+    st [5])."""
+
+    def local(rows3, zlo, zhi, gids_b, lo, hi, oh):
+        counts, cand, n_hit = kops.fused_query(
+            rows3, zlo, zhi, lo, hi, oh, capacity=capacity,
+            use_pallas=use_pallas)
+        gids, ok = kops.tile_candidates(counts, cand, gids_b)
+        return counts, gids, ok, n_hit, ok.sum().astype(jnp.int32)
+
+    inner = _shard_call(local, mesh, 4, 3)
+
+    def fn(rows4, zlo3, zhi3, gids3, lo, hi, oh):
+        counts, gids, ok, n_hit, nm = inner(rows4, zlo3, zhi3, gids3,
+                                            lo, hi, oh)
+        st = jnp.stack([n_hit.max(), jnp.minimum(n_hit, capacity).sum(),
+                        n_hit.sum(), nm.max(), nm.sum()])
+        return counts, gids, ok, st
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=128)
+def _sharded_tiles_fn(mesh, row_capacity: int):
+    """Per-shard survivor-tile compaction + replicate + flatten, one jit.
+    ``row_capacity`` bounds rows PER SHARD (sized from the probe's max
+    n_match, so exact). The tiny [S, rcap] tiles are replicated before
+    flattening for the same reason _sharded_rank_fn replicates its
+    candidate lists: without the constraint GSPMD would distribute the
+    downstream merge sort. Keys carry GLOBAL ids, so flattening across
+    shards needs no offset fixup and the merged tiles feed sparse_topk
+    directly — no per-shard top-k or cross-shard merge stage at all."""
+
+    def local(counts, gids, ok):
+        keys, vals, _ = kops.survivor_tiles(counts, gids, ok,
+                                            row_capacity=row_capacity)
+        return keys, vals
+
+    inner = _shard_call(local, mesh, 3, 0)
+
+    def fn(counts, gids, ok):
+        keys, vals = inner(counts, gids, ok)     # [S, rcap], [S, rcap, Q]
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            rep = NamedSharding(mesh, P())
+            keys = jax.lax.with_sharding_constraint(keys, rep)
+            vals = jax.lax.with_sharding_constraint(vals, rep)
+        s, rc = keys.shape
+        return keys.reshape(s * rc), vals.reshape(s * rc, -1)
+
+    return jax.jit(fn)
+
+
+def sparse_probe(index: ZoneMapIndex, blo: jax.Array, bhi: jax.Array,
+                 onehot: jax.Array, *, capacity: int,
+                 use_pallas: bool = True):
+    """Phase A of the monolithic survivor-sparse path (see the section
+    comment above). The caller syncs st (batched across subsets), then
+    compacts tiles via kernels/ops.survivor_tiles at an exact capacity."""
+    rows3, zlo, zhi = index.device_arrays()
+    fn = _sparse_probe_fn(int(capacity), bool(use_pallas))
+    return fn(rows3, zlo, zhi, index.device_gids(), blo, bhi, onehot)
+
+
+def sharded_sparse_probe(sindex: ShardedZoneMapIndex, blo: jax.Array,
+                         bhi: jax.Array, onehot: jax.Array, *,
+                         capacity: int, mesh=None,
+                         use_pallas: bool = True):
+    """Phase A of the sharded survivor-sparse path. ``mesh=None`` runs
+    the flat single-device formulation (global capacity, flat tiles);
+    with a mesh, per-shard tiles come back sharded and the caller
+    compacts them via sharded_survivor_tiles. Both return the same [5]
+    stat vector, so the one batched host sync is flat in shard count."""
+    rows4, zlo3, zhi3 = sindex.device_arrays(mesh)
+    gids3 = sindex.device_gids(mesh)
+    if mesh is None:
+        fn = _flat_sparse_probe_fn(int(capacity), bool(use_pallas))
+    else:
+        fn = _sharded_sparse_probe_fn(mesh, int(capacity),
+                                      bool(use_pallas))
+    return fn(rows4, zlo3, zhi3, gids3, blo, bhi, onehot)
+
+
+def sharded_survivor_tiles(counts, gids, ok, *, row_capacity: int,
+                           mesh=None):
+    """Phase B of the mesh sharded sparse path: compact each shard's
+    survivors and flatten to ([S * rcap] keys, [S * rcap, Q] vals)."""
+    return _sharded_tiles_fn(mesh, int(row_capacity))(counts, gids, ok)
+
+
+# ----------------------------------------------------------------------
+# quantized-mirror probe (conservative prune + exact re-check)
+# ----------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=128)
+def _quant_probe_fn(capacity: int):
+    """Quantized candidate probe: f16 widened-zone prune -> bounded int8
+    block gather -> per-row code-space box test. The thresholds are
+    computed in f32 code space: a row x inside box (lo, hi] has code
+    t with |x - (c0 + t*s)| <= s/2, hence (lo - c0)/s - 0.5 < t <=
+    (hi - c0)/s + 0.5; using TLO = floor((lo - c0)/s) - 1 and THI =
+    ceil((hi - c0)/s) + 1 keeps a further >= 0.5-code margin on both
+    sides, absorbing the rounding of the threshold arithmetic itself —
+    the prune can only OVER-select (property-tested). +-inf box bounds
+    (impossible pad boxes, open sides) propagate to +-inf thresholds
+    with no NaN since scale >= 1e-12.
+
+    Returns (gids [C, block] int32, cmask [C, block] bool,
+             st [2] int32 = (n_hit, n_cand))."""
+
+    def fn(qrows3, c0, scale, zlo16, zhi16, gids_b, lo, hi):
+        mask = kref.zone_prune_ref(zlo16.astype(jnp.float32),
+                                   zhi16.astype(jnp.float32), lo, hi)
+        hit = mask.any(1)
+        n_hit = hit.sum().astype(jnp.int32)
+        cand, = jnp.nonzero(hit, size=capacity, fill_value=0)
+        valid = jnp.arange(capacity) < n_hit
+        q = qrows3[cand].astype(jnp.float32) + 127.0   # codes [0, 254]
+        c, block, d = q.shape
+        qf = q.reshape(c * block, d)
+        tlo = jnp.floor((lo - c0[None]) / scale[None]) - 1.0   # [B, d']
+        thi = jnp.ceil((hi - c0[None]) / scale[None]) + 1.0
+        inside = ((qf[:, None, :] > tlo[None]) &
+                  (qf[:, None, :] <= thi[None]))       # [C*block, B, d']
+        m = jnp.all(inside, -1).any(-1).reshape(c, block)
+        gids = jnp.take(gids_b, cand, axis=0)
+        cmask = m & (gids >= 0) & valid[:, None]
+        st = jnp.stack([n_hit, cmask.sum().astype(jnp.int32)])
+        return gids, cmask, st
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=128)
+def _quant_compact_fn(row_capacity: int):
+    """Compact the quantized candidate mask into a dense [rcap] global-id
+    list (-1 past the live prefix) — the ONLY quantity that crosses to
+    the host between prune and re-check, O(candidates) not O(N)."""
+
+    def fn(gids, cmask):
+        flat_ok = cmask.reshape(-1)
+        idx, = jnp.nonzero(flat_ok, size=row_capacity, fill_value=0)
+        nr = flat_ok.sum().astype(jnp.int32)
+        live = jnp.arange(row_capacity) < nr
+        cgids = jnp.where(live, gids.reshape(-1)[idx], -1)
+        return cgids.astype(jnp.int32), nr
+
+    return jax.jit(fn)
+
+
+@jax.jit
+def _quant_recheck_fn(xsub, cgids, lo, hi, oh):
+    """Exact f32 re-check of the candidate rows: the same box predicate
+    as the dense refine (box_scan_seg_ref over the SAME float inputs
+    gives the same integer counts — membership is exact in f32), emitted
+    directly as a survivor tile. Candidate rows the exact test rejects
+    keep key validity but all-zero vals, which every downstream stage
+    already treats as score-neutral."""
+    counts = kref.box_scan_seg_ref(xsub, lo, hi, oh)
+    live = cgids >= 0
+    keys = jnp.where(live, cgids, kops.TILE_INVALID)
+    vals = counts.astype(jnp.int32) * live[:, None]
+    return keys, vals
+
+
+def quantized_probe(index: ZoneMapIndex, blo: jax.Array, bhi: jax.Array,
+                    *, capacity: int):
+    """Phase A of the quantized path (monolithic static indexes)."""
+    qrows3, c0, scale, zlo16, zhi16 = index.device_quantized()
+    fn = _quant_probe_fn(int(capacity))
+    return fn(qrows3, c0, scale, zlo16, zhi16, index.device_gids(),
+              blo, bhi)
+
+
+def quantized_compact(gids, cmask, *, row_capacity: int):
+    return _quant_compact_fn(int(row_capacity))(gids, cmask)
+
+
+def quantized_recheck(xsub: jax.Array, cgids: jax.Array, lo: jax.Array,
+                      hi: jax.Array, onehot: jax.Array):
+    return _quant_recheck_fn(xsub, cgids, lo, hi, onehot)
+
+
 @functools.lru_cache(maxsize=128)
 def _sharded_rank_fn(mesh, k: int, score_bound, method,
                      flat: bool = False):
@@ -694,8 +1060,7 @@ def sharded_rank_merge(sindex: ShardedZoneMapIndex, scores: jax.Array,
     LOOSER bound is always valid (it only sizes the threshold search /
     method choice), and bucketing keeps the cache from growing with
     every distinct per-query box count."""
-    sb = (None if score_bound is None
-          else 1 << int(max(score_bound, 1)).bit_length())
+    sb = None if score_bound is None else pow2above(score_bound)
     # the flat single-device shortcut needs virtual position == global
     # id, i.e. the standard ceil-split offsets; anything custom falls
     # back to the general per-shard + merge formulation

@@ -111,6 +111,8 @@ class SegmentedZoneMapIndex:
         default=None, repr=False, compare=False)
     _seg_blocks_dev: Optional[jax.Array] = field(
         default=None, repr=False, compare=False)
+    _gids_virt: Optional[jax.Array] = field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_segments(self) -> int:
@@ -168,6 +170,42 @@ class SegmentedZoneMapIndex:
         if self._seg_blocks_dev is None:
             self._seg_blocks_dev = jnp.asarray(self.seg_blocks, jnp.int32)
         return self._seg_blocks_dev
+
+    def device_gids(self) -> jax.Array:
+        """[NB_total, block] int32 GLOBAL row id per virtual (block,
+        slot), -1 on padding slots: each segment's local permutation grid
+        offset by the segment's global row offset, concatenated in the
+        virtual block order. Built from the per-segment cached mirrors
+        on device (an append re-offsets only the delta), it labels the
+        survivor-sparse tiles so ranking needs no virtual->global remap."""
+        if self._gids_virt is None:
+            parts = []
+            for s, o in zip(self.segs, self.offsets[:-1]):
+                g = s.device_gids()
+                parts.append(jnp.where(g >= 0, g + jnp.int32(o), -1))
+            self._gids_virt = (parts[0] if len(parts) == 1
+                               else jnp.concatenate(parts))
+        return self._gids_virt
+
+    def device_bytes(self) -> dict:
+        """Resident device-mirror bytes by kind: the per-segment cached
+        mirrors plus this view's own concatenated copies (counted only
+        when they are distinct arrays — a single-segment view shares the
+        segment's mirror)."""
+        out = {"rows": 0, "zones": 0, "inv_perm": 0, "gids": 0,
+               "quantized": 0}
+        for s in self.segs:
+            for k, v in s.device_bytes().items():
+                out[k] += v
+        if self._dev is not None and len(self.segs) > 1:
+            rows3, zlo, zhi = self._dev
+            out["rows"] += int(rows3.nbytes)
+            out["zones"] += int(zlo.nbytes) + int(zhi.nbytes)
+        if self._inv_virt is not None:
+            out["inv_perm"] += int(self._inv_virt.nbytes)
+        if self._gids_virt is not None:
+            out["gids"] += int(self._gids_virt.nbytes)
+        return out
 
     def stats(self) -> dict:
         return {"n_segments": self.n_segments, "blocks": self.n_blocks,
@@ -229,6 +267,47 @@ def segmented_query_accumulate(segx: SegmentedZoneMapIndex,
     fn = _seg_query_acc_fn(int(capacity), bool(use_pallas))
     return fn(rows3, zlo, zhi, segx.device_inv_virt(), valid, scores,
               blo, bhi, onehot, segx.device_seg_blocks())
+
+
+@functools.lru_cache(maxsize=128)
+def _seg_sparse_probe_fn(capacity: int, use_pallas: bool):
+    """Survivor-sparse probe over the virtual block space (the sparse
+    sibling of _seg_query_acc_fn): fused query + tile labelling with the
+    tombstone mask applied PER TILE ROW (tile_candidates drops dead rows
+    instead of accumulate_scores zeroing them — same zeros, applied at
+    the survivor granularity), plus the per-segment refined-block
+    attribution the honest-accounting stats are pinned on.
+
+    Returns (counts [C, block, Q], gids/ok [C, block],
+             st [2 + S] int32 = (n_hit, n_match, per-segment refined))."""
+
+    def fn(rows3, zlo, zhi, gids_v, valid, lo, hi, oh, seg_boff):
+        counts, cand, n_hit = kops.fused_query(
+            rows3, zlo, zhi, lo, hi, oh, capacity=capacity,
+            use_pallas=use_pallas)
+        gids, ok = kops.tile_candidates(counts, cand, gids_v, valid=valid)
+        seg_of = jnp.searchsorted(seg_boff, cand, side="right") - 1
+        refined = jnp.arange(capacity) < jnp.minimum(n_hit, capacity)
+        per_seg = jnp.zeros((seg_boff.shape[0] - 1,), jnp.int32).at[
+            seg_of].add(refined.astype(jnp.int32))
+        st = jnp.concatenate([n_hit[None],
+                              ok.sum().astype(jnp.int32)[None], per_seg])
+        return counts, gids, ok, st
+
+    return jax.jit(fn)
+
+
+def segmented_sparse_probe(segx: SegmentedZoneMapIndex, blo: jax.Array,
+                           bhi: jax.Array, onehot: jax.Array,
+                           valid: jax.Array, *, capacity: int,
+                           use_pallas: bool = True):
+    """Phase A of the segmented survivor-sparse path; the caller batches
+    the st sync, then compacts tiles via kernels/ops.survivor_tiles at
+    row_capacity = pow2ceil(n_match) — exact, no tile overflow."""
+    rows3, zlo, zhi = segx.device_arrays()
+    fn = _seg_sparse_probe_fn(int(capacity), bool(use_pallas))
+    return fn(rows3, zlo, zhi, segx.device_gids(), valid, blo, bhi,
+              onehot, segx.device_seg_blocks())
 
 
 def segmented_fused_stats(segx: SegmentedZoneMapIndex, n_hit: int,

@@ -220,6 +220,180 @@ def accumulate_scores(scores: jax.Array, counts: jax.Array, cand: jax.Array,
     return scores + inc
 
 
+# ----------------------------------------------------------------------
+# Survivor-sparse score tiles
+# ----------------------------------------------------------------------
+# The dense accumulate_scores above keeps an [N, Q] buffer alive for the
+# whole query — O(catalog) device memory regardless of selectivity. The
+# sparse formulation below keeps only the rows that can still score:
+# fused_query's gathered counts are [C, block, Q] TILES keyed by block,
+# and every row that survives any subset is emitted once per subset as a
+# (global row id, [Q] counts) pair. Because the scores are int32 counts,
+# addition is exactly associative: summing a row's per-subset
+# contributions in ANY order is bitwise-identical to the dense
+# accumulation, so ranking the merged tiles reproduces the dense result
+# exactly while device memory scales with survivors, not catalog size.
+
+TILE_INVALID = np.int32(2 ** 31 - 1)     # padding key; sorts past all ids
+
+
+def tile_candidates(counts: jax.Array, cand: jax.Array,
+                    gids_blocks: jax.Array,
+                    valid: jax.Array | None = None):
+    """Label fused_query's gathered tiles with global row ids and mark
+    which rows can contribute score.
+
+    counts: [C, block, Q] from fused_query (overflow slots zeroed);
+    cand: [C] gathered block ids; gids_blocks: [NB, block] int32 global
+    row id per (block, slot) — -1 on padding slots (the device mirror
+    built from the index permutation); valid: optional [n] row-liveness
+    mask in GLOBAL id space (tombstoned rows are dropped here, the
+    sparse analogue of accumulate_scores' masked increment).
+
+    Returns (gids [C, block] int32, ok [C, block] bool). ``ok`` is True
+    only for real, live rows with a nonzero count in at least one query
+    — dropping all-zero rows is score-preserving (they add nothing) and
+    is what makes the tiles survivor-sparse rather than block-dense.
+    Pure jnp; safe to trace inside a caller's jit."""
+    gids = jnp.take(gids_blocks, cand, axis=0)               # [C, block]
+    ok = (counts != 0).any(-1) & (gids >= 0)
+    if valid is not None:
+        ok &= jnp.take(valid, gids, mode="fill",
+                       fill_value=0).astype(bool)
+    return gids, ok
+
+
+@functools.partial(jax.jit, static_argnames=("row_capacity", "val_dtype"))
+def survivor_tiles(counts: jax.Array, gids: jax.Array, ok: jax.Array,
+                   *, row_capacity: int, val_dtype=jnp.int32):
+    """Compact one subset's surviving rows into a fixed-size score tile.
+
+    counts: [C, block, Q]; gids/ok: from tile_candidates;
+    ``row_capacity`` statically bounds the compaction (the engine sizes
+    it exactly from the same stats sync that drives overflow retry, so
+    a correctly-sized call never truncates — n_rows reports the true
+    survivor count for callers that want to assert that).
+
+    Returns (keys [row_capacity] int32 global row ids, TILE_INVALID past
+    the live prefix; vals [row_capacity, Q] counts in ``val_dtype``,
+    zeroed past the live prefix; n_rows scalar int32 — true survivor
+    count pre-capacity). val_dtype may be int16 when the caller bounds
+    every count below 2**15 (see packed_survivor_tiles). Tiles from
+    different subsets concatenate freely: duplicate keys are summed by
+    sparse_topk (in int32, whatever the tile width), and int32 addition
+    makes the sum order-free."""
+    c, block, q = counts.shape
+    okf = ok.reshape(c * block)
+    idx, = jnp.nonzero(okf, size=row_capacity, fill_value=0)
+    n_rows = okf.sum().astype(jnp.int32)
+    live = jnp.arange(row_capacity) < n_rows
+    keys = jnp.where(live, gids.reshape(-1)[idx], TILE_INVALID)
+    vals = (counts.reshape(c * block, q)[idx]
+            * live[:, None]).astype(val_dtype)
+    return keys.astype(jnp.int32), vals, n_rows
+
+
+@functools.partial(jax.jit, static_argnames=("row_capacities", "val_dtype"))
+def packed_survivor_tiles(parts, *, row_capacities, val_dtype=jnp.int32):
+    """Compact MANY subsets' survivors straight into one merged tile.
+
+    parts: tuple of (counts [Ci, block, Q], gids [Ci, block],
+    ok [Ci, block]) triples, one per subset; row_capacities: matching
+    tuple of static per-subset row capacities (sized exactly from the
+    same stats sync as survivor_tiles). Each subset's compaction writes
+    into its slice of a single preallocated [sum(row_capacities)] buffer
+    via dynamic_update_slice — inside the one jit those updates are
+    in-place, so the peak is the merged tile plus ONE subset's scratch,
+    not the tiles-plus-concatenated-copy the per-subset path pays.
+
+    val_dtype may be int16 when the caller can bound every per-row,
+    per-query count below 2**15 (count <= the round's merged box count,
+    which the engine knows on the host): the values are exact, merely
+    narrower, and sparse_topk / the host export upcast to int32 before
+    any summation — so the ranking stays bitwise while the value bytes
+    halve. Layout and semantics of the output match a concatenation of
+    survivor_tiles calls (TILE_INVALID keys / zero vals on padding)."""
+    total = int(sum(row_capacities))
+    q = parts[0][0].shape[-1]
+    out_k = jnp.full((total,), TILE_INVALID, jnp.int32)
+    out_v = jnp.zeros((total, q), val_dtype)
+    off = 0
+    for (counts, gids, ok), rcap in zip(parts, row_capacities):
+        c, block, _ = counts.shape
+        okf = ok.reshape(c * block)
+        idx, = jnp.nonzero(okf, size=rcap, fill_value=0)
+        live = jnp.arange(rcap) < okf.sum()
+        keys = jnp.where(live, gids.reshape(-1)[idx],
+                         TILE_INVALID).astype(jnp.int32)
+        vals = (counts.reshape(c * block, q)[idx]
+                * live[:, None]).astype(val_dtype)
+        out_k = jax.lax.dynamic_update_slice(out_k, keys, (off,))
+        out_v = jax.lax.dynamic_update_slice(out_v, vals, (off, 0))
+        off += rcap
+    return out_k, out_v
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def sparse_topk(keys: jax.Array, vals: jax.Array, train_ids: jax.Array,
+                *, k: int):
+    """Rank survivor-sparse score tiles: merge duplicate keys, mask
+    training rows, return the top-k — without ever materialising an
+    [N, Q] buffer.
+
+    keys: [R] int32 global row ids (TILE_INVALID on padding — sorts past
+    every real id); vals: [R, Q] per-row counts (zero on padding) —
+    int32, or int16 from a width-narrowed packed tile (upcast here
+    BEFORE any summation, so duplicate-key merges accumulate in int32
+    exactly as the dense path does); train_ids: [Q, T] GLOBAL ids to
+    exclude (pad with the catalog size n, which is never a key); k:
+    results per query.
+
+    Pipeline, all O(R log R) on device: sort rows by key; segment-sum
+    duplicate keys (a row surviving m subsets appears m times — int32
+    addition reproduces the dense accumulation bitwise); binary-search
+    each training id into the unique-key array and zero its scores; one
+    2-key ``lax.sort`` over (-score, id) per query — the SAME tie-break
+    contract as rank_topk / merge_topk / the host oracle: descending
+    score, ascending global id, score <= 0 invalid (ids -1).
+
+    The output is padded to a STATIC [Q, k] regardless of R, so
+    device->host traffic is O(k)/query and does not vary with tile count
+    (and therefore not with shard count or round structure).
+
+    Returns (ids [Q, k] int32, scores [Q, k] int32, n_valid [Q] int32)
+    — n_valid = min(k, #rows with positive masked score), matching
+    rank_topk exactly (every positive row is guaranteed to be in some
+    tile: the zone prune is conservative and overflow is retried)."""
+    r, nq = vals.shape
+    order = jnp.argsort(keys)
+    sk = jnp.take(keys, order)                               # ascending
+    sv = jnp.take(vals, order, axis=0).astype(jnp.int32)
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    seg = jnp.cumsum(first) - 1                              # [R]
+    # unique keys stay ascending (sk is sorted); tail keeps TILE_INVALID
+    uk = jnp.full((r,), TILE_INVALID, jnp.int32).at[seg].set(sk)
+    uv = jnp.zeros((r, nq), jnp.int32).at[seg].add(sv)
+    # training mask: locate each train id among the unique keys
+    pos = jnp.searchsorted(uk, train_ids)                    # [Q, T]
+    hit = jnp.take(uk, pos, mode="fill",
+                   fill_value=TILE_INVALID) == train_ids
+    posx = jnp.where(hit, pos, r).astype(jnp.int32)
+    qidx = jnp.arange(nq, dtype=jnp.int32)[:, None]
+    sc = uv.T.at[qidx, posx].set(0, mode="drop")             # [Q, R]
+    key_id = jnp.where(sc > 0, uk[None, :], TILE_INVALID)
+    sneg, sids = jax.lax.sort((-sc, key_id), dimension=-1, num_keys=2)
+    kk = min(int(k), r)
+    out_scores = -sneg[:, :kk]
+    out_ids = jnp.where(out_scores > 0, sids[:, :kk], -1)
+    if kk < k:                                   # static pad to [Q, k]
+        out_ids = jnp.pad(out_ids, ((0, 0), (0, k - kk)),
+                          constant_values=-1)
+        out_scores = jnp.pad(out_scores, ((0, 0), (0, k - kk)))
+    return (out_ids.astype(jnp.int32), out_scores.astype(jnp.int32),
+            (out_scores > 0).sum(1).astype(jnp.int32))
+
+
 def rank_topk(scores: jax.Array, train_ids: jax.Array, *, k: int,
               score_bound: int | None = None, method: str | None = None,
               scores_transposed: bool = False):

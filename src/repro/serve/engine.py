@@ -94,9 +94,28 @@ class QueryServer:
                       "batched_queries": 0, "latency_sum": 0.0,
                       "fit_s_sum": 0.0, "host_bytes": 0,
                       "sharded_queries": 0,
+                      # high-water mark of the device score-buffer bytes
+                      # any served window needed (DESIGN.md §13) — the
+                      # figure capacity planning compares against the
+                      # dense N*Q*4 equivalent
+                      "score_buffer_bytes_peak": 0,
+                      "dense_score_bytes_equiv": 0,
                       "ingests": 0, "ingest_errors": 0, "ingest_s_sum": 0.0,
                       "rows_appended": 0, "rows_deleted": 0,
                       "compactions": 0}
+
+    def _note_score_memory(self, st: Dict) -> None:
+        """Fold one result's device score-memory figures into the
+        server-wide high-water marks (batch_* or plain namespacing —
+        whichever the result carries)."""
+        peak = st.get("batch_score_buffer_bytes_peak",
+                      st.get("score_buffer_bytes_peak", 0))
+        self.stats["score_buffer_bytes_peak"] = max(
+            self.stats["score_buffer_bytes_peak"], int(peak))
+        eq = st.get("batch_dense_score_bytes_equiv",
+                    st.get("dense_score_bytes_equiv", 0))
+        self.stats["dense_score_bytes_equiv"] = max(
+            self.stats["dense_score_bytes_equiv"], int(eq))
 
     def _query_kwargs(self, req: QueryRequest) -> Dict:
         kw = dict(req.kwargs)
@@ -150,6 +169,7 @@ class QueryServer:
                                  latency_s=time.perf_counter() - t0)
             self.stats["host_bytes"] += res.stats.get(
                 "host_bytes_transferred", 0)
+            self._note_score_memory(res.stats)
             self.stats["fit_s_sum"] += res.train_time_s
             self.stats["sharded_queries"] += \
                 1 if res.stats.get("n_shards", 1) > 1 else 0
@@ -205,6 +225,7 @@ class QueryServer:
                 else:
                     self.stats["host_bytes"] += out.stats.get(
                         "host_bytes_transferred", 0)
+                self._note_score_memory(out.stats)
                 self.stats["sharded_queries"] += 1 if out.stats.get(
                     "batch_n_shards", out.stats.get("n_shards", 1)) > 1 \
                     else 0
@@ -281,7 +302,12 @@ class QueryServer:
                "mean_latency_s": self.stats["latency_sum"] / served,
                "mean_fit_s": self.stats["fit_s_sum"] / served,
                "mean_ingest_s": (self.stats["ingest_s_sum"]
-                                 / max(self.stats["ingests"], 1))}
+                                 / max(self.stats["ingests"], 1)),
+               # sparse serving headroom: peak device score bytes as a
+               # fraction of what the dense [N, Q] buffer would need
+               "score_buffer_frac_of_dense": (
+                   self.stats["score_buffer_bytes_peak"]
+                   / max(self.stats["dense_score_bytes_equiv"], 1))}
         cat = getattr(self.engine, "_catalog", None)
         if cat is not None:
             out["epoch"] = cat.epoch

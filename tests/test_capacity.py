@@ -1,0 +1,78 @@
+"""Unit tests for the shared capacity-bucketing helpers (core/capacity.py)."""
+import numpy as np
+
+from repro.core.capacity import (fit_bucket, hybrid_bucket, pow2above,
+                                 pow2ceil, quantum_bucket)
+
+
+def test_hybrid_bucket_pow2_small_quantum_large():
+    assert hybrid_bucket(0, quantum=512) == 1
+    assert hybrid_bucket(3, quantum=512) == 4
+    assert hybrid_bucket(512, quantum=512) == 512
+    assert hybrid_bucket(513, quantum=512) == 1024
+    assert hybrid_bucket(1025, quantum=512) == 1536   # not pow2's 2048
+    assert hybrid_bucket(10580, quantum=512) == 10752
+    for v in range(1, 4000):
+        b = hybrid_bucket(v, quantum=512)
+        assert b >= v                          # never truncates
+        if v > 512:
+            assert b - v < 512                 # slop bounded by quantum
+            assert b % 512 == 0
+        else:
+            assert b == pow2ceil(v)
+
+
+def test_pow2ceil_is_ceiling_power_of_two():
+    assert pow2ceil(0) == 1
+    assert pow2ceil(1) == 1
+    assert pow2ceil(2) == 2
+    assert pow2ceil(3) == 4
+    assert pow2ceil(4) == 4          # exact powers map to themselves
+    assert pow2ceil(5) == 8
+    assert pow2ceil(1023) == 1024
+    assert pow2ceil(1024) == 1024
+
+
+def test_pow2above_is_strictly_greater():
+    assert pow2above(0) == 2         # clamps to max(v, 1) first
+    assert pow2above(1) == 2
+    assert pow2above(2) == 4
+    assert pow2above(3) == 4
+    assert pow2above(4) == 8         # exact powers bump to the next bucket
+    assert pow2above(1024) == 2048
+
+
+def test_pow2_flavours_differ_exactly_on_powers_of_two():
+    for v in range(1, 5000):
+        c, a = pow2ceil(v), pow2above(v)
+        assert c >= v and (c & (c - 1)) == 0
+        assert a > v and (a & (a - 1)) == 0
+        if v & (v - 1) == 0:
+            assert a == 2 * c
+        else:
+            assert a == c
+
+
+def test_quantum_bucket_rounds_up_to_multiple():
+    assert quantum_bucket(1, 8) == 8
+    assert quantum_bucket(8, 8) == 8
+    assert quantum_bucket(9, 8) == 16
+    assert quantum_bucket(17, 16) == 32
+    for v in range(1, 300):
+        b = quantum_bucket(v, 8)
+        assert b >= v and b % 8 == 0 and b - v < 8
+
+
+def test_fit_bucket_applies_floor():
+    assert fit_bucket(3, floor=64) == 64
+    assert fit_bucket(64, floor=64) == 64
+    assert fit_bucket(65, floor=64) == 128
+    assert fit_bucket(200, floor=16) == 256
+
+
+def test_buckets_are_idempotent():
+    rng = np.random.default_rng(0)
+    for v in rng.integers(1, 10**6, size=64):
+        v = int(v)
+        assert pow2ceil(pow2ceil(v)) == pow2ceil(v)
+        assert quantum_bucket(quantum_bucket(v, 8), 8) == quantum_bucket(v, 8)

@@ -157,6 +157,46 @@ def test_query_batch_parity_and_generation_tagged_hints():
     assert any(k[0] == 1 for k in eng._cap_hints)
 
 
+def test_hint_pruning_across_generations_at_large_delta_fraction():
+    """Capacity-hint pruning under heavy ingest (ISSUE 6 satellite): a
+    catalog whose deltas dominate the base (delta fraction > 50%) run
+    through TWO compaction generations. Hints must be (re)learned per
+    generation, pruned the moment their geometry dies, and the table
+    must never accumulate keys from dead generations — while ranked
+    parity with the monolithic oracle holds at every step."""
+    rng = np.random.default_rng(9)
+    base = rng.normal(0, 1, (400, 16)).astype(np.float32)
+    d1 = rng.normal(0, 1, (500, 16)).astype(np.float32)
+    d2 = rng.normal(0, 1, (400, 16)).astype(np.float32)
+    x_all = np.concatenate([base, d1, d2])
+    pos, neg = _labels()
+    eng = SearchEngine(base, **ENG, live=True)
+    eng.query(pos, neg, model="dbranch", max_results=40)
+
+    eng.append(d1)                       # delta fraction 500/900
+    eng.delete([700, 705])
+    eng.query(pos, neg, model="dbranch", max_results=40)
+    keys_g0 = set(eng._cap_hints)
+    assert keys_g0 and all(k[0] == 0 for k in keys_g0)
+    _assert_parity(eng, np.concatenate([base, d1]), pos, neg, 40)
+
+    eng.compact()                        # generation 1: gen-0 keys die
+    assert all(k[0] == 1 for k in eng._cap_hints)
+    eng.append(d2)                       # delta fraction 400/1300 on gen 1
+    eng.query(pos, neg, model="dbranch", max_results=40)
+    assert eng._cap_hints and all(k[0] == 1 for k in eng._cap_hints)
+    _assert_parity(eng, x_all, pos, neg, 40)
+
+    eng.compact()                        # generation 2: gen-1 keys die
+    assert all(k[0] == 2 for k in eng._cap_hints)
+    eng.query(pos, neg, model="dbranch", max_results=40)
+    assert eng._cap_hints and all(k[0] == 2 for k in eng._cap_hints)
+    # the table holds exactly ONE live generation — no leakage, bounded
+    # growth on a long-running server
+    assert len({k[0] for k in eng._cap_hints}) == 1
+    _assert_parity(eng, x_all, pos, neg, 40)
+
+
 def test_refine_id_stability_across_append():
     """Paper §5 refinement across an ingest: extra labels found BEFORE an
     append keep identifying the same rows after it (global ids are

@@ -1,0 +1,328 @@
+"""Survivor-sparse scoring + quantized mirrors (DESIGN.md §13).
+
+Pins the tentpole contract: the sparse accumulator and the quantized-
+mirror path return ids AND scores bitwise-identical to the dense [N, Q]
+formulation (and to the host ranking oracle) across monolithic, sharded
+and live/segmented configurations — including tombstones and kth-score
+ties — while the device score memory is bounded by survivors and the
+quantized prune is provably conservative.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.engine import SearchEngine, SparseScores
+from repro.kernels import ops as kops
+
+SEED = 7
+
+
+def _data(n=3000, d=12, seed=SEED):
+    rng = np.random.default_rng(seed)
+    # half-integer grid values force heavy score ties downstream
+    x = (rng.integers(0, 6, size=(n, d)) / 2.0).astype(np.float32)
+    x += rng.normal(scale=1e-3, size=(n, d)).astype(np.float32)
+    pos = rng.choice(n, 12, replace=False)
+    neg = rng.choice(np.setdiff1d(np.arange(n), pos), 25, replace=False)
+    return x, pos, neg
+
+
+ENG_KW = dict(n_subsets=8, subset_dim=4, block=64, use_pallas=False)
+
+
+# ----------------------------------------------------------------------
+# kernel level: survivor_tiles + sparse_topk vs a host oracle
+# ----------------------------------------------------------------------
+def _host_topk(dense, tids, k):
+    """rank_topk's pinned contract on host: desc score, asc id, train
+    ids zeroed, only positive scores valid."""
+    q, n = dense.shape
+    ids = np.full((q, k), -1, np.int64)
+    scores = np.zeros((q, k), np.int64)
+    nv = np.zeros(q, np.int64)
+    for qi in range(q):
+        c = dense[qi].copy()
+        c[tids[qi][tids[qi] < n]] = 0
+        order = np.lexsort((np.arange(n), -c))
+        top = order[:k]
+        m = c[top] > 0
+        kq = int(m.sum())
+        ids[qi, :kq] = top[:kq]
+        scores[qi, :kq] = c[top[:kq]]
+        nv[qi] = kq
+    return ids, scores, nv
+
+
+def test_sparse_topk_matches_host_oracle_with_duplicates_and_ties():
+    rng = np.random.default_rng(0)
+    n, q, k = 500, 3, 16
+    # tiles with DUPLICATE keys (same row hit by several subsets) and a
+    # score distribution dense in ties
+    keys = rng.integers(0, n, size=200).astype(np.int32)
+    vals = rng.integers(0, 3, size=(200, q)).astype(np.int32)
+    pad = np.full(56, int(kops.TILE_INVALID), np.int32)
+    keys = np.concatenate([keys, pad])
+    vals = np.concatenate([vals, np.zeros((56, q), np.int32)])
+    dense = np.zeros((q, n), np.int64)
+    for kk, vv in zip(keys[:200], vals[:200]):
+        dense[:, kk] += vv
+    tids = np.full((q, 16), n, np.int32)
+    tids[0, :4] = keys[:4]          # mask some training ids
+    ids, scores, nv = kops.sparse_topk(jnp.asarray(keys), jnp.asarray(vals),
+                                       jnp.asarray(tids), k=k)
+    eids, esc, env = _host_topk(dense, tids, k)
+    assert np.array_equal(np.asarray(nv), env)
+    for qi in range(q):
+        m = int(env[qi])
+        assert np.array_equal(np.asarray(ids)[qi, :m], eids[qi, :m])
+        assert np.array_equal(np.asarray(scores)[qi, :m], esc[qi, :m])
+        assert np.all(np.asarray(ids)[qi, m:] == -1)
+
+
+def test_survivor_tiles_compact_exactly():
+    rng = np.random.default_rng(1)
+    c, block, q = 6, 8, 2
+    counts = rng.integers(0, 2, size=(c, block, q)).astype(np.int32)
+    gids = np.arange(c * block, dtype=np.int32).reshape(c, block)
+    gids[-1, -3:] = -1              # virtual-space padding rows
+    ok = (counts != 0).any(-1) & (gids >= 0)
+    nm = int(ok.sum())
+    rcap = 1 << (nm - 1).bit_length()
+    keys, vals, nr = kops.survivor_tiles(jnp.asarray(counts),
+                                         jnp.asarray(gids),
+                                         jnp.asarray(ok),
+                                         row_capacity=rcap)
+    assert int(nr) == nm
+    keys, vals = np.asarray(keys), np.asarray(vals)
+    live = keys != int(kops.TILE_INVALID)
+    assert int(live.sum()) == nm
+    assert np.all(vals[~live] == 0)
+    # every surviving row present with its exact counts
+    got = {int(k): vals[i].tolist() for i, k in enumerate(keys) if live[i]}
+    for ci in range(c):
+        for bi in range(block):
+            if ok[ci, bi]:
+                assert got[int(gids[ci, bi])] == counts[ci, bi].tolist()
+
+
+@pytest.mark.parametrize("val_dtype", [jnp.int32, jnp.int16])
+def test_packed_survivor_tiles_matches_per_part(val_dtype):
+    """One packed jit over many subsets == concatenating per-subset
+    survivor_tiles calls, for both value widths (int16 values are the
+    same numbers, merely narrower — upcast happens before summation)."""
+    rng = np.random.default_rng(7)
+    block, q = 8, 3
+    parts, rcaps, want_k, want_v = [], [], [], []
+    for c in (4, 6, 2):
+        counts = rng.integers(0, 5, size=(c, block, q)).astype(np.int32)
+        gids = rng.permutation(c * block).astype(np.int32).reshape(c, block)
+        ok = (counts != 0).any(-1)
+        rcap = 1 << max(int(ok.sum()) - 1, 0).bit_length()
+        parts.append((jnp.asarray(counts), jnp.asarray(gids),
+                      jnp.asarray(ok)))
+        rcaps.append(rcap)
+        k, v, _ = kops.survivor_tiles(*parts[-1], row_capacity=rcap)
+        want_k.append(np.asarray(k))
+        want_v.append(np.asarray(v))
+    keys, vals = kops.packed_survivor_tiles(tuple(parts),
+                                            row_capacities=tuple(rcaps),
+                                            val_dtype=val_dtype)
+    assert vals.dtype == val_dtype
+    np.testing.assert_array_equal(np.asarray(keys),
+                                  np.concatenate(want_k))
+    np.testing.assert_array_equal(np.asarray(vals, np.int32),
+                                  np.concatenate(want_v))
+
+
+# ----------------------------------------------------------------------
+# engine level: sparse == dense == host oracle, bitwise
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n_shards", [1, 2, 4, 8])
+def test_sparse_matches_dense_bitwise(n_shards):
+    x, pos, neg = _data()
+    es = SearchEngine(x, n_shards=n_shards, score_mode="sparse", **ENG_KW)
+    ed = SearchEngine(x, n_shards=n_shards, score_mode="dense", **ENG_KW)
+    for mr in (None, 50):
+        rs = es.query(pos, neg, max_results=mr)
+        rd = ed.query(pos, neg, max_results=mr)
+        assert np.array_equal(rs.ids, rd.ids)
+        assert np.array_equal(rs.scores, rd.scores)
+        # identical deferred-sync cadence — the pinned dense contract
+        assert rs.stats["n_host_syncs"] == rd.stats["n_host_syncs"]
+
+
+def test_sparse_matches_dense_live_with_tombstones():
+    x, pos, neg = _data(n=4000)
+    dele = np.random.default_rng(3).choice(4000, 400, replace=False)
+    engines = []
+    for mode in ("sparse", "dense"):
+        e = SearchEngine(x[:3000], live=True, score_mode=mode, **ENG_KW)
+        e.append(x[3000:])
+        e.delete(dele)
+        engines.append(e)
+    es, ed = engines
+    for mr in (None, 50):
+        rs = es.query(pos, neg, max_results=mr)
+        rd = ed.query(pos, neg, max_results=mr)
+        assert np.array_equal(rs.ids, rd.ids)
+        assert np.array_equal(rs.scores, rd.scores)
+        assert not np.isin(rs.ids, dele).any()
+
+
+def test_sparse_batch_matches_dense_and_reports_memory():
+    x, pos, neg = _data()
+    es = SearchEngine(x, score_mode="sparse", **ENG_KW)
+    ed = SearchEngine(x, score_mode="dense", **ENG_KW)
+    reqs = [{"pos_ids": pos, "neg_ids": neg, "max_results": 40},
+            {"pos_ids": neg[:10], "neg_ids": pos, "max_results": 40},
+            {"pos_ids": pos[:6], "neg_ids": neg, "max_results": None}]
+    outs_s = es.query_batch(reqs)
+    outs_d = ed.query_batch(reqs)
+    for a, b in zip(outs_s, outs_d):
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.scores, b.scores)
+    st = outs_s[0].stats
+    assert st["batch_score_buffer_bytes_peak"] > 0
+    assert st["batch_dense_score_bytes_equiv"] == x.shape[0] * len(reqs) * 4
+    assert st["batch_score_rows"] > 0
+    # dense reports the buffer it actually held
+    std = outs_d[0].stats
+    assert std["batch_score_buffer_bytes_peak"] == \
+        x.shape[0] * len(reqs) * 4
+
+
+def test_sparse_device_form_and_host_export():
+    """The device form really is sparse, and its host export de-mults
+    duplicate keys into exactly the dense counts."""
+    x, pos, neg = _data()
+    es = SearchEngine(x, score_mode="sparse", **ENG_KW)
+    ed = SearchEngine(x, score_mode="dense", **ENG_KW)
+    view = es._view()
+    boxsets = es._fit_boxes("dbranch", x[pos], x[neg], max_depth=12,
+                            n_models=25, seed=0, use_jax=False,
+                            frange=view.frange)
+    jobs, _ = es._make_jobs([(bs, 0) for bs in boxsets], 1)
+    sp, _ = es._device_scores(jobs, 1, view)
+    assert isinstance(sp, SparseScores)
+    dn, _ = ed._device_scores(jobs, 1, ed._view())
+    assert np.array_equal(es._scores_to_host(sp, view),
+                          np.asarray(dn).astype(np.int32))
+
+
+def test_overflow_retry_cadence_unchanged_in_sparse_mode():
+    """Tiny capacity_frac forces first-round overflows: the sparse path
+    must retry the same subsets over the same number of syncs as dense
+    (the pinned deferred-sync contract)."""
+    x, pos, neg = _data()
+    kw = {**ENG_KW, "capacity_frac": 0.01}
+    es = SearchEngine(x, score_mode="sparse", **kw)
+    ed = SearchEngine(x, score_mode="dense", **kw)
+    rs = es.query(pos, neg, max_results=50)
+    rd = ed.query(pos, neg, max_results=50)
+    assert np.array_equal(rs.ids, rd.ids)
+    assert rs.stats["retried_subsets"] == rd.stats["retried_subsets"]
+    assert rs.stats["n_host_syncs"] == rd.stats["n_host_syncs"]
+    assert rs.stats["retried_subsets"] > 0
+
+
+def test_index_stats_reports_device_mirror_bytes():
+    x, pos, neg = _data()
+    e = SearchEngine(x, score_mode="sparse", **ENG_KW)
+    st0 = e.index_stats()
+    # nothing uploaded yet: lazy mirrors report zero residency
+    assert st0["device_bytes"]["total"] == 0
+    assert st0["score_buffer_bytes_peak"] == 0
+    e.query(pos, neg, max_results=50)
+    st = e.index_stats()
+    dev = st["device_bytes"]
+    assert dev["rows"] > 0 and dev["zones"] > 0 and dev["gids"] > 0
+    assert dev["total"] == sum(v for k, v in dev.items() if k != "total")
+    assert len(st["device_bytes_per_index"]) == len(e.indexes)
+    per_tot = sum(p["total"] for p in st["device_bytes_per_index"])
+    assert per_tot == dev["total"]
+    assert st["score_buffer_bytes_peak"] > 0
+    assert st["score_mode"] == "sparse"
+
+
+# ----------------------------------------------------------------------
+# quantized mirrors: conservative prune + bitwise engine parity
+# ----------------------------------------------------------------------
+def test_quantized_prune_is_conservative_property():
+    """Property test: for random rows, random quantization grids and
+    random (lo, hi] boxes, every row the exact f32 predicate admits is
+    admitted by the int8 code-space test with the widened thresholds —
+    the prune may over-select but NEVER drops a true member."""
+    rng = np.random.default_rng(11)
+    for _ in range(200):
+        n, d = 64, 3
+        x = rng.normal(scale=rng.uniform(0.1, 10), size=(n, d)) \
+            .astype(np.float32)
+        lo0, hi0 = x.min(0), x.max(0)
+        scale = np.maximum((hi0 - lo0) / 254.0, 1e-12).astype(np.float32)
+        t = np.clip(np.round((x - lo0) / scale), 0, 254).astype(np.float32)
+        lo = (x[rng.integers(0, n)] - rng.uniform(0, 1, d)) \
+            .astype(np.float32)
+        hi = (lo + rng.uniform(0, 2, d)).astype(np.float32)
+        exact = np.all((x > lo) & (x <= hi), axis=1)
+        tlo = np.floor((lo - lo0) / scale) - 1.0
+        thi = np.ceil((hi - lo0) / scale) + 1.0
+        coded = np.all((t > tlo) & (t <= thi), axis=1)
+        assert np.all(coded[exact]), "conservative prune dropped a member"
+
+
+def test_quantized_zone_widening_is_outward():
+    x, _, _ = _data()
+    e = SearchEngine(x, mirror="quantized", **ENG_KW)
+    for ix in e.indexes:
+        _, _, _, zlo16, zhi16 = ix.device_quantized()
+        zlo, zhi = np.asarray(ix.zlo), np.asarray(ix.zhi)
+        assert np.all(np.asarray(zlo16, np.float32) <= zlo)
+        assert np.all(np.asarray(zhi16, np.float32) >= zhi)
+
+
+def test_quantized_engine_matches_dense_bitwise():
+    x, pos, neg = _data()
+    eq = SearchEngine(x, mirror="quantized", **ENG_KW)
+    ed = SearchEngine(x, score_mode="dense", **ENG_KW)
+    for mr in (None, 50):
+        rq = eq.query(pos, neg, max_results=mr)
+        rd = ed.query(pos, neg, max_results=mr)
+        assert np.array_equal(rq.ids, rd.ids)
+        assert np.array_equal(rq.scores, rd.scores)
+    st = eq.index_stats()
+    # the quantized path never uploads the f32 row/zone mirrors
+    assert st["device_bytes"]["rows"] == 0
+    assert st["device_bytes"]["zones"] == 0
+    assert st["device_bytes"]["quantized"] > 0
+    assert st["mirror"] == "quantized"
+
+
+def test_quantized_requires_static_fused_sparse():
+    x, _, _ = _data(n=500)
+    with pytest.raises(ValueError):
+        SearchEngine(x, mirror="quantized", score_mode="dense", **ENG_KW)
+    with pytest.raises(ValueError):
+        SearchEngine(x, mirror="quantized", n_shards=2, **ENG_KW)
+    with pytest.raises(ValueError):
+        SearchEngine(x, mirror="quantized", live=True, **ENG_KW)
+    with pytest.raises(ValueError):
+        SearchEngine(x, score_mode="bogus", **ENG_KW)
+
+
+# ----------------------------------------------------------------------
+# serving layer: memory accounting surfaces server-wide
+# ----------------------------------------------------------------------
+def test_server_tracks_score_buffer_peak():
+    from repro.serve.engine import QueryRequest, QueryServer
+    x, pos, neg = _data()
+    eng = SearchEngine(x, score_mode="sparse", **ENG_KW)
+    srv = QueryServer(eng, max_results=32)
+    srv.handle(QueryRequest(0, pos, neg))
+    srv.handle_batch([QueryRequest(1, pos, neg),
+                      QueryRequest(2, neg[:8], pos)])
+    s = srv.summary()
+    assert s["score_buffer_bytes_peak"] > 0
+    assert s["dense_score_bytes_equiv"] > 0
+    assert s["score_buffer_frac_of_dense"] == pytest.approx(
+        s["score_buffer_bytes_peak"] / s["dense_score_bytes_equiv"])
