@@ -898,5 +898,8 @@ if __name__ == "__main__":
             validate_live_json("BENCH_ingest.json")
         if os.path.exists("BENCH_scale.json"):
             validate_bench_json("BENCH_scale.json", SCALE_REQUIRED_KEYS)
+        if os.path.exists("BENCH_serve.json"):
+            from benchmarks.serve_load import SERVE_REQUIRED_KEYS
+            validate_bench_json("BENCH_serve.json", SERVE_REQUIRED_KEYS)
     else:
         run()

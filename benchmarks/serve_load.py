@@ -1,0 +1,177 @@
+"""Serving load benchmark (DESIGN.md §14): latency and rejection rate
+vs offered QPS, with and without admission control.
+
+An open-loop generator fires QueryRequests at a fixed offered rate
+(never waiting for completions — the honest overload model: real clients
+don't slow down because the server is behind) against a threaded
+QueryServer, once with the legacy unbounded queue and once with the
+bounded admission queue + default deadline. Per cell it reports:
+
+  * p50 / p99 END-TO-END latency (submit -> response, queue wait
+    included) over successful responses;
+  * rejection rate: the fraction of submits resolved with a typed
+    Overloaded / RateLimited / DeadlineExceeded instead of running;
+  * achieved throughput and the queue-depth high-water mark.
+
+The point the artifact pins: WITHOUT admission control the unbounded
+queue absorbs overload as unbounded p99 latency growth; WITH it the
+server sheds typed rejections and keeps the served requests' tail
+bounded. Emits BENCH_serve.json; --check-json re-validates the artifact
+(same mechanism as BENCH_query_time.json — benchmarks/query_time.py).
+
+Usage:
+  python benchmarks/serve_load.py                 # run + emit JSON
+  python benchmarks/serve_load.py --check-json    # CI artifact gate
+  python benchmarks/serve_load.py --qps 5 20 60 --duration 2.0
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit, emit_json, make_engine, query_sets
+from benchmarks.query_time import validate_bench_json
+from repro.data.synthetic import CLASS_IDS
+from repro.serve.engine import QueryRequest, QueryServer
+
+OUT_JSON = "BENCH_serve.json"
+
+# keys every serve-load row must carry — the CI chaos job fails loudly
+# when the artifact drops one (same gate as the query-time artifacts)
+SERVE_REQUIRED_KEYS = (
+    "name", "us_per_call", "offered_qps", "achieved_qps", "p50_ms",
+    "p99_ms", "served_ok", "errors", "rejected", "rejection_rate",
+    "admission", "queue_depth_peak", "n",
+)
+
+REJECT_KEYS = ("rejected_overloaded", "rejected_rate_limited",
+               "rejected_deadline", "expired_in_queue", "evicted")
+
+
+def _percentile_ms(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    return round(float(np.percentile(np.asarray(xs), q)) * 1e3, 2)
+
+
+def _drive(server: QueryServer, reqs: List[QueryRequest],
+           offered_qps: float) -> List[Dict]:
+    """Open-loop: submit request i at t0 + i/qps regardless of progress;
+    a waiter thread per request records the end-to-end resolve time."""
+    done: List[Dict] = []
+    lock = threading.Lock()
+    waiters = []
+
+    def wait_one(out, t_submit):
+        resp = out.get(timeout=300)
+        with lock:
+            done.append({"ok": resp.ok, "error_type": resp.error_type,
+                         "e2e_s": time.monotonic() - t_submit})
+
+    t0 = time.monotonic()
+    for i, req in enumerate(reqs):
+        target = t0 + i / offered_qps
+        delay = target - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        t_submit = time.monotonic()
+        out = server.submit(req)
+        w = threading.Thread(target=wait_one, args=(out, t_submit),
+                             daemon=True)
+        w.start()
+        waiters.append(w)
+    for w in waiters:
+        w.join(timeout=300)
+    return done
+
+
+def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
+        n: int = 5_000, verbose: bool = True,
+        out_json: str = OUT_JSON) -> List[Dict]:
+    engine, labels = make_engine(n)
+    classes = [CLASS_IDS["forest"], CLASS_IDS["water"]]
+
+    def make_reqs(count):
+        reqs = []
+        for i in range(count):
+            pos, neg = query_sets(labels, classes[i % len(classes)],
+                                  12, 60, seed=200 + i % 16)
+            reqs.append(QueryRequest(i, pos, neg, "dbranch"))
+        return reqs
+
+    # warm the jit caches once so compile time never lands in a cell —
+    # both the single-query path and the batched-window path (distinct
+    # programs per fit-batch bucket)
+    warm = QueryServer(engine, max_results=100, max_batch=8)
+    warm.handle(make_reqs(1)[0])
+    warm.handle_batch(make_reqs(2))
+    warm.handle_batch(make_reqs(8))
+    warm.close()
+
+    rows = []
+    for admission in (False, True):
+        for qps in qps_levels:
+            count = max(int(qps * duration), 4)
+            kw: Dict = dict(max_results=100, max_batch=8)
+            if admission:
+                kw.update(queue_depth=16, shed_policy="reject-newest",
+                          default_deadline_s=5.0, degraded_max_results=25,
+                          soft_depth_frac=0.5)
+            server = QueryServer(engine, **kw)
+            server.start()
+            done = _drive(server, make_reqs(count), qps)
+            wall = max(d["e2e_s"] for d in done) if done else 1.0
+            server.close()
+            st = server.stats
+            ok_lat = [d["e2e_s"] for d in done if d["ok"]]
+            rejected = sum(st[k] for k in REJECT_KEYS)
+            served_ok = sum(1 for d in done if d["ok"])
+            tag = "admission" if admission else "unbounded"
+            rows.append({
+                "name": f"serve_load/{tag}/qps{qps:g}",
+                "us_per_call": round(
+                    1e6 * float(np.median(ok_lat)), 1) if ok_lat else 0.0,
+                "offered_qps": qps,
+                "achieved_qps": round(served_ok / wall, 2),
+                "p50_ms": _percentile_ms(ok_lat, 50),
+                "p99_ms": _percentile_ms(ok_lat, 99),
+                "served_ok": served_ok,
+                "errors": st["errors"],
+                "rejected": rejected,
+                "rejection_rate": round(rejected / max(len(done), 1), 4),
+                "admission": int(admission),
+                "queue_depth_peak": server.summary()["queue_depth_peak"],
+                "degraded_windows": st["degraded_windows"],
+                "retries": st["retries"],
+                "n": n,
+            })
+            # every submit resolved exactly once — the no-strand contract
+            # the chaos suite pins, re-checked under real load
+            if len(done) != count:
+                raise SystemExit(
+                    f"serve_load: {count} submits but {len(done)} "
+                    f"responses — requests were stranded")
+    if verbose:
+        emit(rows, "serve_load")
+        emit_json(rows, out_json)
+        validate_bench_json(out_json, SERVE_REQUIRED_KEYS)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--qps", type=float, nargs="+",
+                    default=[5.0, 20.0, 60.0])
+    ap.add_argument("--duration", type=float, default=2.0)
+    ap.add_argument("--n", type=int, default=5_000)
+    ap.add_argument("--check-json", action="store_true",
+                    help="validate BENCH_serve.json keys (CI gate)")
+    args = ap.parse_args()
+    if args.check_json:
+        validate_bench_json(OUT_JSON, SERVE_REQUIRED_KEYS)
+    else:
+        run(qps_levels=tuple(args.qps), duration=args.duration, n=args.n)

@@ -44,9 +44,11 @@ from repro.core.boxes import BoxSet, concat_box_arrays
 from repro.core.dbranch import (DBENS_SUBSET_CANDIDATES, dbens_draws,
                                 fit_dbens, fit_dbranch_best_subset,
                                 fit_select_jax, split_tables)
+from repro.core.capacity import HintTable
 from repro.core.capacity import hybrid_bucket as _cap_hybrid
 from repro.core.capacity import pow2ceil as _cap_pow2ceil
 from repro.core.capacity import quantum_bucket as _cap_quantum
+from repro.core.errors import check_deadline
 from repro.core.index import (ShardedZoneMapIndex, ZoneMapIndex,
                               build_index, build_sharded_index, full_scan,
                               fused_stats, pad_boxes, query_index,
@@ -184,6 +186,7 @@ class SearchEngine:
         live: bool = False,
         score_mode: str = "sparse",
         mirror: str = "f32",
+        faults=None,
     ):
         self.x = np.ascontiguousarray(np.asarray(features, np.float32))
         self.n, self.d = self.x.shape
@@ -204,9 +207,14 @@ class SearchEngine:
         self.capacity_frac = capacity_frac
         self.max_results = max_results
         # survivor counts observed by _device_scores, keyed by
-        # (subset, box-count bucket); sizes the next like-shaped fused
-        # gather so steady-state queries never overflow-retry
-        self._cap_hints: Dict = {}
+        # (generation, subset, box-count bucket); sizes the next
+        # like-shaped fused gather so steady-state queries never
+        # overflow-retry (policy lives in core/capacity.HintTable)
+        self._cap_hints = HintTable()
+        # fault-injection seams (DESIGN.md §14): an object with a
+        # check(site) method, or None. The engine never imports the
+        # injector — serve/faults.py stays above core in the layering.
+        self.faults = faults
         self.n_shards = max(int(n_shards), 1)
         self.live = bool(live)
         # score accumulation form (DESIGN.md §13): "sparse" keeps device
@@ -249,7 +257,8 @@ class SearchEngine:
             self._shard_flat = self.n_shards > 1
             self._catalog = SegmentedCatalog(self.x, self.subsets,
                                              block=block,
-                                             n_shards=self.n_shards)
+                                             n_shards=self.n_shards,
+                                             faults=faults)
             self.indexes = list(self._catalog.snapshot().indexes)
         elif self.n_shards > 1:
             self.shard_mesh = self._resolve_shard_mesh(shard_mesh)
@@ -309,6 +318,32 @@ class SearchEngine:
                            valid_host=s.valid_host, live_rows=s.live_rows)
 
     # ------------------------------------------------------------------
+    # robustness seams (DESIGN.md §14)
+    # ------------------------------------------------------------------
+    def _fault(self, site: str) -> None:
+        """Fault-injection checkpoint: no-op unless an injector was
+        threaded in at construction."""
+        if self.faults is not None:
+            self.faults.check(site)
+
+    def _round_checkpoint(self, deadline_s) -> None:
+        """Once per device launch round: the fused-query fault seam plus
+        the between-rounds deadline check — a request whose budget is
+        gone stops HERE instead of burning another round of device time
+        (rounds are the natural cancellation points; in-flight device
+        programs are not interruptible)."""
+        self._fault("fused_query")
+        check_deadline(deadline_s, "device query round")
+
+    def invalidate_capacity_hints(self) -> int:
+        """Drop every capacity hint (cold-start sizing resumes). The
+        serving layer calls this after a FAILED compaction — the
+        conservative reset for hints observed around a crash; normal
+        compactions prune by generation instead. Returns the number of
+        entries dropped."""
+        return self._cap_hints.invalidate()
+
+    # ------------------------------------------------------------------
     # live-catalog lifecycle (DESIGN.md §12)
     # ------------------------------------------------------------------
     def _require_live(self) -> SegmentedCatalog:
@@ -335,9 +370,7 @@ class SearchEngine:
             # (not the mutation epoch — hints survive appends/deletes,
             # whose geometry they still describe); pruning dead
             # generations keeps a long-running server's table bounded
-            hints = self._cap_hints.copy()
-            self._cap_hints = {k: v for k, v in hints.items()
-                               if k[0] == s.geom}
+            self._cap_hints.prune_generation(s.geom)
 
     def append(self, features: np.ndarray) -> np.ndarray:
         """Seal new rows into a delta segment; returns their global ids
@@ -420,14 +453,21 @@ class SearchEngine:
         seed: int = 0,
         include_training: bool = False,
         max_results=_UNSET,
+        deadline_s: Optional[float] = None,
     ) -> QueryResult:
         """One user query: label sets in, ranked ids out.
 
         ``max_results=k`` truncates the ranked list to its top k entries
         and, on the fused index path, runs the ranking on device so the
-        host receives O(k) bytes instead of the full score vector."""
+        host receives O(k) bytes instead of the full score vector.
+
+        ``deadline_s`` is an absolute ``time.monotonic()`` deadline
+        (DESIGN.md §14): checked before the fit and between per-subset
+        device rounds, raising a typed ``DeadlineExceeded`` instead of
+        finishing work nobody is waiting for."""
         if model not in MODELS:
             raise ValueError(f"unknown model {model!r}; choose from {MODELS}")
+        check_deadline(deadline_s, "fit")
         mr = self.max_results if max_results is _UNSET else max_results
         view = self._view()
         pos_ids = np.asarray(list(pos_ids), np.int64)
@@ -464,10 +504,12 @@ class SearchEngine:
 
         # ---- inference + ranking --------------------------------------
         t0 = time.perf_counter()
+        check_deadline(deadline_s, "inference")
         stats: Dict = {}
         if model in ("dbranch", "dbens"):
             ids, scores, stats = self._run_index_path(
-                boxes, pos_ids, neg_ids, include_training, mr, view)
+                boxes, pos_ids, neg_ids, include_training, mr, view,
+                deadline_s=deadline_s)
             stats["path"] = "index"
             stats["fit_path"] = ("jax" if self.use_jax_fit and self.use_fused
                                  else "numpy")
@@ -806,7 +848,8 @@ class SearchEngine:
             totals += np.bincount(owner, minlength=nq)
         return jobs, (int(totals.max()) if jobs else 0)
 
-    def _device_scores(self, jobs, nq: int, view: _EngineView):
+    def _device_scores(self, jobs, nq: int, view: _EngineView,
+                       deadline_s=None):
         """Answer every subset's boxes and accumulate all counts into ONE
         persistent [n, nq] device score buffer in ORIGINAL row order
         (row-major so each block's scatter update is contiguous).
@@ -827,12 +870,16 @@ class SearchEngine:
         difference, and it is bitwise-equivalent."""
         if self.score_mode == "sparse":
             if self.mirror == "quantized":
-                return self._device_scores_quantized(jobs, nq, view)
-            return self._device_scores_sparse(jobs, nq, view)
+                return self._device_scores_quantized(
+                    jobs, nq, view, deadline_s=deadline_s)
+            return self._device_scores_sparse(jobs, nq, view,
+                                              deadline_s=deadline_s)
         if view.live:
-            return self._device_scores_segmented(jobs, nq, view)
+            return self._device_scores_segmented(jobs, nq, view,
+                                                 deadline_s=deadline_s)
         if self.n_shards > 1:
-            return self._device_scores_sharded(jobs, nq, view)
+            return self._device_scores_sharded(jobs, nq, view,
+                                               deadline_s=deadline_s)
         scores = jnp.zeros((view.n, nq), jnp.int32)
         agg = self._new_agg()
         pending = [(sid, merged, owner,
@@ -840,6 +887,7 @@ class SearchEngine:
                                            merged.n_boxes))
                    for sid, merged, owner in jobs]
         while pending:
+            self._round_checkpoint(deadline_s)
             launched = []
             for sid, merged, owner, cap in pending:
                 index = view.indexes[sid]
@@ -854,6 +902,7 @@ class SearchEngine:
                 launched.append((sid, merged, owner, cap, counts, cand,
                                  n_hit))
             # ONE batched sync covers the whole round's overflow checks
+            self._fault("device_sync")
             n_hits = np.asarray(jnp.stack([l[6] for l in launched]))
             agg["n_host_syncs"] += 1
             agg["host_bytes_transferred"] += int(n_hits.nbytes)
@@ -866,8 +915,7 @@ class SearchEngine:
                 # peak instantly, decay old peaks slowly so one light
                 # query can't make the next heavy one overflow-retry
                 key = self._cap_key(sid, merged.n_boxes)
-                self._cap_hints[key] = max(
-                    nh, (self._cap_hints.get(key, 0) * 3) // 4)
+                self._cap_hints.observe(key, nh)
                 if nh > cap:
                     # the failed attempt still gathered (and priced) cap
                     # blocks of device traffic; count it so bytes_touched
@@ -888,7 +936,8 @@ class SearchEngine:
         self._note_dense_buffer(agg, scores, nq, view)
         return scores, self._finalize_agg(agg, view)
 
-    def _device_scores_sharded(self, jobs, nq: int, view: _EngineView):
+    def _device_scores_sharded(self, jobs, nq: int, view: _EngineView,
+                               deadline_s=None):
         """_device_scores over the sharded indexes (DESIGN.md §11): the
         persistent score buffer is [S, Nloc_max, nq] — one shard-local
         buffer per shard, stacked — and each subset runs ONE device
@@ -913,6 +962,7 @@ class SearchEngine:
                                            merged.n_boxes))
                    for sid, merged, owner in jobs]
         while pending:
+            self._round_checkpoint(deadline_s)
             launched = []
             for sid, merged, owner, cap in pending:
                 sindex = self.indexes[sid]
@@ -926,6 +976,7 @@ class SearchEngine:
                     use_pallas=self.use_pallas)
                 launched.append((sid, merged, owner, cap, st3))
             # ONE batched sync, [3] ints per subset — flat in shard count
+            self._fault("device_sync")
             hit_stats = np.asarray(jnp.stack([l[4] for l in launched]))
             agg["n_host_syncs"] += 1
             agg["host_bytes_transferred"] += int(hit_stats.nbytes)
@@ -935,8 +986,7 @@ class SearchEngine:
                 sindex = self.indexes[sid]
                 mx, sum_min = int(st[0]), int(st[1])
                 key = self._cap_key(sid, merged.n_boxes)
-                self._cap_hints[key] = max(
-                    mx, (self._cap_hints.get(key, 0) * 3) // 4)
+                self._cap_hints.observe(key, mx)
                 if mx > cap:
                     # the discarded attempt still gathered (and priced)
                     # cap blocks per shard (or globally, flat mode) of
@@ -958,7 +1008,8 @@ class SearchEngine:
         self._note_dense_buffer(agg, scores, nq, view)
         return scores, self._finalize_agg(agg, view)
 
-    def _device_scores_segmented(self, jobs, nq: int, view: _EngineView):
+    def _device_scores_segmented(self, jobs, nq: int, view: _EngineView,
+                                 deadline_s=None):
         """_device_scores over a live catalog's segmented indexes
         (DESIGN.md §12): the score buffer is [N_total, nq] with row index
         == global id (the concatenated virtual space needs no remap), one
@@ -980,6 +1031,7 @@ class SearchEngine:
                                            geom=view.geom))
                    for sid, merged, owner in jobs]
         while pending:
+            self._round_checkpoint(deadline_s)
             launched = []
             for sid, merged, owner, cap in pending:
                 segx = view.indexes[sid]
@@ -993,6 +1045,7 @@ class SearchEngine:
                     use_pallas=self.use_pallas)
                 launched.append((sid, merged, owner, cap, stvec))
             # ONE batched sync: [J, 1 + S] int32 for the whole round
+            self._fault("device_sync")
             stvecs = np.asarray(jnp.stack([l[4] for l in launched]))
             agg["n_host_syncs"] += 1
             agg["host_bytes_transferred"] += int(stvecs.nbytes)
@@ -1001,8 +1054,7 @@ class SearchEngine:
                 segx = view.indexes[sid]
                 nh = int(st[0])
                 key = self._cap_key(sid, merged.n_boxes, view.geom)
-                self._cap_hints[key] = max(
-                    nh, (self._cap_hints.get(key, 0) * 3) // 4)
+                self._cap_hints.observe(key, nh)
                 if nh > cap:
                     # the discarded attempt still gathered (and priced)
                     # cap blocks of the virtual space
@@ -1033,7 +1085,8 @@ class SearchEngine:
         self._score_bytes_peak = max(self._score_bytes_peak,
                                      int(scores.nbytes))
 
-    def _device_scores_sparse(self, jobs, nq: int, view: _EngineView):
+    def _device_scores_sparse(self, jobs, nq: int, view: _EngineView,
+                              deadline_s=None):
         """The survivor-sparse accumulation (tentpole, DESIGN.md §13).
 
         Identical round structure to the dense methods — same probes and
@@ -1077,6 +1130,7 @@ class SearchEngine:
                                            merged.n_boxes, geom=geom))
                    for sid, merged, owner in jobs]
         while pending:
+            self._round_checkpoint(deadline_s)
             launched, round_parts, round_rcaps = [], [], []
             for sid, merged, owner, cap in pending:
                 index = view.indexes[sid]
@@ -1100,6 +1154,7 @@ class SearchEngine:
                 launched.append((sid, merged, owner, cap) + probe)
             # ONE batched sync: a FIXED-width int vector per subset —
             # flat in shard count, exactly the dense cadence
+            self._fault("device_sync")
             stvecs = np.asarray(jnp.stack([l[7] for l in launched]))
             agg["n_host_syncs"] += 1
             agg["host_bytes_transferred"] += int(stvecs.nbytes)
@@ -1109,8 +1164,7 @@ class SearchEngine:
                 index = view.indexes[sid]
                 nh = int(st[0])
                 key = self._cap_key(sid, merged.n_boxes, geom)
-                self._cap_hints[key] = max(
-                    nh, (self._cap_hints.get(key, 0) * 3) // 4)
+                self._cap_hints.observe(key, nh)
                 if nh > cap:
                     # the failed attempt still gathered (and priced) cap
                     # blocks — per shard on a mesh, globally otherwise
@@ -1190,7 +1244,8 @@ class SearchEngine:
                                    agg, nq, view,
                                    transient_bytes=transient)
 
-    def _device_scores_quantized(self, jobs, nq: int, view: _EngineView):
+    def _device_scores_quantized(self, jobs, nq: int, view: _EngineView,
+                                 deadline_s=None):
         """Sparse scoring against the COMPRESSED device mirrors
         (DESIGN.md §13, mirror='quantized'): the probe prunes zones in
         outward-widened f16 and tests rows in int8 code space with
@@ -1209,6 +1264,7 @@ class SearchEngine:
                                            merged.n_boxes))
                    for sid, merged, owner in jobs]
         while pending:
+            self._round_checkpoint(deadline_s)
             launched = []
             for sid, merged, owner, cap in pending:
                 index = view.indexes[sid]
@@ -1221,6 +1277,7 @@ class SearchEngine:
                                                   capacity=cap)
                 launched.append((sid, merged, owner, cap, gids, cmask,
                                  st, lo_d, hi_d, onehot))
+            self._fault("device_sync")
             stvecs = np.asarray(jnp.stack([l[6] for l in launched]))
             agg["n_host_syncs"] += 1
             agg["host_bytes_transferred"] += int(stvecs.nbytes)
@@ -1230,8 +1287,7 @@ class SearchEngine:
                 index = view.indexes[sid]
                 nh, ncand = int(st[0]), int(st[1])
                 key = self._cap_key(sid, merged.n_boxes)
-                self._cap_hints[key] = max(
-                    nh, (self._cap_hints.get(key, 0) * 3) // 4)
+                self._cap_hints.observe(key, nh)
                 if nh > cap:
                     agg["blocks_gathered"] += cap
                     # the discarded gather moved int8 rows: 1 byte/dim
@@ -1364,7 +1420,7 @@ class SearchEngine:
 
     def _run_index_path(self, boxsets, pos_ids, neg_ids,
                         include_training: bool, mr: Optional[int],
-                        view: _EngineView):
+                        view: _EngineView, deadline_s=None):
         """Single-query index inference + ranking; fused engines score on
         device and, with ``mr`` set, rank on device too. ``boxsets`` is a
         List[BoxSet], or the ("device", lo, hi, entries) form handed out
@@ -1380,7 +1436,8 @@ class SearchEngine:
                 [(lo_c, hi_c, g, sid, cnt, 0) for g, sid, cnt in ent], 1)
         else:
             jobs, bound = self._make_jobs([(bs, 0) for bs in boxsets], 1)
-        scores_dev, stats = self._device_scores(jobs, 1, view)
+        scores_dev, stats = self._device_scores(jobs, 1, view,
+                                                deadline_s=deadline_s)
         if mr is None:
             counts = self._scores_to_host(scores_dev, view)[:, 0]
             # sparse buffers cross as tiles: price what actually moved
@@ -1463,7 +1520,8 @@ class SearchEngine:
                         scores_k[q, :nv].astype(np.float64)))
         return out, hb
 
-    def query_batch(self, requests: Sequence[Dict]) -> List:
+    def query_batch(self, requests: Sequence[Dict],
+                    deadline_s: Optional[float] = None) -> List:
         """Answer MANY concurrent queries with ONE fused device call per
         feature subset, all accumulating into ONE [N, Q] device score
         buffer (the tentpole of the batched serving path).
@@ -1516,6 +1574,7 @@ class SearchEngine:
                 results[i] = e
         if not to_fit:
             return results
+        check_deadline(deadline_s, "batch fit")
 
         # ---- fit phase: the WHOLE window trains on device together ----
         # (one jit'd program per distinct max_depth — DESIGN.md §10);
@@ -1597,7 +1656,8 @@ class SearchEngine:
             # a request's boxes live entirely in one form, so per-query
             # score bounds combine by max
             jobs, bound = jobs + j2, max(bound, b2)
-        scores_dev, agg = self._device_scores(jobs, nq, view)
+        scores_dev, agg = self._device_scores(jobs, nq, view,
+                                              deadline_s=deadline_s)
 
         # ---- ranking ---------------------------------------------------
         mrs = [f[6] for f in fitted]

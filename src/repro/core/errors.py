@@ -1,0 +1,93 @@
+"""Typed error taxonomy + deadline helpers shared by the core engine and
+the serving layer (DESIGN.md §14).
+
+The serving path needs to tell three failure families apart at every
+seam — retry, shed, or report — so the exceptions carry a stable
+machine-readable ``code`` instead of leaving the server to string-match
+messages:
+
+  * ``DeadlineExceeded``     the request ran out of budget; never retry,
+                             never bill more device time to it.
+  * ``TransientDeviceError`` a fault the retry policy may re-attempt
+                             (injected faults, flaky device syncs).
+  * everything else          a real bug or bad input; fails the request,
+                             exactly once, with per-request isolation.
+
+This module lives in ``core`` (not ``serve``) on purpose: the engine's
+query loops raise ``DeadlineExceeded`` between device rounds, and core
+importing serve would invert the layering. ``repro.serve.policy``
+re-exports these and adds the serve-only types (Overloaded, ...).
+
+Deadlines are ABSOLUTE ``time.monotonic()`` timestamps (never wall
+clock — NTP steps must not expire requests), carried as a plain float so
+they cross layer boundaries and dataclass fields without wrapping.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+__all__ = ["EngineError", "DeadlineExceeded", "TransientDeviceError",
+           "CompactionFailed", "deadline_after", "deadline_remaining",
+           "check_deadline"]
+
+
+class EngineError(RuntimeError):
+    """Base of the typed taxonomy; ``code`` is the stable wire tag the
+    serving layer copies into ``QueryResponse.error_type``."""
+    code = "internal"
+
+
+class DeadlineExceeded(EngineError):
+    """The request's deadline passed at a checkpoint. Raised at
+    admission, at window formation, before the fit, and between
+    per-subset device query rounds — never mid-kernel (device programs
+    are not cancellable; the checkpoints bound how stale a dead request
+    can run to one round)."""
+    code = "deadline_exceeded"
+
+
+class TransientDeviceError(EngineError):
+    """A failure the RetryPolicy classifies as retryable: the operation
+    is safe to re-run from scratch (queries are pure over an immutable
+    snapshot; appends/compactions are atomic — they either swapped a new
+    snapshot in or changed nothing)."""
+    code = "transient"
+
+
+class CompactionFailed(EngineError):
+    """A background compaction attempt died. The old snapshot keeps
+    serving (the swap never happened); the server records the error and
+    retries with backoff."""
+    code = "compaction_failed"
+
+
+# ----------------------------------------------------------------------
+# deadline helpers
+# ----------------------------------------------------------------------
+
+def deadline_after(timeout_s: float, *, now: Optional[float] = None) -> float:
+    """Absolute monotonic deadline ``timeout_s`` from now."""
+    return (time.monotonic() if now is None else now) + float(timeout_s)
+
+
+def deadline_remaining(deadline_s: Optional[float],
+                       *, now: Optional[float] = None) -> Optional[float]:
+    """Seconds of budget left (negative when expired); None means no
+    deadline."""
+    if deadline_s is None:
+        return None
+    return float(deadline_s) - (time.monotonic() if now is None else now)
+
+
+def check_deadline(deadline_s: Optional[float], where: str = "") -> None:
+    """Raise ``DeadlineExceeded`` if ``deadline_s`` (absolute monotonic)
+    has passed. ``where`` names the checkpoint so timeout reports say
+    which stage burned the budget."""
+    if deadline_s is None:
+        return
+    late = time.monotonic() - float(deadline_s)
+    if late > 0:
+        raise DeadlineExceeded(
+            f"deadline exceeded by {late * 1e3:.1f} ms"
+            + (f" at {where}" if where else ""))

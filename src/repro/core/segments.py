@@ -408,11 +408,15 @@ class SegmentedCatalog:
     _HEADROOM_MIN = 4096
 
     def __init__(self, features: np.ndarray, subsets: np.ndarray, *,
-                 block: int = 1024, n_shards: int = 1):
+                 block: int = 1024, n_shards: int = 1, faults=None):
         x = np.ascontiguousarray(np.asarray(features, np.float32))
         self.subsets = np.asarray(subsets)
         self.block = int(block)
         self.n_shards = max(int(n_shards), 1)
+        # duck-typed fault injector (repro.serve.faults.FaultInjector):
+        # seams fire BEFORE any state change, so a fired fault leaves the
+        # catalog bitwise untouched — core never imports serve
+        self.faults = faults
         self._lock = threading.Lock()          # mutation serialisation
         self._compact_lock = threading.Lock()  # one compaction at a time
         self._geom = 0                         # compaction generation
@@ -484,6 +488,10 @@ class SegmentedCatalog:
         return snap
 
     # ------------------------------------------------------------------
+    def _fault(self, site: str) -> None:
+        if self.faults is not None:
+            self.faults.check(site)
+
     def snapshot(self) -> Snapshot:
         return self._snap
 
@@ -500,6 +508,7 @@ class SegmentedCatalog:
         xnew = np.ascontiguousarray(np.asarray(features, np.float32))
         if xnew.ndim != 2:
             raise ValueError("append expects [m, D] features")
+        self._fault("append")   # before any state change: atomic failure
         with self._lock:
             snap = self._snap
             if xnew.shape[1] != snap.x.shape[1]:
@@ -532,6 +541,7 @@ class SegmentedCatalog:
         untouched — only the validity mask changes, functionally, so
         in-flight snapshots keep their own mask."""
         ids = np.unique(np.asarray(list(ids), np.int64))
+        self._fault("delete")   # before any state change: atomic failure
         with self._lock:
             snap = self._snap
             if len(ids) and (ids[0] < 0 or ids[-1] >= snap.n):
@@ -583,6 +593,10 @@ class SegmentedCatalog:
                 return {"skipped": True, "reason": "single segment",
                         "epoch": snap0.epoch}
             n0 = snap0.n
+            # fault seam BEFORE the merge build: a fired fault aborts the
+            # attempt with the old snapshot still serving and ``_geom``
+            # unchanged — the swap below is the only mutation
+            self._fault("compact")
             merged = self._build_segment(snap0.x[:n0], 0, shard=0)
             with self._lock:
                 cur = self._snap

@@ -1,5 +1,16 @@
-from repro.serve.engine import (QueryRequest, QueryResponse, QueryServer,
-                                merge_shard_results)
+from repro.serve.engine import (IngestRequest, QueryRequest, QueryResponse,
+                                QueryServer, merge_shard_results)
+from repro.serve.faults import FaultInjector, FaultSpec
+from repro.serve.policy import (AdmissionQueue, CompactionFailed,
+                                DeadlineExceeded, EngineError, Overloaded,
+                                RateLimited, RetryPolicy, ServerClosed,
+                                TokenBucket, TransientDeviceError,
+                                deadline_after, deadline_remaining)
 
-__all__ = ["QueryRequest", "QueryResponse", "QueryServer",
-           "merge_shard_results"]
+__all__ = ["QueryRequest", "QueryResponse", "IngestRequest", "QueryServer",
+           "merge_shard_results",
+           "FaultInjector", "FaultSpec",
+           "AdmissionQueue", "RetryPolicy", "TokenBucket",
+           "EngineError", "DeadlineExceeded", "TransientDeviceError",
+           "CompactionFailed", "Overloaded", "RateLimited", "ServerClosed",
+           "deadline_after", "deadline_remaining"]

@@ -19,8 +19,13 @@ Production notes:
     catalog across that host's devices and merges top-k lists on device
     (DESIGN.md §11; ``merge_shard_results`` below stays as the host
     oracle of that merge);
-  * per-request deadline + error isolation: one bad query never takes
-    down the batch.
+  * robustness contracts (DESIGN.md §14): absolute deadlines checked at
+    admission, window formation, before the fit and between device
+    rounds; a bounded admission queue with typed ``Overloaded`` /
+    ``RateLimited`` shedding; seeded-backoff retries for transient
+    device faults; background compaction that retries with backoff and
+    keeps serving the old snapshot on failure; ``close(drain=...)``
+    resolves EVERY outstanding request — nothing blocks forever.
 """
 from __future__ import annotations
 
@@ -33,6 +38,16 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.engine import MODELS, QueryResult, SearchEngine
+from repro.core.errors import (DeadlineExceeded, check_deadline,
+                               deadline_after)
+from repro.serve.policy import (AdmissionQueue, Overloaded, RateLimited,
+                                RetryPolicy, ServerClosed, TokenBucket)
+
+
+def _error_type(exc: BaseException) -> str:
+    """Stable wire tag for a failure: the typed taxonomy's ``code``
+    when present, the exception class name otherwise."""
+    return getattr(exc, "code", type(exc).__name__)
 
 
 @dataclass
@@ -42,6 +57,13 @@ class QueryRequest:
     neg_ids: Sequence[int]
     model: str = "dbranch"
     kwargs: Dict = field(default_factory=dict)
+    # absolute time.monotonic() deadline (None = no deadline). The server
+    # checks it at admission, window formation, before the fit, and
+    # between device rounds — a request never runs more than one round
+    # past expiry (device programs are not cancellable).
+    deadline_s: Optional[float] = None
+    # rate-limit key: each distinct source gets its own token bucket
+    source: str = "default"
 
 
 @dataclass
@@ -57,6 +79,7 @@ class IngestRequest:
     op: str
     features: Optional[np.ndarray] = None
     ids: Optional[Sequence[int]] = None
+    source: str = "default"
 
 
 @dataclass
@@ -67,6 +90,9 @@ class QueryResponse:
     error: str = ""
     latency_s: float = 0.0
     info: Dict = field(default_factory=dict)   # ingest acks land here
+    # machine-readable failure class ("" on success): deadline_exceeded,
+    # overloaded, rate_limited, shutdown, transient, internal, ...
+    error_type: str = ""
 
 
 class QueryServer:
@@ -76,20 +102,70 @@ class QueryServer:
     query returns; a request's own kwargs override it. Setting it keeps
     the whole ranked path device-resident: per query only O(max_results)
     bytes cross device->host (DESIGN.md §9), which ``stats["host_bytes"]``
-    tracks across everything this server has served."""
+    tracks across everything this server has served.
+
+    Robustness knobs (all default OFF → legacy behaviour):
+
+      * ``queue_depth`` / ``shed_policy`` — bounded admission queue with
+        typed ``Overloaded`` rejections; ``"reject-newest"`` refuses the
+        incoming request, ``"reject-largest-fit"`` evicts the queued
+        request with the largest label set (fit-cost proxy) to admit a
+        cheaper newcomer.
+      * ``rate_limit=(rate, burst)`` — per-``source`` token bucket at
+        admission; empty bucket → typed ``RateLimited``.
+      * ``default_deadline_s`` — relative budget stamped on requests that
+        arrive without a deadline.
+      * ``retry_policy`` — retries transient device faults on the query
+        path (seeded backoff; never retries ``DeadlineExceeded``).
+      * ``compaction_retry`` — backoff schedule for failed background
+        compactions (the old snapshot keeps serving throughout).
+      * ``degraded_max_results`` / ``soft_depth_frac`` — graceful
+        degradation: when the queue is above ``soft_depth_frac *
+        queue_depth``, windows clamp max_results to this cheaper value
+        BEFORE admission starts shedding.
+      * ``faults`` — a FaultInjector for the serve-layer ``submit`` seam
+        (core seams take theirs via ``SearchEngine(faults=...)``);
+        defaults to the engine's injector so ``close`` can release
+        parked hangs.
+    """
 
     def __init__(self, engine: SearchEngine, *, max_batch: int = 8,
                  batch_window_s: float = 0.002,
-                 max_results: Optional[int] = None):
+                 max_results: Optional[int] = None,
+                 queue_depth: Optional[int] = None,
+                 shed_policy: str = "reject-newest",
+                 rate_limit: Optional[Tuple[float, float]] = None,
+                 default_deadline_s: Optional[float] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 compaction_retry: Optional[RetryPolicy] = None,
+                 degraded_max_results: Optional[int] = None,
+                 soft_depth_frac: float = 0.75,
+                 faults=None):
         self.engine = engine
         self.max_batch = max_batch
         self.batch_window_s = batch_window_s
         self.max_results = max_results
-        self._q: "queue.Queue[Tuple[QueryRequest, queue.Queue]]" = queue.Queue()
+        self.queue_depth = queue_depth
+        self.rate_limit = rate_limit
+        self.default_deadline_s = default_deadline_s
+        self.retry_policy = retry_policy
+        self.compaction_retry = compaction_retry or RetryPolicy(
+            max_attempts=3, backoff_s=0.05)
+        self.degraded_max_results = degraded_max_results
+        self.soft_depth_frac = float(soft_depth_frac)
+        self.faults = faults if faults is not None \
+            else getattr(engine, "faults", None)
+        self._q = AdmissionQueue(depth=queue_depth, shed_policy=shed_policy)
+        self._buckets: Dict[str, TokenBucket] = {}
         self._stop = threading.Event()
+        self._drain = threading.Event()   # close(drain=True): finish queue
+        self._closed = False
+        self._degraded = False
         self._thread: Optional[threading.Thread] = None
         self._held = None            # ingest that closed a batch window
         self._compact_thread: Optional[threading.Thread] = None
+        self._last_compaction_error = ""
+        self._stats_lock = threading.Lock()
         self.stats = {"served": 0, "errors": 0, "batches": 0,
                       "batched_queries": 0, "latency_sum": 0.0,
                       "fit_s_sum": 0.0, "host_bytes": 0,
@@ -102,7 +178,29 @@ class QueryServer:
                       "dense_score_bytes_equiv": 0,
                       "ingests": 0, "ingest_errors": 0, "ingest_s_sum": 0.0,
                       "rows_appended": 0, "rows_deleted": 0,
-                      "compactions": 0}
+                      "compactions": 0,
+                      # robustness ledger (DESIGN.md §14): every submit
+                      # lands in exactly one of admitted / rejected_*,
+                      # every admitted request in exactly one of served /
+                      # expired_in_queue / evicted / shutdown_unserved
+                      "admitted": 0, "rejected_overloaded": 0,
+                      "rejected_rate_limited": 0, "rejected_deadline": 0,
+                      "expired_in_queue": 0, "evicted": 0,
+                      "shutdown_unserved": 0, "submit_faults": 0,
+                      "retries": 0, "batch_fallbacks": 0,
+                      "compaction_errors": 0, "compaction_retries": 0,
+                      "degraded_windows": 0}
+
+    def _bump(self, key: str, v=1) -> None:
+        """Locked stats increment — submit runs on caller threads and the
+        compaction worker off-loop, so ledger counters can race the
+        serving thread without this."""
+        with self._stats_lock:
+            self.stats[key] += v
+
+    def _fault(self, site: str) -> None:
+        if self.faults is not None:
+            self.faults.check(site)
 
     def _note_score_memory(self, st: Dict) -> None:
         """Fold one result's device score-memory figures into the
@@ -121,6 +219,12 @@ class QueryServer:
         kw = dict(req.kwargs)
         if self.max_results is not None:
             kw.setdefault("max_results", self.max_results)
+        if self._degraded and self.degraded_max_results is not None:
+            # graceful degradation: clamp the ranked cut BEFORE admission
+            # has to shed — a cheaper window drains backlog faster
+            mr = kw.get("max_results")
+            kw["max_results"] = self.degraded_max_results if mr is None \
+                else min(int(mr), self.degraded_max_results)
         return kw
 
     # ------------------------------------------------------------------
@@ -143,9 +247,18 @@ class QueryServer:
                 # the heavy merge runs OFF the serving loop (the whole
                 # point of background compaction — a synchronous rebuild
                 # here would stall every queued query for seconds);
-                # queries keep serving the old snapshot until the swap
-                self._compact_thread = self.engine.compact(background=True)
+                # queries keep serving the old snapshot until the swap.
+                # Compactions are SERIALIZED: while one worker is alive
+                # the request coalesces into it instead of leaking a
+                # second thread onto the same merge.
                 info = {"op": "compact", "background": True}
+                if (self._compact_thread is not None
+                        and self._compact_thread.is_alive()):
+                    info["coalesced"] = True
+                else:
+                    self._compact_thread = threading.Thread(
+                        target=self._compact_worker, daemon=True)
+                    self._compact_thread.start()
                 self.stats["compactions"] += 1
             else:
                 raise ValueError(f"unknown ingest op {req.op!r}")
@@ -154,17 +267,47 @@ class QueryServer:
                                  info=info)
         except Exception as e:  # noqa: BLE001 — per-request isolation
             resp = QueryResponse(req.request_id, False, None, f"{e}",
-                                 time.perf_counter() - t0)
+                                 time.perf_counter() - t0,
+                                 error_type=_error_type(e))
             self.stats["ingest_errors"] += 1
         self.stats["ingests"] += 1
         self.stats["ingest_s_sum"] += resp.latency_s
         return resp
 
+    def _compact_worker(self) -> None:
+        """Background compaction with capture + retry (DESIGN.md §14):
+        a failed attempt leaves the old snapshot serving bitwise
+        untouched (the catalog's swap is the only mutation), backs off
+        per ``compaction_retry``, and on final failure records the error
+        and resets the capacity-hint table — a crash mid-merge says
+        nothing about the geometry the engine serves next."""
+        try:
+            self.compaction_retry.call(
+                self.engine.compact,
+                on_retry=lambda a, e: self._bump("compaction_retries"))
+        except Exception as e:  # noqa: BLE001 — worker must not die loudly
+            self._bump("compaction_errors")
+            self._last_compaction_error = f"{e}"
+            inval = getattr(self.engine, "invalidate_capacity_hints", None)
+            if inval is not None:
+                inval()
+
     def handle(self, req: QueryRequest) -> QueryResponse:
         t0 = time.perf_counter()
         try:
-            res = self.engine.query(req.pos_ids, req.neg_ids,
-                                    model=req.model, **self._query_kwargs(req))
+            check_deadline(req.deadline_s, "window formation")
+            kw = self._query_kwargs(req)
+
+            def run():
+                return self.engine.query(req.pos_ids, req.neg_ids,
+                                         model=req.model,
+                                         deadline_s=req.deadline_s, **kw)
+            if self.retry_policy is not None:
+                res = self.retry_policy.call(
+                    run, deadline_s=req.deadline_s,
+                    on_retry=lambda a, e: self._bump("retries"))
+            else:
+                res = run()
             resp = QueryResponse(req.request_id, True, res,
                                  latency_s=time.perf_counter() - t0)
             self.stats["host_bytes"] += res.stats.get(
@@ -175,11 +318,23 @@ class QueryServer:
                 1 if res.stats.get("n_shards", 1) > 1 else 0
         except Exception as e:  # noqa: BLE001 — per-request isolation
             resp = QueryResponse(req.request_id, False, None, f"{e}",
-                                 time.perf_counter() - t0)
+                                 time.perf_counter() - t0,
+                                 error_type=_error_type(e))
         self.stats["served"] += 1
         self.stats["errors"] += 0 if resp.ok else 1
         self.stats["latency_sum"] += resp.latency_s
         return resp
+
+    @staticmethod
+    def _window_deadline(reqs: List[QueryRequest]) -> Optional[float]:
+        """The shared device phase runs under the LOOSEST deadline in
+        the window (a tight one must not kill its neighbours' work);
+        any request without a deadline lifts the constraint entirely.
+        Per-request budgets are re-checked at de-mux."""
+        dls = [r.deadline_s for r in reqs]
+        if any(d is None for d in dls):
+            return None
+        return max(dls)
 
     def handle_batch(self, reqs: List[QueryRequest]) -> List[QueryResponse]:
         """Answer a batching-window's worth of requests together.
@@ -190,25 +345,70 @@ class QueryServer:
         so the batching window buys device efficiency instead of just
         queueing. Per-request error isolation is preserved — query_batch
         returns the raised exception for a failed request — and an
-        unexpected batch-wide failure falls back to sequential handling.
+        unexpected batch-wide failure falls back to sequential handling
+        (``batch_fallbacks``), billing the failed attempt's wall time to
+        the requests that paid it instead of dropping it. A batch-wide
+        ``DeadlineExceeded`` short-circuits: every request in the window
+        shares the deadline that expired, so retrying them sequentially
+        would only bill more device time to dead requests.
         """
-        self.stats["batches"] += 1
         if len(reqs) == 1:
+            self.stats["batches"] += 1
             return [self.handle(reqs[0])]
         t0 = time.perf_counter()
+        window_dl = self._window_deadline(reqs)
         batch = [{"pos_ids": r.pos_ids, "neg_ids": r.neg_ids,
                   "model": r.model, **self._query_kwargs(r)} for r in reqs]
+
+        def run():
+            return self.engine.query_batch(batch, deadline_s=window_dl)
         try:
-            outs = self.engine.query_batch(batch)
+            if self.retry_policy is not None:
+                outs = self.retry_policy.call(
+                    run, deadline_s=window_dl,
+                    on_retry=lambda a, e: self._bump("retries"))
+            else:
+                outs = run()
+        except DeadlineExceeded as e:
+            wall = time.perf_counter() - t0
+            resps = []
+            for r in reqs:
+                resps.append(QueryResponse(r.request_id, False, None,
+                                           f"{e}", wall,
+                                           error_type=_error_type(e)))
+                self.stats["served"] += 1
+                self.stats["errors"] += 1
+                self.stats["latency_sum"] += wall
+            return resps
         except Exception:  # noqa: BLE001 — never take down the batch
-            return [self.handle(r) for r in reqs]
+            # sequential fallback: each request retried alone. The failed
+            # batch attempt's wall time was REAL latency for every
+            # request in the window — bill it, don't drop it.
+            self.stats["batch_fallbacks"] += 1
+            wasted = time.perf_counter() - t0
+            resps = [self.handle(r) for r in reqs]
+            for resp in resps:
+                resp.latency_s += wasted
+                self.stats["latency_sum"] += wasted
+            return resps
+        self.stats["batches"] += 1
         wall = time.perf_counter() - t0
         resps = []
         batch_bytes_counted = False
         for r, out in zip(reqs, outs):
+            expired = None
+            if not isinstance(out, Exception):
+                try:     # per-request deadline re-check at de-mux
+                    check_deadline(r.deadline_s, "de-mux")
+                except DeadlineExceeded as e:
+                    expired = e
             if isinstance(out, Exception):
                 resp = QueryResponse(r.request_id, False, None, f"{out}",
-                                     wall)
+                                     wall, error_type=_error_type(out))
+            elif expired is not None:
+                resp = QueryResponse(r.request_id, False, None,
+                                     f"{expired}", wall,
+                                     error_type=_error_type(expired))
             else:
                 resp = QueryResponse(r.request_id, True, out,
                                      latency_s=wall)
@@ -242,40 +442,133 @@ class QueryServer:
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
+    @staticmethod
+    def _reject(out: "queue.Queue[QueryResponse]", req,
+                exc: BaseException) -> "queue.Queue[QueryResponse]":
+        out.put(QueryResponse(req.request_id, False, None, f"{exc}",
+                              error_type=_error_type(exc)))
+        return out
+
+    def _request_cost(self, req) -> float:
+        """Shed key for reject-largest-fit: the label-set size is the
+        fit-cost proxy (training dominates small-result queries; a big
+        label set holds the window longest). Ingests cost 0 — admission
+        never sheds a catalog mutation to make room for a query."""
+        if isinstance(req, QueryRequest):
+            return float(len(req.pos_ids) + len(req.neg_ids))
+        return 0.0
+
     def submit(self, req) -> "queue.Queue[QueryResponse]":
         """Enqueue a QueryRequest OR an IngestRequest; both resolve to a
-        QueryResponse on the returned queue."""
+        QueryResponse on the returned queue — ALWAYS, even when admission
+        sheds the request (a typed Overloaded/RateLimited/expired
+        response resolves immediately). After ``close`` the server
+        raises ``ServerClosed`` instead of enqueueing into a dead queue.
+        """
+        if self._closed:
+            raise ServerClosed("server is closed; submit refused")
         out: "queue.Queue[QueryResponse]" = queue.Queue(maxsize=1)
-        self._q.put((req, out))
+        try:
+            self._fault("submit")    # serve-layer chaos seam
+        except Exception as e:  # noqa: BLE001 — typed, never unserved
+            self._bump("submit_faults")
+            return self._reject(out, req, e)
+        # stamp the default deadline budget at ADMISSION time: queue wait
+        # burns it, which is exactly what a latency SLO means
+        if isinstance(req, QueryRequest):
+            if req.deadline_s is None and self.default_deadline_s is not None:
+                req.deadline_s = deadline_after(self.default_deadline_s)
+            if req.deadline_s is not None \
+                    and time.monotonic() > req.deadline_s:
+                self._bump("rejected_deadline")
+                return self._reject(out, req, DeadlineExceeded(
+                    "deadline already expired at admission"))
+        if self.rate_limit is not None:
+            src = getattr(req, "source", "default")
+            bucket = self._buckets.get(src)
+            if bucket is None:
+                bucket = self._buckets.setdefault(
+                    src, TokenBucket(*self.rate_limit))
+            if not bucket.try_acquire():
+                self._bump("rejected_rate_limited")
+                return self._reject(out, req, RateLimited(
+                    f"source {src!r} exceeded "
+                    f"{self.rate_limit[0]:g} req/s"))
+        admitted, evicted = self._q.offer((req, out),
+                                          cost=self._request_cost(req))
+        if not admitted:
+            self._bump("rejected_overloaded")
+            return self._reject(out, req, Overloaded(
+                f"admission queue full (depth={self.queue_depth}, "
+                f"policy={self._q.shed_policy})"))
+        self._bump("admitted")
+        if evicted is not None:
+            ev_req, ev_out = evicted
+            self._bump("evicted")
+            self._reject(ev_out, ev_req, Overloaded(
+                "shed by reject-largest-fit to admit a cheaper request"))
         return out
 
     def _next_item(self, timeout: float):
         if self._held is not None:
             item, self._held = self._held, None
             return item
-        return self._q.get(timeout=timeout)
+        return self._q.pop(timeout)
+
+    def _pop_live(self, timeout: float):
+        """Next queue item whose deadline hasn't already expired; expired
+        requests resolve immediately with a typed response (window
+        formation checkpoint — queue wait burned their budget)."""
+        item = self._next_item(timeout)
+        if item is None:
+            return None
+        req, out = item
+        if isinstance(req, QueryRequest) and req.deadline_s is not None \
+                and time.monotonic() > req.deadline_s:
+            self._bump("expired_in_queue")
+            self._reject(out, req, DeadlineExceeded(
+                "deadline expired while queued"))
+            return self._pop_live(0)   # try the next entry, don't wait
+        return item
+
+    def _update_health(self) -> None:
+        """Degraded when the queue is above the soft-depth watermark —
+        checked once per window so every query in a window sees one
+        consistent max_results clamp."""
+        qd = self.queue_depth
+        if qd is None:
+            self._degraded = False
+            return
+        self._degraded = len(self._q) >= max(
+            1, int(qd * self.soft_depth_frac))
+        if self._degraded:
+            self.stats["degraded_windows"] += 1
 
     def _loop(self):
         """Batching loop with ingest interleaving: ingests apply BETWEEN
         query windows, in arrival order. An ingest at the head of the
         queue runs immediately; one arriving mid-window closes the
         window (the collected queries run on the snapshot they arrived
-        under) and applies before the next window opens."""
+        under) and applies before the next window opens. In drain mode
+        (close(drain=True)) the loop exits only once the queue is empty
+        — every queued request gets a real answer."""
         while not self._stop.is_set():
-            try:
-                first = self._next_item(0.05)
-            except queue.Empty:
+            first = self._pop_live(0.05)
+            if first is None:
+                if self._drain.is_set() and len(self._q) == 0 \
+                        and self._held is None:
+                    break
                 continue
             if isinstance(first[0], IngestRequest):
                 first[1].put(self.handle_ingest(first[0]))
                 continue
+            self._update_health()
             batch = [first]
             deadline = time.perf_counter() + self.batch_window_s
             while len(batch) < self.max_batch:
-                try:
-                    item = self._next_item(
-                        max(deadline - time.perf_counter(), 0))
-                except queue.Empty:
+                item = self._pop_live(
+                    max(deadline - time.perf_counter(), 0))
+                if item is None:
                     break
                 if isinstance(item[0], IngestRequest):
                     self._held = item      # closes this window; runs next
@@ -286,17 +579,59 @@ class QueryServer:
             for (_, out), resp in zip(batch, resps):
                 out.put(resp)
 
-    def close(self):
-        self._stop.set()
+    def close(self, drain: bool = True):
+        """Shut down the threaded front end. ``drain=True`` (default)
+        answers every queued request before stopping; ``drain=False``
+        stops immediately and resolves the backlog with typed shutdown
+        errors. Either way NOTHING is stranded: every submitted request's
+        queue gets exactly one response, and ``submit`` afterwards raises
+        ``ServerClosed``. Idempotent."""
+        self._closed = True
+        if drain:
+            self._drain.set()
+        else:
+            self._stop.set()
+        if self.faults is not None and not drain:
+            # a fast close must not wait out injected hangs
+            self.faults.release()
         if self._thread is not None:
-            self._thread.join(timeout=2.0)
+            self._thread.join(timeout=30.0 if drain else 2.0)
+            if self._thread.is_alive():
+                self._stop.set()
+                if self.faults is not None:
+                    self.faults.release()
+                self._thread.join(timeout=2.0)
+        self._stop.set()
+        # typed shutdown errors for whatever the loop did not serve
+        leftovers = self._q.drain()
+        if self._held is not None:
+            leftovers.insert(0, self._held)
+            self._held = None
+        for req, out in leftovers:
+            self._bump("shutdown_unserved")
+            self._reject(out, req, ServerClosed(
+                "server closed before this request ran"))
         if self._compact_thread is not None:
             self._compact_thread.join(timeout=30.0)
 
     # ------------------------------------------------------------------
+    @property
+    def health(self) -> str:
+        """Coarse serving state: ``ok`` / ``degraded`` (soft-depth
+        watermark crossed or the last compaction attempt failed) /
+        ``draining`` (close in progress or done)."""
+        if self._closed:
+            return "draining"
+        if self._degraded or self.stats["compaction_errors"] > 0:
+            return "degraded"
+        return "ok"
+
     def summary(self) -> Dict:
         served = max(self.stats["served"], 1)
         out = {**self.stats,
+               "health": self.health,
+               "queue_depth_peak": self._q.depth_peak,
+               "last_compaction_error": self._last_compaction_error,
                "n_shards": getattr(self.engine, "n_shards", 1),
                "live": getattr(self.engine, "live", False),
                "mean_latency_s": self.stats["latency_sum"] / served,

@@ -1,0 +1,144 @@
+"""Deterministic fault injection for the serving path (DESIGN.md §14).
+
+A ``FaultInjector`` threads through the SearchEngine / SegmentedCatalog /
+QueryServer seams and fires scripted faults at named call sites:
+
+  site           fired from
+  -----------    ----------------------------------------------------
+  append         SegmentedCatalog.append, before any state changes
+  delete         SegmentedCatalog.delete, before any state changes
+  compact        SegmentedCatalog.compact, after the in-progress gate
+                 and BEFORE the merge build — a fired fault leaves the
+                 old snapshot serving, bitwise untouched
+  fused_query    SearchEngine device-score loops, once per launch round
+  device_sync    SearchEngine, before each batched device->host sync
+  submit         QueryServer admission (serve-layer chaos)
+
+The seams call ``injector.check(site)`` by duck type — the core layers
+never import this module, so the dependency arrow stays serve -> core.
+
+Actions: ``fail`` raises ``TransientDeviceError`` (the retryable class,
+so retry-policy coverage composes), ``slow`` sleeps ``delay_s`` then
+proceeds, ``hang`` blocks for ``delay_s`` (expected to overrun the
+request's deadline — the checkpoint after the seam converts the hang
+into a typed ``DeadlineExceeded`` instead of a wedged server). Hangs
+park on an Event so ``release()`` (called by a draining server) unblocks
+them immediately instead of waiting out the sleep.
+
+Determinism is the whole point: a spec fires on explicit 1-based call
+indices (``at_calls``) and/or with probability ``prob`` — and the
+probabilistic draw is keyed on ``(seed, site, call index)``, NOT on a
+shared RNG stream, so two runs fire identically however threads
+interleave, and a chaos schedule replays bit-for-bit from its seed.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.errors import TransientDeviceError
+
+__all__ = ["FaultSpec", "FaultInjector"]
+
+ACTIONS = ("fail", "slow", "hang")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One scripted fault: fire ``action`` at ``site`` on the listed
+    call indices (1-based) and/or with per-call probability ``prob``."""
+    site: str
+    action: str = "fail"
+    at_calls: Tuple[int, ...] = ()
+    prob: float = 0.0
+    delay_s: float = 0.05
+    message: str = ""
+
+    def __post_init__(self):
+        if self.action not in ACTIONS:
+            raise ValueError(f"action must be one of {ACTIONS}, "
+                             f"got {self.action!r}")
+
+
+@dataclass
+class FaultRecord:
+    site: str
+    call: int
+    action: str
+    t_s: float
+
+
+class FaultInjector:
+    """Seeded, thread-safe, replayable fault schedule.
+
+    ``check(site)`` is the only method the seams call; everything else
+    is test/observability surface: ``fired`` (the exact schedule that
+    happened), ``calls(site)`` (per-site call counts — asserting these
+    pins that the seams are actually wired), ``release()`` (unblock any
+    parked hang; a closing server calls this so shutdown never waits
+    out an injected sleep).
+    """
+
+    def __init__(self, seed: int = 0,
+                 specs: Sequence[FaultSpec] = ()):
+        self.seed = int(seed)
+        self.specs = tuple(specs)
+        self._by_site: Dict[str, List[FaultSpec]] = {}
+        for sp in self.specs:
+            self._by_site.setdefault(sp.site, []).append(sp)
+        self._counts: Dict[str, int] = {}
+        self._fired: List[FaultRecord] = []
+        self._lock = threading.Lock()
+        self._released = threading.Event()
+        self._t0 = time.monotonic()
+
+    # ------------------------------------------------------------------
+    def _draw(self, site: str, idx: int) -> float:
+        """Uniform [0, 1) keyed on (seed, site, call idx) — independent
+        of thread interleaving and of every other site's call history."""
+        key = zlib.crc32(site.encode()) & 0x7FFFFFFF
+        return float(np.random.default_rng(
+            [self.seed, key, int(idx)]).random())
+
+    def check(self, site: str) -> None:
+        """Count one call at ``site`` and fire whatever the schedule
+        says. Raises ``TransientDeviceError`` on ``fail``; sleeps on
+        ``slow``/``hang`` (interruptible via ``release``)."""
+        with self._lock:
+            idx = self._counts.get(site, 0) + 1
+            self._counts[site] = idx
+            todo = []
+            for sp in self._by_site.get(site, ()):
+                hit = idx in sp.at_calls
+                if not hit and sp.prob > 0.0:
+                    hit = self._draw(site, idx) < sp.prob
+                if hit:
+                    todo.append(sp)
+                    self._fired.append(FaultRecord(
+                        site, idx, sp.action,
+                        time.monotonic() - self._t0))
+        for sp in todo:   # sleep/raise OUTSIDE the lock: never wedge peers
+            if sp.action in ("slow", "hang"):
+                self._released.wait(timeout=sp.delay_s)
+            if sp.action == "fail":
+                raise TransientDeviceError(
+                    sp.message or f"injected fault at {site} "
+                                  f"(call {self._counts[site]})")
+
+    # ------------------------------------------------------------------
+    def calls(self, site: str) -> int:
+        return self._counts.get(site, 0)
+
+    @property
+    def fired(self) -> List[FaultRecord]:
+        with self._lock:
+            return list(self._fired)
+
+    def release(self) -> None:
+        """Unblock every current and future hang/slow immediately."""
+        self._released.set()

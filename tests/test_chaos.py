@@ -1,0 +1,215 @@
+"""Chaos suite (ISSUE 7 / DESIGN.md §14): a seeded fault schedule over a
+mixed query/ingest workload, checked against a fault-free oracle.
+
+Contracts pinned here:
+  * SNAPSHOT ISOLATION + RESULT PARITY: under injected transient faults
+    on the device-query seams (with retries) and on compaction (with the
+    old snapshot kept serving), every query that survives returns ids
+    AND scores bitwise identical to the fault-free oracle run — faults
+    may cost latency and retries, never correctness;
+  * NO DEADLOCK: every wait in this file is bounded, the server answers
+    every submitted request exactly once, and an injected HANG parked
+    inside the engine is released by ``close`` instead of wedging it;
+  * LEDGER CONSISTENCY: admitted = served + ingests + expired_in_queue
+    + evicted + shutdown_unserved — no request is lost or double-counted
+    whatever the schedule injects;
+  * REPLAYABILITY: the same seed fires the same faults at the same call
+    indices, run to run, across threads;
+  * SURVIVAL: after every single-site fault the server still serves.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import SearchEngine
+from repro.serve.engine import IngestRequest, QueryRequest, QueryServer
+from repro.serve.faults import FaultInjector, FaultSpec
+from repro.serve.policy import RetryPolicy
+
+ENG = dict(n_subsets=4, subset_dim=4, block=64)
+GET_S = 120
+
+
+def _data(n=400, d=16, seed=0):
+    return np.random.default_rng(seed).normal(
+        0, 1, (n, d)).astype(np.float32)
+
+
+def _qlabels(i):
+    return list(range(5 + 2 * i)), list(range(100, 140 + 5 * i))
+
+
+# one mixed schedule: queries interleaved with appends, a delete and
+# compactions — every ingest is fault-free (content must match the
+# oracle's for parity; ingest-site faults get their own survival test)
+OPS = [("query", 0), ("query", 1), ("append", 0), ("query", 2),
+       ("delete", 0), ("query", 3), ("compact", 0), ("query", 4),
+       ("append", 1), ("query", 5), ("query", 6), ("compact", 1),
+       ("query", 7)]
+
+
+def _run_schedule(x, faults, retry):
+    """Closed-loop sequential run of OPS; returns (engine, server,
+    {query index -> response}). Sequential submission keeps the catalog
+    content at each query identical across runs — the parity baseline."""
+    eng = SearchEngine(x, **ENG, live=True, faults=faults)
+    srv = QueryServer(eng, retry_policy=retry, max_results=20)
+    srv.start()
+    results = {}
+    for rid, (op, arg) in enumerate(OPS):
+        if op == "query":
+            pos, neg = _qlabels(arg)
+            results[arg] = srv.submit(
+                QueryRequest(rid, pos, neg)).get(timeout=GET_S)
+        elif op == "append":
+            r = srv.submit(IngestRequest(
+                rid, "append",
+                features=_data(30, seed=100 + arg))).get(timeout=GET_S)
+            assert r.ok                   # parity requires identical content
+        elif op == "delete":
+            r = srv.submit(IngestRequest(
+                rid, "delete", ids=range(20, 30))).get(timeout=GET_S)
+            assert r.ok
+        else:
+            r = srv.submit(IngestRequest(rid, "compact")).get(timeout=GET_S)
+            assert r.ok
+            if srv._compact_thread is not None:
+                srv._compact_thread.join(timeout=60)
+                assert not srv._compact_thread.is_alive()
+    srv.close()
+    return eng, srv, results
+
+
+def _chaos_injector(seed=5):
+    return FaultInjector(seed=seed, specs=[
+        FaultSpec("fused_query", prob=0.12),
+        FaultSpec("device_sync", prob=0.12),
+        FaultSpec("device_sync", action="slow", prob=0.1, delay_s=0.01),
+        FaultSpec("compact", at_calls=(1,)),
+        FaultSpec("submit", action="slow", prob=0.2, delay_s=0.005)])
+
+
+def test_chaos_schedule_parity_and_ledger():
+    x = _data()
+    retry = RetryPolicy(max_attempts=5, backoff_s=0.001)
+    inj = _chaos_injector()
+    _, srv, chaos = _run_schedule(x, inj, retry)
+    _, osrv, oracle = _run_schedule(x, None, None)
+
+    # the oracle run is clean end to end
+    assert all(r.ok for r in oracle.values())
+    assert osrv.stats["errors"] == 0
+
+    # every seam the schedule targets was actually exercised
+    assert inj.calls("fused_query") > 0
+    assert inj.calls("device_sync") > 0
+    assert inj.calls("compact") >= 1
+    assert inj.calls("submit") == len(OPS)
+    assert len(inj.fired) > 0
+
+    # the injected compaction failure retried to success in background:
+    # same final geometry as the oracle
+    assert srv.stats["compaction_errors"] == 0
+    assert srv.stats["compaction_retries"] >= 1
+    assert srv.summary()["epoch"] == osrv.summary()["epoch"]
+    assert srv.summary()["n_segments"] == osrv.summary()["n_segments"]
+
+    # RESULT PARITY: surviving queries are bitwise the oracle's answers
+    survivors = 0
+    for q, resp in chaos.items():
+        if not resp.ok:
+            # the only acceptable loss: retries exhausted on a transient
+            assert resp.error_type == "transient", resp.error
+            continue
+        survivors += 1
+        np.testing.assert_array_equal(resp.result.ids,
+                                      oracle[q].result.ids)
+        np.testing.assert_array_equal(resp.result.scores,
+                                      oracle[q].result.scores)
+    assert survivors >= len(chaos) // 2   # retries absorb most faults
+
+    # LEDGER: every admitted request resolved in exactly one bucket
+    for s in (srv, osrv):
+        st = s.stats
+        assert st["admitted"] == (st["served"] + st["ingests"]
+                                  + st["expired_in_queue"] + st["evicted"]
+                                  + st["shutdown_unserved"])
+        assert st["errors"] <= st["served"]   # errors counted within served
+        assert st["shutdown_unserved"] == 0   # drain answered everything
+
+
+def test_chaos_schedule_replays_bitwise():
+    """Same seed -> the same faults fire at the same per-site call
+    indices, independent of thread interleaving."""
+    x = _data()
+    retry = RetryPolicy(max_attempts=5, backoff_s=0.001)
+    runs = []
+    for _ in range(2):
+        inj = _chaos_injector()
+        _, _, results = _run_schedule(x, inj, retry)
+        runs.append((sorted((r.site, r.call, r.action)
+                            for r in inj.fired),
+                     {q: (r.ok, r.error_type) for q, r in results.items()}))
+    assert runs[0][0] == runs[1][0]       # identical fault schedule
+    assert runs[0][1] == runs[1][1]       # identical outcome classes
+
+
+def test_chaos_server_survives_every_fault_site():
+    """One injected failure per seam, each on a fresh server: the fault
+    surfaces as a typed response (never an unhandled crash, never a
+    mutated catalog) and the very next operation serves cleanly."""
+    x = _data(200)
+    pos, neg = list(range(8)), list(range(100, 130))
+    for site, op in [("append", "ingest"), ("delete", "ingest"),
+                     ("fused_query", "query"), ("device_sync", "query"),
+                     ("submit", "submit")]:
+        inj = FaultInjector(specs=[FaultSpec(site, at_calls=(1,))])
+        eng = SearchEngine(x, **ENG, live=True, faults=inj)
+        srv = QueryServer(eng, faults=inj)
+        epoch0 = eng._catalog.epoch
+        if op == "ingest":
+            kind = "append" if site == "append" else "delete"
+            r = srv.handle_ingest(IngestRequest(
+                0, kind, features=_data(10, seed=9), ids=[0, 1]))
+            assert not r.ok and r.error_type == "transient"
+            assert eng._catalog.epoch == epoch0   # atomic: no mutation
+            assert srv.stats["ingest_errors"] == 1
+        elif op == "query":
+            r = srv.handle(QueryRequest(0, pos, neg))
+            assert not r.ok and r.error_type == "transient"
+        else:
+            srv.start()
+            r = srv.submit(QueryRequest(0, pos, neg)).get(timeout=GET_S)
+            assert not r.ok and r.error_type == "transient"
+            assert srv.stats["submit_faults"] == 1
+        # the server still serves after the fault
+        if op == "submit":
+            r2 = srv.submit(QueryRequest(1, pos, neg)).get(timeout=GET_S)
+        else:
+            r2 = srv.handle(QueryRequest(1, pos, neg))
+        assert r2.ok
+        srv.close()
+
+
+def test_injected_hang_released_by_close():
+    """A hang parked inside the engine must not wedge shutdown:
+    close(drain=False) releases the injector, the in-flight request
+    resolves, and close returns promptly."""
+    x = _data(200)
+    inj = FaultInjector(specs=[FaultSpec("fused_query", action="hang",
+                                         at_calls=(1,), delay_s=60.0)])
+    eng = SearchEngine(x, **ENG, faults=inj)
+    srv = QueryServer(eng)
+    # warm the jit caches on a clean twin so the hang dominates timing
+    SearchEngine(x, **ENG).query(list(range(8)), list(range(100, 130)),
+                                 model="dbranch")
+    srv.start()
+    out = srv.submit(QueryRequest(0, list(range(8)),
+                                  list(range(100, 130))))
+    time.sleep(0.3)                       # let the loop park on the hang
+    t0 = time.monotonic()
+    srv.close(drain=False)
+    assert time.monotonic() - t0 < 30.0   # never waits out the 60 s hang
+    resp = out.get(timeout=GET_S)         # resolved, one way or the other
+    assert resp.request_id == 0
