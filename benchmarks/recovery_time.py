@@ -1,0 +1,194 @@
+"""Durability cost benchmark (DESIGN.md §15): what does crash safety
+charge, and how fast does recovery come back?
+
+Three figures, one artifact (BENCH_recovery.json):
+
+  * **WAL replay throughput** — rows/s replayed through the real
+    append/delete paths when ``SegmentedCatalog.open()`` rebuilds from
+    the genesis manifest plus a long WAL tail;
+  * **reopen vs cold rebuild** — wall clock of ``open()`` (manifest
+    segment reload, bitwise) against rebuilding the same catalog from
+    the raw feature matrix (re-sorting every morton index from scratch);
+    the ratio is the case for checkpoints;
+  * **append overhead per sync mode** — per-append wall with the WAL at
+    ``sync="none"`` / ``"batch"`` / ``"always"`` against a memory-only
+    catalog. The contract pinned here (and gated in CI): ``batch``
+    (flush to page cache, fsync deferred to checkpoint/close — survives
+    kill -9, not power loss) costs <= 1.5x the in-memory append.
+
+--check-json re-validates the emitted artifact, same gate as
+BENCH_query_time.json / BENCH_serve.json.
+
+Usage:
+  python benchmarks/recovery_time.py               # run + emit JSON
+  python benchmarks/recovery_time.py --check-json  # CI artifact gate
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit, emit_json
+from benchmarks.query_time import validate_bench_json
+from repro.core.segments import SegmentedCatalog
+from repro.core.subsets import make_subsets
+
+OUT_JSON = "BENCH_recovery.json"
+
+RECOVERY_REQUIRED_KEYS = (
+    "name", "us_per_call", "kind", "n_rows", "d", "n",
+)
+
+# the CI-gated ceiling on what batch-sync durability may charge per
+# append relative to a memory-only catalog (DESIGN.md §15)
+BATCH_OVERHEAD_CEILING = 1.5
+
+D, BLOCK = 32, 128
+
+
+def _subsets():
+    return make_subsets(D, 8, 8, seed=0)
+
+
+def _data(n, seed):
+    return np.random.default_rng(seed).normal(size=(n, D)).astype(np.float32)
+
+
+def _apply_stream(cat, n_appends, rows_per, with_deletes=True):
+    for i in range(n_appends):
+        cat.append(_data(rows_per, seed=100 + i))
+        if with_deletes and i % 4 == 3:
+            cat.delete([int(j) for j in
+                        np.random.default_rng(500 + i).integers(
+                            0, 1000, size=8)])
+
+
+def _bench_replay(n_base, n_appends, rows_per) -> List[Dict]:
+    """Genesis checkpoint + a long WAL tail, then time open()."""
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        cat = SegmentedCatalog(_data(n_base, 0), _subsets(), block=BLOCK,
+                               persist_dir=d, sync="batch")
+        _apply_stream(cat, n_appends, rows_per)
+        n_total = cat.snapshot().n
+        cat.close()
+
+        t0 = time.perf_counter()
+        re = SegmentedCatalog.open(d)
+        reopen_s = time.perf_counter() - t0
+        rep = re.recovery
+        assert rep.clean and re.snapshot().n == n_total
+
+        # cold rebuild: same final feature matrix, every index re-sorted
+        x_all = np.ascontiguousarray(re.snapshot().x[:n_total])
+        t0 = time.perf_counter()
+        SegmentedCatalog(x_all, _subsets(), block=BLOCK)
+        rebuild_s = time.perf_counter() - t0
+
+        replay_rows = rep.replayed_rows
+        rows.append({
+            "name": "recovery/replay",
+            "us_per_call": round(reopen_s * 1e6, 1),
+            "kind": "replay",
+            "reopen_s": round(reopen_s, 4),
+            "cold_rebuild_s": round(rebuild_s, 4),
+            "reopen_vs_rebuild": round(reopen_s / max(rebuild_s, 1e-9), 3),
+            "replayed_records": rep.replayed_appends + rep.replayed_deletes,
+            "replayed_rows": replay_rows,
+            "replay_rows_per_s": round(replay_rows / max(reopen_s, 1e-9)),
+            "n_rows": n_total, "d": D, "n": n_total,
+        })
+
+        # reopen again from a post-checkpoint manifest: replay cost gone
+        re.checkpoint()
+        re.close()
+        t0 = time.perf_counter()
+        re2 = SegmentedCatalog.open(d)
+        ckpt_reopen_s = time.perf_counter() - t0
+        assert re2.recovery.clean
+        assert re2.recovery.replayed_appends == 0
+        rows.append({
+            "name": "recovery/reopen_checkpointed",
+            "us_per_call": round(ckpt_reopen_s * 1e6, 1),
+            "kind": "reopen",
+            "reopen_s": round(ckpt_reopen_s, 4),
+            "cold_rebuild_s": round(rebuild_s, 4),
+            "reopen_vs_rebuild": round(
+                ckpt_reopen_s / max(rebuild_s, 1e-9), 3),
+            "replayed_records": 0, "replayed_rows": 0,
+            "replay_rows_per_s": 0,
+            "n_rows": n_total, "d": D, "n": n_total,
+        })
+    return rows
+
+
+def _append_us(persist_dir, sync, n_base, n_appends, rows_per) -> float:
+    """Median per-append wall over the stream (median, not mean: the
+    occasional page-cache writeback stall shouldn't decide a CI gate)."""
+    cat = SegmentedCatalog(_data(n_base, 0), _subsets(), block=BLOCK,
+                           persist_dir=persist_dir, sync=sync)
+    ts = []
+    for i in range(n_appends):
+        xa = _data(rows_per, seed=100 + i)
+        t0 = time.perf_counter()
+        cat.append(xa)
+        ts.append(time.perf_counter() - t0)
+    cat.close()
+    return float(np.median(ts)) * 1e6
+
+
+def _bench_append_overhead(n_base, n_appends, rows_per) -> List[Dict]:
+    mem_us = _append_us(None, "batch", n_base, n_appends, rows_per)
+    rows = []
+    for sync in ("none", "batch", "always"):
+        with tempfile.TemporaryDirectory() as d:
+            us = _append_us(d, sync, n_base, n_appends, rows_per)
+        rows.append({
+            "name": f"recovery/append_overhead/{sync}",
+            "us_per_call": round(us, 1),
+            "kind": "append_overhead",
+            "sync": sync,
+            "append_us_mem": round(mem_us, 1),
+            "overhead_x": round(us / max(mem_us, 1e-9), 3),
+            "n_rows": n_base + n_appends * rows_per, "d": D,
+            "n": n_base + n_appends * rows_per,
+        })
+    batch = next(r for r in rows if r["sync"] == "batch")
+    if batch["overhead_x"] > BATCH_OVERHEAD_CEILING:
+        raise SystemExit(
+            f"recovery_time: batch-sync append overhead "
+            f"{batch['overhead_x']}x exceeds the "
+            f"{BATCH_OVERHEAD_CEILING}x ceiling "
+            f"({batch['us_per_call']}us vs {batch['append_us_mem']}us "
+            f"in-memory) — the WAL write path regressed")
+    return rows
+
+
+def run(n_base: int = 5_000, n_appends: int = 40, rows_per: int = 400,
+        verbose: bool = True, out_json: str = OUT_JSON) -> List[Dict]:
+    rows = _bench_replay(n_base, n_appends, rows_per)
+    rows += _bench_append_overhead(n_base, n_appends, rows_per)
+    if verbose:
+        emit(rows, "recovery_time")
+        emit_json(rows, out_json)
+        validate_bench_json(out_json, RECOVERY_REQUIRED_KEYS)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-base", type=int, default=5_000)
+    ap.add_argument("--n-appends", type=int, default=40)
+    ap.add_argument("--rows-per", type=int, default=400)
+    ap.add_argument("--check-json", action="store_true",
+                    help="validate BENCH_recovery.json keys (CI gate)")
+    args = ap.parse_args()
+    if args.check_json:
+        validate_bench_json(OUT_JSON, RECOVERY_REQUIRED_KEYS)
+    else:
+        run(n_base=args.n_base, n_appends=args.n_appends,
+            rows_per=args.rows_per)

@@ -44,9 +44,16 @@ OUT_JSON = "BENCH_serve.json"
 # when the artifact drops one (same gate as the query-time artifacts)
 SERVE_REQUIRED_KEYS = (
     "name", "us_per_call", "offered_qps", "achieved_qps", "p50_ms",
-    "p99_ms", "served_ok", "errors", "rejected", "rejection_rate",
-    "admission", "queue_depth_peak", "n",
+    "p99_ms", "p999_ms", "served_ok", "errors", "rejected",
+    "rejection_rate", "admission", "queue_depth_peak", "knee_qps", "n",
 )
+
+# the saturation knee: a mode's p99 has left the idle regime when it
+# exceeds KNEE_FACTOR x the p99 of that mode's LOWEST offered-QPS cell
+# (the idle baseline). The first offered-QPS bucket past that line is
+# the knee — the operating ceiling capacity planning reads off the
+# artifact without eyeballing the latency curve.
+KNEE_FACTOR = 5.0
 
 REJECT_KEYS = ("rejected_overloaded", "rejected_rate_limited",
                "rejected_deadline", "expired_in_queue", "evicted")
@@ -114,7 +121,8 @@ def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
 
     rows = []
     for admission in (False, True):
-        for qps in qps_levels:
+        mode_rows = []
+        for qps in sorted(qps_levels):
             count = max(int(qps * duration), 4)
             kw: Dict = dict(max_results=100, max_batch=8)
             if admission:
@@ -131,7 +139,7 @@ def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
             rejected = sum(st[k] for k in REJECT_KEYS)
             served_ok = sum(1 for d in done if d["ok"])
             tag = "admission" if admission else "unbounded"
-            rows.append({
+            mode_rows.append({
                 "name": f"serve_load/{tag}/qps{qps:g}",
                 "us_per_call": round(
                     1e6 * float(np.median(ok_lat)), 1) if ok_lat else 0.0,
@@ -139,6 +147,7 @@ def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
                 "achieved_qps": round(served_ok / wall, 2),
                 "p50_ms": _percentile_ms(ok_lat, 50),
                 "p99_ms": _percentile_ms(ok_lat, 99),
+                "p999_ms": _percentile_ms(ok_lat, 99.9),
                 "served_ok": served_ok,
                 "errors": st["errors"],
                 "rejected": rejected,
@@ -155,6 +164,17 @@ def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
                 raise SystemExit(
                     f"serve_load: {count} submits but {len(done)} "
                     f"responses — requests were stranded")
+        # stamp this mode's saturation knee onto every one of its rows:
+        # the first offered-QPS bucket whose p99 exceeds KNEE_FACTOR x
+        # the idle (lowest-QPS cell) p99; 0.0 = never saturated in the
+        # swept range, so the ceiling is above the sweep
+        idle_p99 = mode_rows[0]["p99_ms"]
+        knee = next((r["offered_qps"] for r in mode_rows
+                     if r["p99_ms"] > KNEE_FACTOR * max(idle_p99, 1e-9)),
+                    0.0)
+        for r in mode_rows:
+            r["knee_qps"] = knee
+        rows.extend(mode_rows)
     if verbose:
         emit(rows, "serve_load")
         emit_json(rows, out_json)

@@ -48,7 +48,8 @@ from repro.core.capacity import HintTable
 from repro.core.capacity import hybrid_bucket as _cap_hybrid
 from repro.core.capacity import pow2ceil as _cap_pow2ceil
 from repro.core.capacity import quantum_bucket as _cap_quantum
-from repro.core.errors import check_deadline
+from repro.core.errors import RecoveryError, check_deadline
+from repro.core.persist import has_state as persist_has_state
 from repro.core.index import (ShardedZoneMapIndex, ZoneMapIndex,
                               build_index, build_sharded_index, full_scan,
                               fused_stats, pad_boxes, query_index,
@@ -169,7 +170,7 @@ class SearchEngine:
 
     def __init__(
         self,
-        features: np.ndarray,
+        features: Optional[np.ndarray] = None,
         *,
         n_subsets: int = 32,
         subset_dim: int = 6,
@@ -187,8 +188,41 @@ class SearchEngine:
         score_mode: str = "sparse",
         mirror: str = "f32",
         faults=None,
+        data_dir=None,
+        wal_sync: str = "batch",
     ):
-        self.x = np.ascontiguousarray(np.asarray(features, np.float32))
+        # durability (DESIGN.md §15): ``data_dir`` makes a live catalog
+        # persistent. When the directory already holds a durable catalog
+        # DISK WINS — the engine recovers it (newest manifest + WAL
+        # replay) and adopts its geometry/config wholesale, ignoring any
+        # ``features`` passed (the recovered state is the truth a crash
+        # must not lose); a fresh directory starts from ``features`` and
+        # writes the genesis checkpoint. Damage found during recovery
+        # lands in ``self.recovery`` (a persist.RecoveryReport) with the
+        # salvaged state serving — the serve layer surfaces it as
+        # degraded health instead of silently wrong results.
+        self.recovery = None
+        recovered: Optional[SegmentedCatalog] = None
+        if data_dir is not None:
+            if not live:
+                raise ValueError("data_dir requires live=True")
+            if persist_has_state(data_dir):
+                try:
+                    recovered = SegmentedCatalog.open(
+                        data_dir, faults=faults, sync=wal_sync)
+                except RecoveryError as e:
+                    if e.catalog is None:
+                        raise
+                    recovered = e.catalog
+                self.recovery = recovered.recovery
+        if recovered is not None:
+            self.x = np.asarray(recovered.snapshot().x)
+        elif features is None:
+            raise ValueError(
+                "features is required unless data_dir holds a "
+                "recoverable durable catalog")
+        else:
+            self.x = np.ascontiguousarray(np.asarray(features, np.float32))
         self.n, self.d = self.x.shape
         self.use_pallas = use_pallas
         # device-resident batched trainer (DESIGN.md §10): every dbranch/
@@ -245,7 +279,15 @@ class SearchEngine:
         self._catalog: Optional[SegmentedCatalog] = None
         self._sync_lock = threading.Lock()
         t0 = time.perf_counter()
-        self.subsets = make_subsets(self.d, n_subsets, subset_dim, seed=seed)
+        if recovered is not None:
+            # disk wins: geometry/config come from the manifest, not the
+            # constructor args — the recovered catalog must be bitwise
+            # the one that crashed, whatever this process was passed
+            self.subsets = np.asarray(recovered.subsets)
+            self.n_shards = recovered.n_shards
+        else:
+            self.subsets = make_subsets(self.d, n_subsets, subset_dim,
+                                        seed=seed)
         if self.live:
             # live catalogs (DESIGN.md §12) run the segmented flat path
             # on every backend; with n_shards > 1 the base is the usual
@@ -255,10 +297,15 @@ class SearchEngine:
             # future work, so shard_mesh is ignored here)
             self.shard_mesh = None
             self._shard_flat = self.n_shards > 1
-            self._catalog = SegmentedCatalog(self.x, self.subsets,
-                                             block=block,
-                                             n_shards=self.n_shards,
-                                             faults=faults)
+            if recovered is not None:
+                self._catalog = recovered
+            else:
+                self._catalog = SegmentedCatalog(self.x, self.subsets,
+                                                 block=block,
+                                                 n_shards=self.n_shards,
+                                                 faults=faults,
+                                                 persist_dir=data_dir,
+                                                 sync=wal_sync)
             self.indexes = list(self._catalog.snapshot().indexes)
         elif self.n_shards > 1:
             self.shard_mesh = self._resolve_shard_mesh(shard_mesh)
@@ -279,8 +326,13 @@ class SearchEngine:
                 for k, dims in enumerate(self.subsets)
             ]
         self.build_time_s = time.perf_counter() - t0
-        # global per-dim feature range (used by box expansion)
-        self.frange = (self.x.min(0), self.x.max(0))
+        # global per-dim feature range (used by box expansion); a
+        # recovered catalog's physical rows include tombstones, so its
+        # LIVE range comes from the snapshot, never a full-column rescan
+        if recovered is not None:
+            self.frange = recovered.snapshot().frange
+        else:
+            self.frange = (self.x.min(0), self.x.max(0))
 
     # ------------------------------------------------------------------
     def _resolve_shard_mesh(self, mesh):
@@ -405,6 +457,18 @@ class SearchEngine:
         st = self._catalog.compact()
         self._sync_live()
         return st
+
+    def checkpoint(self) -> Dict:
+        """Durably checkpoint the live catalog (segment column files +
+        manifest, DESIGN.md §15); requires ``data_dir``. Truncates the
+        WAL replay a future recovery must perform."""
+        return self._require_live().checkpoint()
+
+    def close(self) -> None:
+        """Flush + fsync the durable catalog's WAL and release its file
+        handle; a no-op for static or non-durable engines."""
+        if self._catalog is not None:
+            self._catalog.close()
 
     def index_stats(self) -> Dict:
         st = {

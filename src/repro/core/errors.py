@@ -28,7 +28,8 @@ import time
 from typing import Optional
 
 __all__ = ["EngineError", "DeadlineExceeded", "TransientDeviceError",
-           "CompactionFailed", "deadline_after", "deadline_remaining",
+           "CompactionFailed", "PersistenceError", "RecoveryError",
+           "InjectedCrash", "deadline_after", "deadline_remaining",
            "check_deadline"]
 
 
@@ -60,6 +61,50 @@ class CompactionFailed(EngineError):
     serving (the swap never happened); the server records the error and
     retries with backoff."""
     code = "compaction_failed"
+
+
+class PersistenceError(EngineError):
+    """A durability operation (WAL append, fsync, checkpoint commit)
+    failed AND the failure was made atomic: the write-ahead log was
+    rolled back to the pre-record offset, so neither memory nor disk
+    carries the mutation. The caller may retry the whole operation; if
+    the rollback itself also failed the log is poisoned and every later
+    mutation raises this until the catalog is reopened (serving reads
+    continue — only durability is down)."""
+    code = "persistence"
+
+
+class RecoveryError(EngineError):
+    """Crash recovery detected corruption — a torn or checksum-failed
+    WAL record, a truncated column file, an unreadable manifest — and
+    salvaged everything before it. Carries the evidence instead of
+    guessing: ``report`` (repro.core.persist.RecoveryReport) says what
+    was salvaged and what was quarantined, and ``catalog`` is the
+    recovered SegmentedCatalog over the salvaged prefix (None only when
+    nothing was serviceable). The serving layer keeps the salvaged
+    catalog and starts ``degraded`` — corruption is NEVER silently
+    folded into results."""
+    code = "recovery"
+
+    def __init__(self, msg: str, *, report=None, catalog=None):
+        super().__init__(msg)
+        self.report = report
+        self.catalog = catalog
+
+
+class InjectedCrash(BaseException):
+    """A fault-injection seam simulating PROCESS DEATH at an exact
+    point (torn write mid-record, kill between WAL append and snapshot
+    swap). Deliberately a BaseException: every normal error handler
+    (per-request isolation, retry policies) catches ``Exception``, and
+    a simulated crash must tear through all of them exactly like a real
+    ``kill -9`` would — the test harness catches it at the top, drops
+    the dead catalog object, and reopens from disk. ``fraction`` tells
+    a torn-write seam how much of the record to leave behind."""
+
+    def __init__(self, msg: str = "injected crash", fraction: float = 0.5):
+        super().__init__(msg)
+        self.fraction = float(fraction)
 
 
 # ----------------------------------------------------------------------

@@ -44,6 +44,15 @@ an append/delete/compact schedule, ranked ids and scores are bitwise
 those of a monolithic ``build_index`` engine over the surviving rows
 (ids mapped through the live-id list, which is monotone — so even
 tie-breaks at the k-th score agree).
+
+Durability (DESIGN.md §15): with ``persist_dir`` set, every effective
+mutation is write-ahead-logged (checksummed, fsync policy per ``sync``)
+BEFORE the snapshot swap, ``checkpoint()`` commits the sealed segment
+set through a two-phase manifest flip, and ``SegmentedCatalog.open()``
+recovers crash-consistently — the WAL tail replays through the real
+append/delete paths above, so the recovered catalog inherits the same
+bitwise contract (tests/test_durability.py pins it at every crash
+point). The machinery lives in ``core/persist.py``.
 """
 from __future__ import annotations
 
@@ -58,6 +67,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import persist as persistmod
+from repro.core.errors import PersistenceError, RecoveryError
 from repro.core.index import ZoneMapIndex, build_index, shard_offsets
 from repro.kernels import ops as kops
 
@@ -408,7 +419,8 @@ class SegmentedCatalog:
     _HEADROOM_MIN = 4096
 
     def __init__(self, features: np.ndarray, subsets: np.ndarray, *,
-                 block: int = 1024, n_shards: int = 1, faults=None):
+                 block: int = 1024, n_shards: int = 1, faults=None,
+                 persist_dir=None, sync: str = "batch"):
         x = np.ascontiguousarray(np.asarray(features, np.float32))
         self.subsets = np.asarray(subsets)
         self.block = int(block)
@@ -419,7 +431,19 @@ class SegmentedCatalog:
         self.faults = faults
         self._lock = threading.Lock()          # mutation serialisation
         self._compact_lock = threading.Lock()  # one compaction at a time
+        self._ckpt_lock = threading.Lock()     # one checkpoint at a time
         self._geom = 0                         # compaction generation
+        self._lsn = 0                          # last assigned WAL lsn
+        self.recovery = None                   # RecoveryReport after open()
+        self.persist = None
+        if persist_dir is not None:
+            if persistmod.has_state(persist_dir):
+                raise PersistenceError(
+                    f"{persist_dir} already holds a durable catalog — "
+                    "use SegmentedCatalog.open() to recover it instead "
+                    "of silently overwriting")
+            self.persist = persistmod.Persistence(persist_dir, sync=sync,
+                                                  faults=faults)
         # growable buffers: snapshots hold length-n VIEWS of these;
         # appends write past every live view's end, deletes replace the
         # validity buffer wholesale — existing views never change
@@ -441,6 +465,11 @@ class SegmentedCatalog:
         frange = (x.min(0), x.max(0))
         self._make_snapshot(0, self._xbuf[:n], frange, tuple(segments),
                             self._vbuf[:n], n)
+        # genesis checkpoint: the manifest carries the config recovery
+        # needs (subsets, block, shards), so a durable catalog is
+        # reopenable from its very first mutation onward
+        if self.persist is not None:
+            self.checkpoint()
 
     def _reserve(self, n_rows: int) -> None:
         """Grow the feature/validity buffers to hold ``n_rows`` (called
@@ -519,6 +548,26 @@ class SegmentedCatalog:
             if m == 0:
                 return np.empty(0, np.int64)
             n = snap.n
+            # durability first: the WAL record reaches disk (per the
+            # sync policy) BEFORE any in-memory state changes, and a
+            # failed/rolled-back log leaves the catalog bitwise
+            # untouched. One record == one epoch bump, the invariant
+            # recovery's epoch arithmetic rests on — which is why the
+            # m == 0 no-op returns above, before consuming an LSN.
+            self._lsn += 1
+            if self.persist is not None:
+                try:
+                    self.persist.log_append(self._lsn, xnew)
+                except Exception:
+                    # the record was rolled back off the disk — release
+                    # its LSN too, or the next record leaves a gap that
+                    # recovery would (rightly) refuse to replay across
+                    self._lsn -= 1
+                    raise
+                # kill-between-WAL-and-swap crash point: the record is
+                # durable, the snapshot swap below never happens —
+                # recovery must replay it to the exact post-swap state
+                self._fault("wal_commit")
             seg = self._build_segment(xnew, n, shard=self._next_shard)
             self._next_shard = (self._next_shard + 1) % self.n_shards
             self._reserve(n + m)
@@ -549,6 +598,18 @@ class SegmentedCatalog:
             newly = ids[snap.valid_host[ids]] if len(ids) else ids
             if len(newly) == 0:
                 return 0
+            # WAL before swap, and log only the EFFECTIVE deletions
+            # (``newly``, computed above): replay re-applies exactly the
+            # live->dead transitions, so idempotent re-deletes neither
+            # consume LSNs nor perturb the record<->epoch invariant
+            self._lsn += 1
+            if self.persist is not None:
+                try:
+                    self.persist.log_delete(self._lsn, newly)
+                except Exception:
+                    self._lsn -= 1      # released with the rollback
+                    raise
+                self._fault("wal_commit")
             # replace the validity buffer wholesale: older snapshots
             # keep viewing the previous one, untouched
             vb = self._vbuf.copy()
@@ -606,12 +667,155 @@ class SegmentedCatalog:
                     cur.epoch + 1, cur.x, cur.frange, (merged,) + tail,
                     cur.valid_host, cur.live_rows,
                     valid_base=cur._valid_dev)
+            if self.persist is not None:
+                # durable two-phase commit: phase 1 lands the merged +
+                # tail segments' column files on disk, phase 2 flips the
+                # manifest atomically (persist.commit_manifest). A crash
+                # at either phase recovers to the PRE-compaction state
+                # from the previous manifest + full WAL tail — query-
+                # identical, since results are invariant to segmentation
+                # — and phase-1 orphan files are GC'd on reopen.
+                self.checkpoint()
             return {"skipped": False, "epoch": snap.epoch,
                     "merged_segments": len(snap0.segments),
                     "merged_rows": n0, "tail_segments": len(tail),
                     "compact_s": time.perf_counter() - t0}
         finally:
             self._compact_lock.release()
+
+    # ------------------------------------------------------------------
+    # durability: checkpoint / close / open
+    # ------------------------------------------------------------------
+
+    def checkpoint(self) -> dict:
+        """Write the current snapshot as a durable checkpoint: every
+        sealed segment's column files (phase 1), then the manifest
+        naming that exact segment set + epoch + WAL horizon (phase 2,
+        the atomic commit point). Runs against an immutable (snapshot,
+        lsn) pair captured under the mutation lock, so concurrent
+        mutations keep landing in the WAL past the horizon and replay
+        on recovery — checkpointing never blocks the serving path."""
+        if self.persist is None:
+            raise PersistenceError(
+                "catalog has no persist_dir — nothing to checkpoint to")
+        with self._ckpt_lock:
+            t0 = time.perf_counter()
+            with self._lock:
+                snap = self._snap
+                lsn = self._lsn
+                next_shard = self._next_shard
+            entries = [self.persist.write_segment(
+                snap.x[s.offset:s.offset + s.n_rows], s.indexes,
+                offset=s.offset, rows=s.n_rows, shard=s.shard,
+                block=self.block) for s in snap.segments]
+            config = {"d": int(self._xbuf.shape[1]),
+                      "block": self.block, "n_shards": self.n_shards,
+                      "subsets": np.asarray(self.subsets).tolist()}
+            mid = self.persist.commit_manifest(
+                epoch=snap.epoch, geom=snap.geom, lsn=lsn,
+                next_shard=next_shard, n_rows=snap.n,
+                live_rows=snap.live_rows, frange=snap.frange,
+                valid=snap.valid_host, config=config, segments=entries)
+            self.persist.stats["checkpoints"] += 1
+            return {"manifest_id": mid, "epoch": snap.epoch, "lsn": lsn,
+                    "segments": len(entries),
+                    "checkpoint_s": time.perf_counter() - t0}
+
+    def close(self) -> None:
+        """Flush + fsync the WAL and release the handle. A ``sync=
+        "none"`` catalog becomes fully durable at close; the other modes
+        already were."""
+        if self.persist is not None:
+            self.persist.close()
+
+    @classmethod
+    def open(cls, path, *, faults=None, sync: str = "batch",
+             strict: bool = True):
+        """Crash-consistent recovery: load the newest valid manifest,
+        rebuild its segments bitwise from the column files, replay the
+        WAL tail through the REAL append/delete code paths, then re-arm
+        durability for live operation. The result is pinned by tests to
+        be bitwise query-identical to the never-crashed catalog at
+        every crash point.
+
+        Damage handling: torn/corrupt bytes are quarantined and the
+        salvaged prefix recovered; with ``strict=True`` (default) the
+        damage raises ``RecoveryError`` CARRYING the salvaged catalog
+        (``err.catalog``) and report (``err.report``), so a server can
+        keep serving the salvage while surfacing ``degraded`` health —
+        corruption is never folded silently into results."""
+        state = persistmod.recover(path, faults=faults)
+        cat = cls._from_recovered(path, state, sync=sync, faults=faults)
+        if strict and not state.report.clean:
+            raise RecoveryError(
+                f"recovered {path} with damage: "
+                + "; ".join(state.report.errors),
+                report=state.report, catalog=cat)
+        return cat
+
+    @classmethod
+    def _from_recovered(cls, path, state, *, sync: str, faults=None):
+        self = cls.__new__(cls)
+        cfg = state.config
+        self.subsets = np.asarray(cfg["subsets"])
+        self.block = int(cfg["block"])
+        self.n_shards = int(cfg["n_shards"])
+        # replay runs with durability and fault seams DISABLED: the tail
+        # ops are already durable, and replay must be deterministic
+        self.faults = None
+        self.persist = None
+        self.recovery = state.report
+        self._lock = threading.Lock()
+        self._compact_lock = threading.Lock()
+        self._ckpt_lock = threading.Lock()
+        self._geom = int(state.geom)
+        self._lsn = int(state.lsn)
+        self._next_shard = int(state.next_shard)
+        n, d = int(state.n_rows), int(cfg["d"])
+        cap = n + max(n // self._HEADROOM_FRAC, self._HEADROOM_MIN)
+        self._xbuf = np.empty((cap, d), np.float32)
+        self._vbuf = np.ones(cap, bool)
+        self._vbuf[:n] = state.valid
+        segments = []
+        for entry, feats, cols in sorted(state.segments,
+                                         key=lambda t: t[0]["offset"]):
+            o, m = int(entry["offset"]), int(entry["rows"])
+            self._xbuf[o:o + m] = feats
+            idxs = []
+            for k, (perm, zlo, zhi) in enumerate(cols):
+                dims = np.asarray(self.subsets[k])
+                # rows reconstruct bitwise from features + permutation:
+                # exactly build_index's sub[perm] with +inf padding
+                sub = np.ascontiguousarray(feats[:, dims])
+                rows = np.full((perm.shape[0], dims.shape[0]), np.inf,
+                               np.float32)
+                real = perm >= 0
+                rows[real] = sub[perm[real]]
+                idxs.append(ZoneMapIndex(
+                    dims, np.asarray(perm), rows,
+                    np.asarray(zlo, np.float32),
+                    np.asarray(zhi, np.float32), self.block, m, k))
+            segments.append(Segment(o, m, int(entry["shard"]), idxs))
+        frange = (np.asarray(state.frange_lo, np.float32),
+                  np.asarray(state.frange_hi, np.float32))
+        self._make_snapshot(int(state.epoch), self._xbuf[:n], frange,
+                            tuple(segments), self._vbuf[:n],
+                            int(state.live_rows))
+        # replay the WAL tail through the real mutation paths: each
+        # record bumps the epoch and evolves frange/validity exactly as
+        # the original mutation did (bitwise — append features are the
+        # exact f32 bytes, build_index is deterministic)
+        for rec in state.tail:
+            if rec.op == "append":
+                self.append(rec.features)
+            else:
+                self.delete(rec.ids)
+        # re-arm durability + fault seams for live operation; new WAL
+        # records continue at the next LSN in a fresh file
+        self.persist = persistmod.Persistence(path, sync=sync,
+                                              faults=faults)
+        self.faults = faults
+        return self
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
@@ -628,4 +832,7 @@ class SegmentedCatalog:
                 sum(1 for s in snap.segments if s.shard == sh)
                 for sh in range(self.n_shards)],
             "segments": [s.stats(snap.valid_host) for s in snap.segments],
+            "durable": (None if self.persist is None else
+                        {"sync": self.persist.sync, "lsn": self._lsn,
+                         **self.persist.stats}),
         }

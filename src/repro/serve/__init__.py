@@ -3,14 +3,16 @@ from repro.serve.engine import (IngestRequest, QueryRequest, QueryResponse,
 from repro.serve.faults import FaultInjector, FaultSpec
 from repro.serve.policy import (AdmissionQueue, CompactionFailed,
                                 DeadlineExceeded, EngineError, Overloaded,
-                                RateLimited, RetryPolicy, ServerClosed,
-                                TokenBucket, TransientDeviceError,
-                                deadline_after, deadline_remaining)
+                                PersistenceError, RateLimited, RecoveryError,
+                                RetryPolicy, ServerClosed, TokenBucket,
+                                TransientDeviceError, deadline_after,
+                                deadline_remaining)
 
 __all__ = ["QueryRequest", "QueryResponse", "IngestRequest", "QueryServer",
            "merge_shard_results",
            "FaultInjector", "FaultSpec",
            "AdmissionQueue", "RetryPolicy", "TokenBucket",
            "EngineError", "DeadlineExceeded", "TransientDeviceError",
-           "CompactionFailed", "Overloaded", "RateLimited", "ServerClosed",
+           "CompactionFailed", "PersistenceError", "RecoveryError",
+           "Overloaded", "RateLimited", "ServerClosed",
            "deadline_after", "deadline_remaining"]

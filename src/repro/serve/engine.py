@@ -155,6 +155,13 @@ class QueryServer:
         self.soft_depth_frac = float(soft_depth_frac)
         self.faults = faults if faults is not None \
             else getattr(engine, "faults", None)
+        # durable startup state (DESIGN.md §15): an engine recovered from
+        # a damaged directory carries a non-clean RecoveryReport — the
+        # server comes up DEGRADED over the salvaged prefix instead of
+        # refusing to serve, and the report rides in summary() so an
+        # operator can see exactly what was quarantined.
+        rec = getattr(engine, "recovery", None)
+        self._recovery_degraded = rec is not None and not rec.clean
         self._q = AdmissionQueue(depth=queue_depth, shed_policy=shed_policy)
         self._buckets: Dict[str, TokenBucket] = {}
         self._stop = threading.Event()
@@ -189,7 +196,8 @@ class QueryServer:
                       "shutdown_unserved": 0, "submit_faults": 0,
                       "retries": 0, "batch_fallbacks": 0,
                       "compaction_errors": 0, "compaction_retries": 0,
-                      "degraded_windows": 0}
+                      "degraded_windows": 0,
+                      "checkpoints": 0, "checkpoint_errors": 0}
 
     def _bump(self, key: str, v=1) -> None:
         """Locked stats increment — submit runs on caller threads and the
@@ -260,6 +268,15 @@ class QueryServer:
                         target=self._compact_worker, daemon=True)
                     self._compact_thread.start()
                 self.stats["compactions"] += 1
+            elif req.op == "checkpoint":
+                # durable snapshot (DESIGN.md §15): runs synchronously in
+                # the ingest slot — it reads an immutable (snapshot, lsn)
+                # pair, so queries batched after it are unaffected; the
+                # manifest flip bounds the WAL replay cost of the next
+                # recovery to mutations after this point.
+                ck = self.engine.checkpoint()
+                info = {"op": "checkpoint", **ck}
+                self.stats["checkpoints"] += 1
             else:
                 raise ValueError(f"unknown ingest op {req.op!r}")
             resp = QueryResponse(req.request_id, True, None,
@@ -270,6 +287,8 @@ class QueryServer:
                                  time.perf_counter() - t0,
                                  error_type=_error_type(e))
             self.stats["ingest_errors"] += 1
+            if req.op == "checkpoint":
+                self.stats["checkpoint_errors"] += 1
         self.stats["ingests"] += 1
         self.stats["ingest_s_sum"] += resp.latency_s
         return resp
@@ -618,11 +637,13 @@ class QueryServer:
     @property
     def health(self) -> str:
         """Coarse serving state: ``ok`` / ``degraded`` (soft-depth
-        watermark crossed or the last compaction attempt failed) /
-        ``draining`` (close in progress or done)."""
+        watermark crossed, the last compaction attempt failed, or the
+        engine recovered from a damaged directory and is serving the
+        salvaged prefix) / ``draining`` (close in progress or done)."""
         if self._closed:
             return "draining"
-        if self._degraded or self.stats["compaction_errors"] > 0:
+        if (self._degraded or self._recovery_degraded
+                or self.stats["compaction_errors"] > 0):
             return "degraded"
         return "ok"
 
@@ -650,6 +671,23 @@ class QueryServer:
             out["n_segments"] = len(snap.segments)
             out["rows_live"] = snap.live_rows
             out["rows_tombstoned"] = snap.n - snap.live_rows
+            # durability ledger (DESIGN.md §15): WAL records/bytes/fsyncs
+            # this process has billed, so an operator can see the per-
+            # append durability overhead next to the serving latencies
+            persist = getattr(cat, "persist", None)
+            if persist is not None:
+                out["durable"] = {"sync": persist.sync,
+                                  "lsn": cat._lsn, **persist.stats}
+        rec = getattr(self.engine, "recovery", None)
+        if rec is not None:
+            out["recovery"] = {
+                "clean": rec.clean, "manifest_id": rec.manifest_id,
+                "horizon_lsn": rec.horizon_lsn, "last_lsn": rec.last_lsn,
+                "replayed_appends": rec.replayed_appends,
+                "replayed_deletes": rec.replayed_deletes,
+                "torn_tail": rec.torn_tail,
+                "quarantined": list(rec.quarantined),
+                "errors": list(rec.errors)}
         return out
 
 

@@ -28,12 +28,14 @@ from typing import Callable, List, Optional, Tuple
 import numpy as np
 
 from repro.core.errors import (CompactionFailed, DeadlineExceeded,
-                               EngineError, TransientDeviceError,
+                               EngineError, PersistenceError,
+                               RecoveryError, TransientDeviceError,
                                check_deadline, deadline_after,
                                deadline_remaining)
 
 __all__ = ["EngineError", "DeadlineExceeded", "TransientDeviceError",
-           "CompactionFailed", "Overloaded", "RateLimited", "ServerClosed",
+           "CompactionFailed", "PersistenceError", "RecoveryError",
+           "Overloaded", "RateLimited", "ServerClosed",
            "check_deadline", "deadline_after", "deadline_remaining",
            "RetryPolicy", "TokenBucket", "AdmissionQueue", "SHED_POLICIES"]
 

@@ -1,8 +1,13 @@
 """Fault-tolerant sharded checkpoints (no orbax dependency).
 
 Production contract:
-  * **atomic**: write to ``step_N.tmp/`` then ``rename`` — a crash mid-write
-    never corrupts the latest checkpoint;
+  * **atomic AND durable**: write to ``step_N.tmp/``, fsync every leaf
+    file and the directory, then ``os.replace`` + parent-directory fsync
+    — a crash (or power cut) mid-write never corrupts the latest
+    checkpoint, and a published checkpoint survives the page cache being
+    lost. Shares ``repro.core.persist.atomic_write_bytes`` with the
+    catalog's durability layer (DESIGN.md §15) so there is exactly one
+    fsync-discipline implementation in the tree;
   * **sharded**: each host writes only the leaves (or leaf-shards) it owns,
     keyed by (step, shard_id); restart on a different topology reshards
     through train/elastic.py;
@@ -26,6 +31,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.core.persist import atomic_write_bytes, fsync_dir, npy_bytes
 
 PyTree = Any
 
@@ -95,16 +102,27 @@ class CheckpointManager:
         manifest = {"step": step, "shard_id": self.shard_id,
                     "num_shards": self.num_shards,
                     "leaves": {}}
+        # every leaf lands via the shared write+fsync+replace helper, and
+        # the manifest is written LAST — its presence is the completeness
+        # marker list_steps()/restore() key off, so a leaf can never be
+        # newer than the manifest that describes it
         for name, leaf in leaves:
             arr = np.asarray(leaf)
-            np.save(tmp / _leaf_file(name), arr)
+            atomic_write_bytes(tmp / _leaf_file(name), npy_bytes(arr),
+                               fsync_parent=False)
             manifest["leaves"][name] = {
                 "shape": list(arr.shape), "dtype": str(arr.dtype)}
-        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-        # atomic publish
+        atomic_write_bytes(tmp / "manifest.json",
+                           json.dumps(manifest, indent=1).encode(),
+                           fsync_parent=False)
+        # one directory fsync pins all the leaf names, then the publish
+        # rename itself is made durable by fsyncing the parent — the
+        # page cache can die at any point without losing the checkpoint
+        fsync_dir(tmp)
         if final.exists():
             shutil.rmtree(final)
-        os.rename(tmp, final)
+        os.replace(tmp, final)
+        fsync_dir(self.dir)
         self._gc()
         return final
 

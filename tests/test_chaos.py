@@ -213,3 +213,60 @@ def test_injected_hang_released_by_close():
     assert time.monotonic() - t0 < 30.0   # never waits out the 60 s hang
     resp = out.get(timeout=GET_S)         # resolved, one way or the other
     assert resp.request_id == 0
+
+
+# ----------------------------------------------------------------------
+# seam registry: every site declared in faults.SITES must actually be
+# reachable — a drive through the full lifecycle (build, mutate, query,
+# checkpoint, compact, recover) fires a harmless fault at every seam.
+# A seam that never fires means the registry and the wired code drifted.
+# ----------------------------------------------------------------------
+
+def test_every_registered_seam_is_reachable_and_fires():
+    import tempfile
+
+    from repro.core.segments import SegmentedCatalog
+    from repro.serve.faults import SITES
+
+    # "slow" with zero delay fires (and is recorded) without breaking
+    # anything, so one schedule can cover every seam in a single run
+    inj = FaultInjector(specs=[
+        FaultSpec(site, action="slow", at_calls=(1,), delay_s=0.0)
+        for site in SITES])
+    x = _data(200)
+    pos, neg = list(range(8)), list(range(100, 130))
+    with tempfile.TemporaryDirectory() as d:
+        # construction writes the genesis checkpoint: segment_write +
+        # manifest_commit; sync="always" makes every append fsync
+        eng = SearchEngine(x, **ENG, live=True, faults=inj,
+                           data_dir=d, wal_sync="always")
+        srv = QueryServer(eng, faults=inj)
+        srv.start()
+        r = srv.submit(QueryRequest(0, pos, neg)).get(timeout=GET_S)
+        assert r.ok                      # submit, fused_query, device_sync
+        srv.close()
+        eng.append(_data(10, seed=9))    # append, wal_write/fsync/commit
+        eng.delete([3, 4])               # delete
+        eng.compact()                    # compact (+ durable 2PC seams)
+        eng.append(_data(5, seed=10))    # a WAL tail past the horizon
+        eng.close()
+        # recovery reads back manifest, segments, valid overlay and the
+        # WAL tail through the read seams
+        cat = SegmentedCatalog.open(d, faults=inj)
+        assert cat.recovery.clean
+    fired_sites = {r.site for r in inj.fired}
+    missing = sorted(set(SITES) - fired_sites)
+    assert not missing, f"registered seams never fired: {missing}"
+    for site in SITES:
+        assert inj.calls(site) >= 1
+
+
+def test_seam_registry_rejects_unknown_sites_both_directions():
+    """The registry can't drift silently in either direction: a spec
+    naming an unknown site dies at construction, and a seam calling
+    check() with an unregistered name dies on its first execution."""
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec("no_such_seam", at_calls=(1,))
+    inj = FaultInjector()
+    with pytest.raises(ValueError, match="unregistered site"):
+        inj.check("no_such_seam")

@@ -1,0 +1,599 @@
+"""Durability + crash-consistent recovery tests (DESIGN.md §15).
+
+The contract under test: a ``SegmentedCatalog`` with a ``persist_dir``
+can be killed at ANY byte boundary — mid-WAL-record, between the durable
+log write and the in-memory swap, between the two phases of a compaction
+commit — and ``SegmentedCatalog.open()`` recovers a catalog whose ranked
+query results are BITWISE identical to a catalog that never crashed:
+
+  * crash AFTER a record is durable (wal_commit seam) -> recovery
+    includes that mutation;
+  * crash MID-record (torn wal_write) -> recovery excludes it, reports a
+    torn tail, quarantines the refused bytes, and raises a typed
+    ``RecoveryError`` carrying the salvaged catalog — corruption is
+    never silently folded into results;
+  * compaction's two-phase commit can die at either phase and recovery
+    lands on a query-identical state.
+
+The crash matrix walks EVERY WAL record boundary of a mutation script
+against fault-free oracle catalogs, comparing full snapshot state
+bitwise (features, validity overlay, per-subset perm/rows/zlo/zhi,
+frange) plus ranked ids/scores at the engine level. A subprocess test
+backs the injected crashes with a real ``SIGKILL`` mid-ingest.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import persist
+from repro.core.engine import SearchEngine
+from repro.core.errors import InjectedCrash, PersistenceError, RecoveryError
+from repro.core.segments import SegmentedCatalog
+from repro.core.subsets import make_subsets
+from repro.serve.faults import FaultInjector, FaultSpec
+
+D, BLOCK = 16, 64
+ENG = dict(n_subsets=4, subset_dim=4, block=BLOCK, seed=0)
+
+
+def _data(n=200, seed=0):
+    return np.random.default_rng(seed).normal(
+        size=(n, D)).astype(np.float32)
+
+
+def _subsets():
+    return make_subsets(D, 4, 4, seed=0)
+
+
+def _fresh(x, persist_dir=None, **kw):
+    return SegmentedCatalog(x, _subsets(), block=BLOCK,
+                            persist_dir=persist_dir, **kw)
+
+
+# the deterministic mutation script the crash matrix walks: every entry
+# is effective (appends are non-empty, deletes hit live rows), so
+# mutation j is exactly WAL record j / LSN j
+MUTATIONS = [
+    ("append", _data(30, seed=1)),
+    ("delete", [5, 6, 7]),
+    ("append", _data(12, seed=2)),
+    ("delete", [0, 205, 231]),
+    ("append", _data(50, seed=3)),
+    ("delete", [100, 240]),
+]
+
+
+def _apply(cat, muts):
+    for op, arg in muts:
+        (cat.append if op == "append" else cat.delete)(arg)
+
+
+def _assert_same_state(a, b):
+    """Bitwise snapshot equality: everything a query reads."""
+    sa, sb = a.snapshot(), b.snapshot()
+    assert sa.epoch == sb.epoch
+    assert sa.n == sb.n and sa.live_rows == sb.live_rows
+    np.testing.assert_array_equal(sa.x[:sa.n], sb.x[:sb.n])
+    np.testing.assert_array_equal(sa.valid_host[:sa.n],
+                                  sb.valid_host[:sb.n])
+    np.testing.assert_array_equal(sa.frange, sb.frange)
+    assert len(sa.segments) == len(sb.segments)
+    for ga, gb in zip(sa.segments, sb.segments):
+        assert (ga.offset, ga.n_rows, ga.shard) == \
+               (gb.offset, gb.n_rows, gb.shard)
+        for ia, ib in zip(ga.indexes, gb.indexes):
+            np.testing.assert_array_equal(ia.perm, ib.perm)
+            np.testing.assert_array_equal(ia.rows, ib.rows)
+            np.testing.assert_array_equal(ia.zlo, ib.zlo)
+            np.testing.assert_array_equal(ia.zhi, ib.zhi)
+            np.testing.assert_array_equal(ia.dims, ib.dims)
+
+
+# ----------------------------------------------------------------------
+# WAL codec + helpers
+# ----------------------------------------------------------------------
+
+def test_wal_record_roundtrip():
+    feats = _data(7, seed=3)
+    rec = persist.decode_record(persist.encode_append(11, feats))
+    assert rec.op == "append" and rec.lsn == 11
+    np.testing.assert_array_equal(rec.features, feats)
+    rec = persist.decode_record(persist.encode_delete(12, [3, 9, 2**40]))
+    assert rec.op == "delete" and rec.lsn == 12
+    np.testing.assert_array_equal(rec.ids, [3, 9, 2**40])
+
+
+def test_checksum_rejects_unavailable_algo():
+    assert persist.checksum(b"abc") == persist.checksum(b"abc")
+    assert persist.checksum(b"abc") != persist.checksum(b"abd")
+    with pytest.raises(PersistenceError):
+        persist.checksum(b"abc", algo="no-such-algo")
+
+
+def test_atomic_write_bytes_never_leaves_partials():
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "f.bin")
+        persist.atomic_write_bytes(p, b"v1")
+        assert open(p, "rb").read() == b"v1"
+        persist.atomic_write_bytes(p, b"v2-longer")   # atomic replace
+        assert open(p, "rb").read() == b"v2-longer"
+        assert os.listdir(d) == ["f.bin"]             # no tmp litter
+
+
+def test_has_state_and_constructor_refuses_existing_dir():
+    with tempfile.TemporaryDirectory() as d:
+        assert not persist.has_state(d)
+        cat = _fresh(_data(), persist_dir=d)
+        cat.close()
+        assert persist.has_state(d)
+        with pytest.raises(PersistenceError, match="open"):
+            _fresh(_data(), persist_dir=d)   # must use .open(), not ctor
+
+
+# ----------------------------------------------------------------------
+# clean round trip
+# ----------------------------------------------------------------------
+
+def test_reopen_is_bitwise_identical_after_clean_close():
+    oracle = _fresh(_data())
+    _apply(oracle, MUTATIONS)
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d)
+        _apply(cat, MUTATIONS)
+        cat.close()
+        re = SegmentedCatalog.open(d)
+        assert re.recovery.clean
+        assert re.recovery.replayed_appends + re.recovery.replayed_deletes \
+            == len(MUTATIONS)
+        _assert_same_state(re, oracle)
+        # durable stats surface
+        assert re.stats()["durable"]["sync"] == "batch"
+
+
+def test_reopen_without_close_recovers_batch_sync():
+    """sync="batch" flushes per record (page cache) — dropping the
+    catalog object without close() must still recover everything."""
+    oracle = _fresh(_data())
+    _apply(oracle, MUTATIONS)
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d)
+        _apply(cat, MUTATIONS)
+        del cat                         # no close, no final fsync
+        re = SegmentedCatalog.open(d)
+        assert re.recovery.clean
+        _assert_same_state(re, oracle)
+
+
+def test_checkpoint_truncates_replay():
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d)
+        _apply(cat, MUTATIONS[:4])
+        cat.checkpoint()
+        _apply(cat, MUTATIONS[4:])
+        cat.close()
+        re = SegmentedCatalog.open(d)
+        assert re.recovery.clean
+        # only the post-checkpoint tail replays
+        assert re.recovery.replayed_appends + re.recovery.replayed_deletes \
+            == len(MUTATIONS) - 4
+        oracle = _fresh(_data())
+        _apply(oracle, MUTATIONS)
+        _assert_same_state(re, oracle)
+
+
+def test_mutations_after_recovery_continue_the_log():
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d)
+        _apply(cat, MUTATIONS[:3])
+        cat.close()
+        re = SegmentedCatalog.open(d)
+        _apply(re, MUTATIONS[3:])
+        re.close()
+        re2 = SegmentedCatalog.open(d)
+        assert re2.recovery.clean
+        oracle = _fresh(_data())
+        _apply(oracle, MUTATIONS)
+        _assert_same_state(re2, oracle)
+
+
+# ----------------------------------------------------------------------
+# the crash matrix: every WAL record boundary
+# ----------------------------------------------------------------------
+
+def test_crash_after_every_durable_record_recovers_that_record():
+    """Kill between WAL append and snapshot swap at EVERY record: the
+    logged mutation is durable, so recovery must land exactly on the
+    oracle that applied it."""
+    oracles = [_fresh(_data())]
+    for j in range(len(MUTATIONS)):
+        o = _fresh(_data())
+        _apply(o, MUTATIONS[:j + 1])
+        oracles.append(o)
+    for j in range(1, len(MUTATIONS) + 1):
+        inj = FaultInjector(specs=[FaultSpec("wal_commit", "crash",
+                                             at_calls=(j,))])
+        with tempfile.TemporaryDirectory() as d:
+            cat = _fresh(_data(), persist_dir=d, faults=inj)
+            with pytest.raises(InjectedCrash):
+                _apply(cat, MUTATIONS)
+            del cat                      # the "process" is dead
+            re = SegmentedCatalog.open(d)
+            assert re.recovery.clean     # boundary crash = no damage
+            _assert_same_state(re, oracles[j])
+
+
+@pytest.mark.parametrize("fraction", [0.0, 0.3, 0.9])
+def test_torn_record_at_every_boundary_salvages_prefix(fraction):
+    """Tear EVERY record mid-write: recovery excludes the torn record,
+    reports the torn tail, quarantines the refused bytes, and the
+    salvaged catalog equals the oracle one mutation behind. fraction=0
+    degenerates to a boundary crash (nothing of the record landed) —
+    that one recovers CLEAN, pinning that torn-detection never
+    false-positives on a clean boundary."""
+    oracles = [_fresh(_data())]
+    for j in range(len(MUTATIONS)):
+        o = _fresh(_data())
+        _apply(o, MUTATIONS[:j + 1])
+        oracles.append(o)
+    for j in range(1, len(MUTATIONS) + 1):
+        inj = FaultInjector(specs=[FaultSpec(
+            "wal_write", "torn", at_calls=(j,), fraction=fraction)])
+        with tempfile.TemporaryDirectory() as d:
+            cat = _fresh(_data(), persist_dir=d, faults=inj)
+            with pytest.raises(InjectedCrash):
+                _apply(cat, MUTATIONS)
+            del cat
+            if fraction == 0.0:
+                re = SegmentedCatalog.open(d)
+                assert re.recovery.clean
+            else:
+                with pytest.raises(RecoveryError) as ei:
+                    SegmentedCatalog.open(d)
+                assert ei.value.report.torn_tail
+                assert ei.value.report.quarantined
+                re = ei.value.catalog    # salvage rides the typed error
+                assert re is not None
+                assert not re.recovery.clean
+            _assert_same_state(re, oracles[j - 1])
+
+
+def test_engine_ranked_results_bitwise_across_crash():
+    """The acceptance criterion end to end: ranked ids AND scores from a
+    recovered engine are bitwise identical to a never-crashed engine —
+    checked at the first, a middle, and the last record boundary."""
+    pos, neg = list(range(8)), list(range(100, 140))
+    qkw = dict(model="dbranch", n_models=3, seed=7)
+    for j in (1, 3, len(MUTATIONS)):
+        oracle_eng = SearchEngine(_data(), **ENG, live=True)
+        for op, arg in MUTATIONS[:j]:
+            (oracle_eng.append if op == "append"
+             else oracle_eng.delete)(arg)
+        want = oracle_eng.query(pos, neg, **qkw)
+        inj = FaultInjector(specs=[FaultSpec("wal_commit", "crash",
+                                             at_calls=(j,))])
+        with tempfile.TemporaryDirectory() as d:
+            eng = SearchEngine(_data(), **ENG, live=True,
+                               data_dir=d, faults=inj)
+            with pytest.raises(InjectedCrash):
+                for op, arg in MUTATIONS:
+                    (eng.append if op == "append" else eng.delete)(arg)
+            del eng
+            re = SearchEngine(live=True, data_dir=d, **ENG)
+            assert re.recovery.clean
+            got = re.query(pos, neg, **qkw)
+            np.testing.assert_array_equal(want.ids, got.ids)
+            np.testing.assert_array_equal(want.scores, got.scores)
+
+
+def test_engine_crash_parity_with_ties_and_tombstones():
+    """Crash parity where it bites hardest: duplicated rows force
+    kth-score TIES at the ranked cut (the id tie-break must come back
+    bitwise) and deletes put tombstones in both the checkpointed base
+    and the replayed tail."""
+    x = _data(220)
+    x[50:60] = x[40:50]              # duplicate rows -> kth-score ties
+    dup = _data(30, seed=4)
+    dup[10:20] = x[40:50]            # appended duplicates of base rows
+    muts = [("append", dup), ("delete", [41, 45]),
+            ("append", x[44:54].copy()), ("delete", [52, 225])]
+    pos, neg = list(range(36, 44)), list(range(120, 160))
+    qkw = dict(model="dbranch", n_models=3, seed=7, max_results=25)
+    oracle = SearchEngine(x.copy(), **ENG, live=True)
+    for op, arg in muts[:3]:
+        (oracle.append if op == "append" else oracle.delete)(arg)
+    want = oracle.query(pos, neg, **qkw)
+    inj = FaultInjector(specs=[FaultSpec("wal_commit", "crash",
+                                         at_calls=(3,))])
+    with tempfile.TemporaryDirectory() as d:
+        eng = SearchEngine(x.copy(), **ENG, live=True,
+                           data_dir=d, faults=inj)
+        with pytest.raises(InjectedCrash):
+            for op, arg in muts:
+                (eng.append if op == "append" else eng.delete)(arg)
+        del eng
+        re = SearchEngine(live=True, data_dir=d, **ENG)
+        assert re.recovery.clean
+        got = re.query(pos, neg, **qkw)
+        np.testing.assert_array_equal(want.ids, got.ids)
+        np.testing.assert_array_equal(want.scores, got.scores)
+        # the tombstoned rows never surface
+        assert not set(got.ids) & {41, 45}
+
+
+# ----------------------------------------------------------------------
+# compaction's two-phase commit
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("site,call", [
+    ("compact", 1),          # before the merge: nothing changed
+    ("segment_write", 2),    # phase 1, mid-checkpoint: orphan files
+    ("manifest_commit", 2),  # phase 2, before the flip: orphan segments
+])
+def test_compaction_crash_points_recover_query_identical(site, call):
+    """Crash a durable compaction at each phase: recovery always lands
+    on a state whose rows/validity/query results match the logical
+    pre-compaction catalog (the swap only becomes visible to recovery
+    when the phase-2 manifest lands)."""
+    oracle = _fresh(_data())
+    _apply(oracle, MUTATIONS)
+    inj = FaultInjector(specs=[FaultSpec(site, "crash", at_calls=(call,))])
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d, faults=inj)
+        _apply(cat, MUTATIONS)
+        with pytest.raises(InjectedCrash):
+            cat.compact()
+        del cat
+        re = SegmentedCatalog.open(d)
+        assert re.recovery.clean
+        sa, sb = re.snapshot(), oracle.snapshot()
+        assert sa.n == sb.n and sa.live_rows == sb.live_rows
+        np.testing.assert_array_equal(sa.x[:sa.n], sb.x[:sb.n])
+        np.testing.assert_array_equal(sa.valid_host[:sa.n],
+                                      sb.valid_host[:sb.n])
+        # phase-1 orphans must have been garbage-collected
+        for name in os.listdir(d):
+            assert not name.endswith(".tmp")
+
+
+def test_compaction_completed_then_crash_before_nothing_else():
+    """A compaction whose manifest DID land survives reopen: the merged
+    segment set is what recovery loads (epoch included), and the old
+    pre-merge segments are gone from the manifest."""
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d)
+        _apply(cat, MUTATIONS)
+        cat.compact()
+        epoch = cat.epoch
+        del cat                 # crash AFTER the 2PC completed
+        re = SegmentedCatalog.open(d)
+        assert re.recovery.clean and re.epoch == epoch
+        assert len(re.snapshot().segments) == 1
+        oracle = _fresh(_data())
+        _apply(oracle, MUTATIONS)
+        oracle.compact()
+        _assert_same_state(re, oracle)
+
+
+# ----------------------------------------------------------------------
+# failed-fsync rollback + poisoned log
+# ----------------------------------------------------------------------
+
+def test_fsync_failure_rolls_back_record_and_lsn():
+    """sync="always" + a failing fsync: the record is truncated off the
+    log AND its LSN is released, so the next mutation writes a gap-free
+    log and a later reopen replays clean."""
+    inj = FaultInjector(specs=[FaultSpec("wal_fsync", "fail",
+                                         at_calls=(2,))])
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d, faults=inj, sync="always")
+        cat.append(_data(10, seed=1))
+        with pytest.raises(PersistenceError):
+            cat.append(_data(5, seed=2))
+        assert cat.snapshot().n == 210          # memory unchanged
+        assert cat.persist.stats["wal_rollbacks"] == 1
+        cat.append(_data(7, seed=3))            # log continues gap-free
+        cat.close()
+        re = SegmentedCatalog.open(d)
+        assert re.recovery.clean and re.snapshot().n == 217
+
+
+# ----------------------------------------------------------------------
+# corruption detection: flipped bytes, damaged manifests
+# ----------------------------------------------------------------------
+
+def test_corrupt_wal_byte_quarantines_suffix():
+    """Flip one byte in the MIDDLE of the log: everything before it
+    replays, the record and everything after are refused + quarantined,
+    and the failure is a typed RecoveryError — never silent."""
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d)
+        _apply(cat, MUTATIONS)
+        cat.close()
+        wal = sorted(f for f in os.listdir(d) if f.startswith("wal-"))[0]
+        p = os.path.join(d, wal)
+        blob = bytearray(open(p, "rb").read())
+        blob[len(blob) // 2] ^= 0xFF            # mid-log corruption
+        with open(p, "wb") as f:
+            f.write(blob)
+        with pytest.raises(RecoveryError) as ei:
+            SegmentedCatalog.open(d)
+        rep = ei.value.report
+        assert rep.quarantined and not rep.clean
+        salv = ei.value.catalog
+        assert salv is not None
+        # the salvage is a strict prefix of the mutation stream
+        replayed = rep.replayed_appends + rep.replayed_deletes
+        assert 0 <= replayed < len(MUTATIONS)
+        oracle = _fresh(_data())
+        _apply(oracle, MUTATIONS[:replayed])
+        _assert_same_state(salv, oracle)
+        # non-strict reopen serves the same salvage without raising
+        re = SegmentedCatalog.open(d, strict=False)
+        _assert_same_state(re, oracle)
+
+
+def test_corrupt_newest_manifest_falls_back_to_older():
+    """Damage the newest manifest: recovery quarantines it and loads the
+    previous one, replaying the longer WAL tail to the SAME state."""
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d)
+        _apply(cat, MUTATIONS[:3])
+        cat.checkpoint()
+        _apply(cat, MUTATIONS[3:])
+        cat.close()
+        mans = sorted(f for f in os.listdir(d) if f.startswith("manifest-"))
+        assert len(mans) == 2
+        with open(os.path.join(d, mans[-1]), "r+b") as f:
+            f.write(b"\x00garbage\x00")
+        with pytest.raises(RecoveryError) as ei:
+            SegmentedCatalog.open(d)
+        re = ei.value.catalog
+        assert re is not None
+        assert any(mans[-1] in q for q in ei.value.report.quarantined)
+        oracle = _fresh(_data())
+        _apply(oracle, MUTATIONS)
+        _assert_same_state(re, oracle)
+
+
+def test_empty_dir_and_destroyed_dir_raise_typed_errors():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(RecoveryError):
+            SegmentedCatalog.open(d)     # nothing to recover
+        cat = _fresh(_data(), persist_dir=d)
+        cat.close()
+        for f in os.listdir(d):          # destroy every manifest
+            if f.startswith("manifest-"):
+                os.unlink(os.path.join(d, f))
+        with pytest.raises(RecoveryError) as ei:
+            SegmentedCatalog.open(d)
+        assert ei.value.catalog is None  # nothing serviceable
+
+
+# ----------------------------------------------------------------------
+# the real thing: SIGKILL mid-ingest in a subprocess
+# ----------------------------------------------------------------------
+
+_CHILD = textwrap.dedent("""
+    import sys, numpy as np
+    from repro.core.segments import SegmentedCatalog
+    from repro.core.subsets import make_subsets
+
+    d = sys.argv[1]
+    x = np.random.default_rng(0).normal(size=(200, 16)).astype(np.float32)
+    cat = SegmentedCatalog(x, make_subsets(16, 4, 4, seed=0), block=64,
+                           persist_dir=d, sync="batch")
+    print("READY", flush=True)
+    i = 0
+    while True:                      # parent SIGKILLs us mid-loop
+        rng = np.random.default_rng(100 + i)
+        cat.append(rng.normal(size=(10, 16)).astype(np.float32))
+        cat.delete([int(rng.integers(0, 200))])
+        i += 1
+        print("ROUND", i, flush=True)
+""")
+
+
+@pytest.mark.parametrize("grace_s", [0.05, 0.4])
+def test_sigkill_mid_ingest_recovers_consistent_prefix(grace_s):
+    """Start a real process appending/deleting in a loop, SIGKILL it
+    (no atexit, no flush, no mercy), then recover in THIS process: the
+    catalog must come back as a consistent prefix of the child's
+    mutation stream — clean, or typed-torn with salvage — and serve."""
+    with tempfile.TemporaryDirectory() as d:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _CHILD, d],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            env=env, cwd=os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))))
+        try:
+            line = proc.stdout.readline()
+            assert b"READY" in line, proc.stderr.read().decode()
+            time.sleep(grace_s)          # let some rounds land
+        finally:
+            proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=30)
+        assert proc.returncode == -signal.SIGKILL
+        try:
+            re = SegmentedCatalog.open(d)
+            rep = re.recovery
+        except RecoveryError as e:       # torn mid-record is legal...
+            assert e.report.torn_tail    # ...but must be TYPED + salvaged
+            assert e.catalog is not None
+            re, rep = e.catalog, e.report
+        # the recovered state is an exact prefix of the child's script:
+        # k full rounds -> 200 + 10k rows, k tombstone ops replayed
+        snap = re.snapshot()
+        k, rem = divmod(snap.n - 200, 10)
+        assert rem == 0 and k >= 0       # appends are all-or-nothing
+        assert rep.replayed_appends == k
+        # a round's delete may no-op (random id already dead) and then
+        # consumes no LSN — but never MORE deletes than rounds
+        assert rep.replayed_deletes <= k
+        assert rep.last_lsn == k + rep.replayed_deletes
+        # and it still serves mutations + queries
+        re.append(_data(5, seed=99))
+        assert re.snapshot().n == 200 + 10 * k + 5
+        re.close()
+        re2 = SegmentedCatalog.open(d)
+        assert re2.recovery.clean
+        assert re2.snapshot().n == 200 + 10 * k + 5
+
+
+# ----------------------------------------------------------------------
+# engine + serve integration
+# ----------------------------------------------------------------------
+
+def test_engine_recovery_surfaces_degraded_health():
+    from repro.serve.engine import QueryServer
+    with tempfile.TemporaryDirectory() as d:
+        eng = SearchEngine(_data(), **ENG, live=True, data_dir=d)
+        eng.append(_data(10, seed=1))
+        wal = sorted(f for f in os.listdir(d) if f.startswith("wal-"))[-1]
+        del eng
+        p = os.path.join(d, wal)
+        with open(p, "r+b") as f:        # tear the tail on disk
+            f.truncate(os.path.getsize(p) - 3)
+        re = SearchEngine(live=True, data_dir=d, **ENG)
+        assert re.recovery is not None and not re.recovery.clean
+        srv = QueryServer(re)
+        assert srv.health == "degraded"
+        s = srv.summary()
+        assert s["recovery"]["torn_tail"] and s["recovery"]["quarantined"]
+        assert s["durable"]["sync"] == "batch"
+
+
+def test_server_checkpoint_ingest_op():
+    from repro.serve.engine import IngestRequest, QueryServer
+    with tempfile.TemporaryDirectory() as d:
+        eng = SearchEngine(_data(), **ENG, live=True, data_dir=d)
+        srv = QueryServer(eng)
+        r = srv.handle_ingest(IngestRequest(
+            0, "append", features=_data(10, seed=1)))
+        assert r.ok
+        r = srv.handle_ingest(IngestRequest(1, "checkpoint"))
+        assert r.ok and r.info["op"] == "checkpoint"
+        assert r.info["lsn"] == 1 and srv.stats["checkpoints"] == 1
+        eng.close()
+        re = SearchEngine(live=True, data_dir=d, **ENG)
+        assert re.recovery.clean
+        # the checkpoint moved the horizon: nothing left to replay
+        assert re.recovery.replayed_appends == 0
+        srv2 = QueryServer(re)
+        assert srv2.health == "ok"
+
+
+def test_checkpoint_on_memory_only_catalog_is_typed_error():
+    eng = SearchEngine(_data(), **ENG, live=True)
+    with pytest.raises(PersistenceError, match="persist_dir"):
+        eng.checkpoint()
