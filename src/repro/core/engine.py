@@ -200,7 +200,11 @@ class SearchEngine:
         # writes the genesis checkpoint. Damage found during recovery
         # lands in ``self.recovery`` (a persist.RecoveryReport) with the
         # salvaged state serving — the serve layer surfaces it as
-        # degraded health instead of silently wrong results.
+        # degraded health instead of silently wrong results. A data_dir
+        # has exactly ONE writing process: both paths below take the
+        # directory's fcntl lock (persist.DirLock), so a second process
+        # racing this has_state check fails with PersistenceError
+        # instead of interleaving WAL/manifest writes.
         self.recovery = None
         recovered: Optional[SegmentedCatalog] = None
         if data_dir is not None:

@@ -56,6 +56,13 @@ Directory layout::
         meta.json  features.npy  perm_00.npy  zlo_00.npy  zhi_00.npy ...
       wal-000000000001.log          name = first LSN in the file
       quarantine/                   bytes recovery refused to trust
+      LOCK                          single-writer lock (holder's pid)
+
+A data directory has exactly ONE writer at a time: ``Persistence`` and
+``recover()`` take an exclusive ``fcntl`` lock on ``LOCK`` (reentrant
+within a process, kernel-released at process death) and a second
+process fails with a typed ``PersistenceError`` instead of interleaving
+WAL/manifest writes with the holder.
 
 Fault seams (duck-typed ``faults.check(site)`` — core never imports
 serve): ``wal_write`` (torn-write point), ``wal_commit`` (kill between
@@ -82,8 +89,13 @@ import numpy as np
 
 from repro.core.errors import InjectedCrash, PersistenceError, RecoveryError
 
+try:                                  # POSIX record locks (single-writer)
+    import fcntl
+except ImportError:                   # platform without fcntl: no locking
+    fcntl = None                      # type: ignore[assignment]
+
 __all__ = ["atomic_write_bytes", "fsync_dir", "checksum", "has_state",
-           "npy_bytes", "npy_load",
+           "npy_bytes", "npy_load", "DirLock",
            "Persistence", "RecoveryReport", "RecoveredState", "WalRecord",
            "recover", "WAL_MAGIC", "SYNC_MODES", "DEFAULT_ALGO"]
 
@@ -181,6 +193,105 @@ def npy_bytes(arr: np.ndarray) -> bytes:
 
 def npy_load(data: bytes) -> np.ndarray:
     return np.load(io.BytesIO(data), allow_pickle=False)
+
+
+# ----------------------------------------------------------------------
+# single-writer directory lock
+# ----------------------------------------------------------------------
+
+_dirlock_mu = threading.Lock()
+# (st_dev, st_ino) of a LOCK file -> [fd, refcount]. One fd per inode
+# per process: POSIX record locks are released when ANY fd to the file
+# closes, so every in-process acquirer must share the same descriptor.
+_dirlock_fds: Dict[Tuple[int, int], List[int]] = {}
+
+
+class DirLock:
+    """Advisory EXCLUSIVE inter-process lock on a catalog directory
+    (``<root>/LOCK``), enforcing the single-writer assumption: two
+    processes pointed at the same ``data_dir`` must never interleave
+    WAL/manifest writes (one recovering while the other checkpoints
+    corrupts the directory). Taken by ``Persistence`` for the life of
+    the handle and by ``recover()`` for the duration of the scan; a
+    second PROCESS fails loudly with ``PersistenceError`` naming the
+    holder's pid. Within one process acquisition is reentrant (a shared
+    per-inode fd with a refcount), so recovery handing off to a fresh
+    ``Persistence`` — or a reopen after a crash-simulating ``del`` —
+    never self-deadlocks. The kernel releases the lock when the holder
+    dies, so a ``kill -9``'d writer cannot wedge recovery. No-op on
+    platforms without ``fcntl``."""
+
+    def __init__(self, root):
+        root = Path(root)
+        self._key: Optional[Tuple[int, int]] = None
+        if fcntl is None:
+            return
+        root.mkdir(parents=True, exist_ok=True)
+        path = root / "LOCK"
+        with _dirlock_mu:
+            try:
+                st = os.stat(path)
+                ent = _dirlock_fds.get((st.st_dev, st.st_ino))
+            except OSError:
+                ent = None
+            if ent is not None:          # this process already holds it
+                ent[1] += 1
+                self._key = (st.st_dev, st.st_ino)
+                return
+            fd = os.open(path, os.O_RDWR | os.O_CREAT, 0o644)
+            try:
+                fcntl.lockf(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+            except OSError as e:
+                holder = ""
+                try:
+                    holder = os.pread(fd, 64, 0).decode(
+                        "ascii", "replace").strip()
+                except OSError:
+                    pass
+                os.close(fd)             # we hold no lock on this inode
+                raise PersistenceError(
+                    f"{root} is locked by another process"
+                    + (f" (pid {holder})" if holder else "")
+                    + " — a durable catalog directory has exactly one "
+                    "writer at a time") from e
+            st = os.fstat(fd)
+            os.ftruncate(fd, 0)
+            os.pwrite(fd, f"{os.getpid()}\n".encode(), 0)
+            key = (st.st_dev, st.st_ino)
+            _dirlock_fds[key] = [fd, 1]
+            self._key = key
+
+    def release(self) -> None:
+        key, self._key = self._key, None
+        if key is None:
+            return
+        with _dirlock_mu:
+            ent = _dirlock_fds.get(key)
+            if ent is None:
+                return
+            ent[1] -= 1
+            if ent[1] <= 0:
+                del _dirlock_fds[key]
+                try:
+                    fcntl.lockf(ent[0], fcntl.LOCK_UN)
+                except OSError:
+                    pass
+                os.close(ent[0])
+
+    # refcount drops with the owner (a catalog dropped without close()),
+    # so an abandoned handle does not pin the lock for process lifetime
+    def __del__(self):
+        try:
+            self.release()
+        except Exception:                # interpreter-shutdown safety
+            pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
 
 
 # ----------------------------------------------------------------------
@@ -285,6 +396,10 @@ class Persistence:
                              f"got {sync!r}")
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        # single-writer enforcement: held until close() (or the kernel
+        # reclaims it at process death) — a second process touching this
+        # directory fails here instead of corrupting it
+        self._dirlock = DirLock(self.root)
         self.sync = sync
         self.algo = algo
         self.faults = faults
@@ -317,15 +432,36 @@ class Persistence:
     # -------------------------------- WAL ----------------------------
     def _open_wal(self, first_lsn: int):
         path = self.root / _wal_name(first_lsn)
-        f = open(path, "ab", buffering=0 if self.sync == "always"
-                 else io.DEFAULT_BUFFER_SIZE)
         hdr = (WAL_MAGIC + bytes([_ALGO_CODES[self.algo]])
                + struct.pack("<Q", first_lsn))
-        f.write(hdr)
-        f.flush()
-        if self.sync == "always":
-            os.fsync(f.fileno())
-        fsync_dir(self.root)          # the new file's directory entry
+        # A header-only file legitimately survives recovery (crash
+        # between the header write and the first record, or a rolled-
+        # back first append followed by a clean close), and the reopened
+        # catalog hands out the SAME first LSN — so this name can
+        # already exist. Appending a second header would be parsed as a
+        # record frame by the next recovery, quarantining the file and
+        # every later one: write the header only into an empty file,
+        # validate it otherwise.
+        try:
+            existing = os.path.getsize(path)
+        except OSError:
+            existing = 0
+        if existing:
+            with open(path, "rb") as rf:
+                found = rf.read(len(hdr))
+            if found != hdr:
+                raise PersistenceError(
+                    f"{path.name}: existing WAL header does not match "
+                    "(truncated header, or algo/first-LSN drift) — "
+                    "refusing to append after it")
+        f = open(path, "ab", buffering=0 if self.sync == "always"
+                 else io.DEFAULT_BUFFER_SIZE)
+        if not existing:
+            f.write(hdr)
+            f.flush()
+            if self.sync == "always":
+                os.fsync(f.fileno())
+            fsync_dir(self.root)      # the new file's directory entry
         self._wal_f, self._wal_path = f, path
         return f
 
@@ -407,6 +543,7 @@ class Persistence:
                     pass
                 self._wal_f.close()
                 self._wal_f = None
+        self._dirlock.release()
 
     # ---------------------------- segments ---------------------------
     def write_segment(self, features: np.ndarray, indexes,
@@ -753,9 +890,17 @@ def recover(root, *, faults=None) -> RecoveredState:
     tail, quarantine anything that fails validation. Raises
     ``RecoveryError`` (with ``catalog=None``) only when NO manifest is
     serviceable; partial damage is returned in the report so the
-    caller can decide how loudly to surface it."""
-    t0 = time.perf_counter()
+    caller can decide how loudly to surface it. Holds the directory's
+    single-writer lock for the scan — recovery mutates the directory
+    (quarantine moves, tail truncation, orphan GC) and must never race
+    a live writer in another process."""
     root = Path(root)
+    with DirLock(root):
+        return _recover_locked(root, faults)
+
+
+def _recover_locked(root: Path, faults) -> RecoveredState:
+    t0 = time.perf_counter()
     report = RecoveryReport()
     mids = _scan_ids(root, "manifest-", ".json")
     if not mids:
@@ -789,14 +934,23 @@ def recover(root, *, faults=None) -> RecoveredState:
             report.replayed_rows += rec.rows
         else:
             report.replayed_deletes += 1
-    # GC uncommitted orphans: segment dirs no manifest references are
-    # phase-1 leftovers of a compaction whose manifest never flipped —
-    # expected two-phase-commit debris, removed silently (not an error)
+    # GC uncommitted orphans — but only TRUE phase-1 debris. A dir
+    # without meta.json is a checkpoint/compaction that died mid-files
+    # and can never be referenced (meta.json is written last): remove
+    # it silently. A dir WITH a valid-looking meta.json that no
+    # surviving manifest references may be evidence — e.g. its manifest
+    # just failed validation (possibly a transient read error) and was
+    # quarantined above — so it is quarantined alongside, never
+    # deleted: a retry of the newer state stays possible.
     referenced = {e["dir"] for m in mids if m != report.manifest_id
                   for e in _safe_manifest_segments(root, m)}
     referenced.update(e["dir"] for e in doc["segments"])
     for p in sorted(root.glob("seg-*")):
-        if p.is_dir() and p.name not in referenced:
+        if not p.is_dir() or p.name in referenced:
+            continue
+        if (p / "meta.json").exists():
+            _quarantine(root, p.name, None, report)
+        else:
             shutil.rmtree(p, ignore_errors=True)
             report.orphans_removed.append(p.name)
     report.wall_s = time.perf_counter() - t0

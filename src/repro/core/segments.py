@@ -744,8 +744,13 @@ class SegmentedCatalog:
         (``err.catalog``) and report (``err.report``), so a server can
         keep serving the salvage while surfacing ``degraded`` health —
         corruption is never folded silently into results."""
-        state = persistmod.recover(path, faults=faults)
-        cat = cls._from_recovered(path, state, sync=sync, faults=faults)
+        # hold the single-writer lock across recover -> replay -> re-arm
+        # (DirLock is reentrant in-process, so the nested acquisitions
+        # by recover() and the fresh Persistence share this hold)
+        with persistmod.DirLock(path):
+            state = persistmod.recover(path, faults=faults)
+            cat = cls._from_recovered(path, state, sync=sync,
+                                      faults=faults)
         if strict and not state.report.clean:
             raise RecoveryError(
                 f"recovered {path} with damage: "

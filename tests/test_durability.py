@@ -23,6 +23,7 @@ backs the injected crashes with a real ``SIGKILL`` mid-ingest.
 """
 from __future__ import annotations
 
+import json
 import os
 import signal
 import subprocess
@@ -384,6 +385,123 @@ def test_compaction_completed_then_crash_before_nothing_else():
 
 
 # ----------------------------------------------------------------------
+# header-only WAL files: reopen must append, never re-write the header
+# ----------------------------------------------------------------------
+
+def test_reopen_after_header_only_wal_preserves_acked_records():
+    """A crash between the WAL header write and the first record leaves
+    a header-only file that recovers CLEAN — and the reopened catalog
+    hands out the same first LSN, landing in the same file name. The
+    writer must append records after the existing header: a duplicate
+    header would be parsed as a torn record frame by the NEXT recovery,
+    quarantining the file and losing fsync-acknowledged mutations."""
+    inj = FaultInjector(specs=[FaultSpec("wal_write", "torn",
+                                         at_calls=(1,), fraction=0.0)])
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d, faults=inj)
+        with pytest.raises(InjectedCrash):
+            cat.append(_data(10, seed=1))
+        del cat                      # header-only wal-…01.log on disk
+        re = SegmentedCatalog.open(d)
+        assert re.recovery.clean     # boundary crash, nothing lost
+        _apply(re, MUTATIONS)        # acked, durable mutations
+        re.close()
+        re2 = SegmentedCatalog.open(d)
+        assert re2.recovery.clean and not re2.recovery.quarantined
+        oracle = _fresh(_data())
+        _apply(oracle, MUTATIONS)
+        _assert_same_state(re2, oracle)
+        wal = sorted(f for f in os.listdir(d) if f.startswith("wal-"))[0]
+        blob = open(os.path.join(d, wal), "rb").read()
+        assert blob.count(persist.WAL_MAGIC) == 1   # exactly one header
+
+
+def test_rolled_back_first_append_then_clean_close_keeps_later_records():
+    """The other route to a header-only file: the FIRST append's fsync
+    fails (sync="always"), the record rolls back to the bare header,
+    and the catalog closes cleanly. Mutations after reopen must land in
+    that file without a second header and survive the next reopen."""
+    inj = FaultInjector(specs=[FaultSpec("wal_fsync", "fail",
+                                         at_calls=(1,))])
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d, faults=inj, sync="always")
+        with pytest.raises(PersistenceError):
+            cat.append(_data(10, seed=1))
+        cat.close()                  # header-only file, clean close
+        re = SegmentedCatalog.open(d, sync="always")
+        assert re.recovery.clean
+        re.append(_data(10, seed=1))
+        re.delete([3, 4])
+        re.close()
+        re2 = SegmentedCatalog.open(d)
+        assert re2.recovery.clean
+        assert re2.recovery.replayed_appends == 1
+        assert re2.recovery.replayed_deletes == 1
+        assert re2.snapshot().n == 210
+
+
+def test_open_wal_refuses_mismatched_existing_header():
+    """If the file a first LSN maps to exists but its header does not
+    match (truncated, or written under another algo/LSN), appending
+    after it would poison the log for recovery — refuse loudly."""
+    with tempfile.TemporaryDirectory() as d:
+        p = persist.Persistence(d)
+        with open(os.path.join(d, "wal-000000000001.log"), "wb") as f:
+            f.write(b"not-a-wal-header")
+        with pytest.raises(PersistenceError, match="header"):
+            p.log_append(1, _data(2))
+        p.close()
+
+
+# ----------------------------------------------------------------------
+# single-writer lock: one process per data_dir
+# ----------------------------------------------------------------------
+
+_LOCK_CHILD = textwrap.dedent("""
+    import sys
+    from repro.core import persist
+    from repro.core.errors import PersistenceError
+    want = sys.argv[2]
+    try:
+        p = persist.Persistence(sys.argv[1])
+    except PersistenceError:
+        sys.exit(0 if want == "locked" else 2)
+    p.close()
+    sys.exit(0 if want == "acquired" else 3)
+""")
+
+
+def _run_lock_child(d, want):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-c", _LOCK_CHILD, d, want],
+        capture_output=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def test_data_dir_single_writer_enforced_across_processes():
+    """Two processes pointed at the same data_dir must not interleave
+    WAL/manifest writes: while this process holds the catalog, a second
+    process fails with a typed PersistenceError; after close() the
+    directory is free again. (Within one process the lock is reentrant
+    — every crash-matrix test above reopens after a simulated death.)"""
+    if persist.fcntl is None:
+        pytest.skip("no fcntl on this platform")
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d)
+        out = _run_lock_child(d, "locked")
+        assert out.returncode == 0, (out.returncode, out.stderr.decode())
+        cat.close()
+        out = _run_lock_child(d, "acquired")
+        assert out.returncode == 0, (out.returncode, out.stderr.decode())
+        # and this process can still reopen afterwards
+        re = SegmentedCatalog.open(d)
+        assert re.recovery.clean
+        re.close()
+
+
+# ----------------------------------------------------------------------
 # failed-fsync rollback + poisoned log
 # ----------------------------------------------------------------------
 
@@ -462,6 +580,45 @@ def test_corrupt_newest_manifest_falls_back_to_older():
         oracle = _fresh(_data())
         _apply(oracle, MUTATIONS)
         _assert_same_state(re, oracle)
+
+
+def test_orphaned_complete_segments_quarantined_not_deleted():
+    """Segment dirs referenced only by a manifest that failed
+    validation are EVIDENCE, not debris: recovery must move them to
+    quarantine/ (a transient read error on the newest manifest must not
+    make a retry of that state impossible), and delete only meta-less
+    dirs — true phase-1 leftovers that nothing can ever reference."""
+    with tempfile.TemporaryDirectory() as d:
+        cat = _fresh(_data(), persist_dir=d)
+        _apply(cat, MUTATIONS[:3])
+        cat.checkpoint()
+        _apply(cat, MUTATIONS[3:])
+        cat.close()
+        mans = sorted(f for f in os.listdir(d) if f.startswith("manifest-"))
+        with open(os.path.join(d, mans[-1])) as f:
+            newest = json.load(f)
+        with open(os.path.join(d, mans[0])) as f:
+            oldest = json.load(f)
+        only_new = ({e["dir"] for e in newest["segments"]}
+                    - {e["dir"] for e in oldest["segments"]})
+        assert only_new                 # the checkpoint wrote fresh dirs
+        os.makedirs(os.path.join(d, "seg-0000009999"))   # phase-1 debris
+        with open(os.path.join(d, mans[-1]), "r+b") as f:
+            f.write(b"\x00garbage\x00")
+        with pytest.raises(RecoveryError) as ei:
+            SegmentedCatalog.open(d)
+        rep = ei.value.report
+        for name in only_new:           # moved aside, bytes intact
+            assert not os.path.exists(os.path.join(d, name))
+            qdir = os.path.join(d, "quarantine", name)
+            assert os.path.isfile(os.path.join(qdir, "meta.json"))
+            assert any(name in q for q in rep.quarantined)
+        assert rep.orphans_removed == ["seg-0000009999"]
+        assert not os.path.exists(os.path.join(d, "seg-0000009999"))
+        # the salvage still equals the full-oracle state via WAL replay
+        oracle = _fresh(_data())
+        _apply(oracle, MUTATIONS)
+        _assert_same_state(ei.value.catalog, oracle)
 
 
 def test_empty_dir_and_destroyed_dir_raise_typed_errors():
