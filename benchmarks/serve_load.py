@@ -19,16 +19,27 @@ server sheds typed rejections and keeps the served requests' tail
 bounded. Emits BENCH_serve.json; --check-json re-validates the artifact
 (same mechanism as BENCH_query_time.json — benchmarks/query_time.py).
 
+The HTTP cells (DESIGN.md §16) re-run the admission sweep over a REAL
+socket through ``HttpFrontEnd`` — ``http_p99_ms`` prices the full wire
+path (JSON parse, event loop, thread-pool hop) next to the in-process
+numbers — and a cached-workload cell repeats a small set of label sets
+against the epoch-keyed ``ResultCache`` (``cache_hit_rate`` + the
+latency a repeat query pays when it never touches the device).
+
 Usage:
   python benchmarks/serve_load.py                 # run + emit JSON
+  python benchmarks/serve_load.py --http          # HTTP cells only
   python benchmarks/serve_load.py --check-json    # CI artifact gate
   python benchmarks/serve_load.py --qps 5 20 60 --duration 2.0
 """
 from __future__ import annotations
 
 import argparse
+import json
 import threading
 import time
+import urllib.error
+import urllib.request
 from typing import Dict, List
 
 import numpy as np
@@ -36,16 +47,21 @@ import numpy as np
 from benchmarks.common import emit, emit_json, make_engine, query_sets
 from benchmarks.query_time import validate_bench_json
 from repro.data.synthetic import CLASS_IDS
+from repro.serve.cache import ResultCache
 from repro.serve.engine import QueryRequest, QueryServer
+from repro.serve.http import HttpFrontEnd
 
 OUT_JSON = "BENCH_serve.json"
 
-# keys every serve-load row must carry — the CI chaos job fails loudly
-# when the artifact drops one (same gate as the query-time artifacts)
+# keys every serve-load row must carry — the CI chaos/http jobs fail
+# loudly when the artifact drops one (same gate as the query-time
+# artifacts). http / http_p99_ms / cache_hit_rate are zero-filled on
+# in-process rows so the artifact stays one uniform table.
 SERVE_REQUIRED_KEYS = (
     "name", "us_per_call", "offered_qps", "achieved_qps", "p50_ms",
     "p99_ms", "p999_ms", "served_ok", "errors", "rejected",
-    "rejection_rate", "admission", "queue_depth_peak", "knee_qps", "n",
+    "rejection_rate", "admission", "queue_depth_peak", "knee_qps",
+    "http", "http_p99_ms", "cache_hit_rate", "n",
 )
 
 # the saturation knee: a mode's p99 has left the idle regime when it
@@ -96,8 +112,131 @@ def _drive(server: QueryServer, reqs: List[QueryRequest],
     return done
 
 
+def _drive_http(base: str, bodies: List[Dict],
+                offered_qps: float) -> List[Dict]:
+    """Open-loop over the wire: POST body i at t0 + i/qps from its own
+    thread (the generator never waits — same overload model as _drive),
+    recording status, cache disposition and end-to-end wall."""
+    done: List[Dict] = []
+    lock = threading.Lock()
+    waiters = []
+
+    def fire(body, t_submit):
+        try:
+            req = urllib.request.Request(
+                base + "/query", data=json.dumps(body).encode(),
+                headers={"Content-Type": "application/json"},
+                method="POST")
+            with urllib.request.urlopen(req, timeout=300) as r:
+                status, payload = r.status, json.loads(r.read())
+        except urllib.error.HTTPError as e:
+            status, payload = e.code, json.loads(e.read())
+        with lock:
+            done.append({"ok": status == 200, "status": status,
+                         "cache": payload.get("cache", ""),
+                         "e2e_s": time.monotonic() - t_submit})
+
+    t0 = time.monotonic()
+    for i, body in enumerate(bodies):
+        target = t0 + i / offered_qps
+        delay = target - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        w = threading.Thread(target=fire, args=(body, time.monotonic()),
+                             daemon=True)
+        w.start()
+        waiters.append(w)
+    for w in waiters:
+        w.join(timeout=300)
+    return done
+
+
+def _run_http_rows(engine, labels, classes, qps_levels, duration: float,
+                   n: int) -> List[Dict]:
+    """The over-the-wire cells: an admission-controlled server behind
+    HttpFrontEnd, driven open-loop through a real socket — once with
+    the all-unique workload ('http') and once with a repeating 8-label-
+    set workload against the result cache ('http_cached')."""
+    rows: List[Dict] = []
+    for workload in ("http", "http_cached"):
+        mode_rows = []
+        distinct = 8 if workload == "http_cached" else 10 ** 9
+        for qps in sorted(qps_levels):
+            count = max(int(qps * duration), 4)
+            # the plain wire baseline runs cache-free (make_reqs' seed
+            # cycle repeats, and a silent hit would flatter the wire
+            # latency); the cached cell is where the hit rate belongs
+            cache = ResultCache() if workload == "http_cached" else None
+            server = QueryServer(
+                engine, max_results=100, max_batch=8, queue_depth=16,
+                shed_policy="reject-newest", default_deadline_s=5.0,
+                degraded_max_results=25, soft_depth_frac=0.5,
+                cache=cache)
+            server.start()
+            fe = HttpFrontEnd(server)
+            host, port = fe.start()
+            bodies = []
+            for i in range(count):
+                pos, neg = query_sets(labels,
+                                      classes[(i % distinct) % len(classes)],
+                                      12, 60, seed=200 + (i % distinct) % 16)
+                bodies.append({"pos_ids": [int(p) for p in pos],
+                               "neg_ids": [int(g) for g in neg]})
+            done = _drive_http(f"http://{host}:{port}", bodies, qps)
+            wall = max(d["e2e_s"] for d in done) if done else 1.0
+            fe.close()
+            server.close()
+            summary = server.summary()
+            st = server.stats
+            ok_lat = [d["e2e_s"] for d in done if d["ok"]]
+            served_ok = sum(1 for d in done if d["ok"])
+            rejected = sum(st[k] for k in REJECT_KEYS)
+            cache_stats = summary.get("cache", {"hit_rate": 0.0,
+                                                "stale_hits": 0})
+            if cache_stats["stale_hits"]:    # the never-stale invariant,
+                raise SystemExit(            # re-checked under real load
+                    f"serve_load: {cache_stats['stale_hits']} stale "
+                    "cache hits — epoch keying is broken")
+            p99 = _percentile_ms(ok_lat, 99)
+            mode_rows.append({
+                "name": f"serve_load/{workload}/qps{qps:g}",
+                "us_per_call": round(
+                    1e6 * float(np.median(ok_lat)), 1) if ok_lat else 0.0,
+                "offered_qps": qps,
+                "achieved_qps": round(served_ok / wall, 2),
+                "p50_ms": _percentile_ms(ok_lat, 50),
+                "p99_ms": p99,
+                "p999_ms": _percentile_ms(ok_lat, 99.9),
+                "served_ok": served_ok,
+                "errors": st["errors"],
+                "rejected": rejected,
+                "rejection_rate": round(rejected / max(len(done), 1), 4),
+                "admission": 1,
+                "queue_depth_peak": summary["queue_depth_peak"],
+                "degraded_windows": st["degraded_windows"],
+                "retries": st["retries"],
+                "http": 1,
+                "http_p99_ms": p99,
+                "cache_hit_rate": round(cache_stats["hit_rate"], 4),
+                "cache_served": st["cache_served"],
+                "n": n,
+            })
+            if len(done) != count:
+                raise SystemExit(
+                    f"serve_load: {count} HTTP posts but {len(done)} "
+                    f"responses — requests were stranded")
+        idle_p99 = mode_rows[0]["p99_ms"]
+        knee = next((r["offered_qps"] for r in mode_rows
+                     if r["p99_ms"] > KNEE_FACTOR * max(idle_p99, 1e-9)),
+                    0.0)
+        for r in mode_rows:
+            r["knee_qps"] = knee
+        rows.extend(mode_rows)
+    return rows
+
+
 def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
-        n: int = 5_000, verbose: bool = True,
+        n: int = 5_000, verbose: bool = True, http_only: bool = False,
         out_json: str = OUT_JSON) -> List[Dict]:
     engine, labels = make_engine(n)
     classes = [CLASS_IDS["forest"], CLASS_IDS["water"]]
@@ -120,7 +259,7 @@ def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
     warm.close()
 
     rows = []
-    for admission in (False, True):
+    for admission in (() if http_only else (False, True)):
         mode_rows = []
         for qps in sorted(qps_levels):
             count = max(int(qps * duration), 4)
@@ -156,6 +295,10 @@ def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
                 "queue_depth_peak": server.summary()["queue_depth_peak"],
                 "degraded_windows": st["degraded_windows"],
                 "retries": st["retries"],
+                # zero-filled wire columns: this cell ran in-process
+                "http": 0,
+                "http_p99_ms": 0.0,
+                "cache_hit_rate": 0.0,
                 "n": n,
             })
             # every submit resolved exactly once — the no-strand contract
@@ -175,6 +318,8 @@ def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
         for r in mode_rows:
             r["knee_qps"] = knee
         rows.extend(mode_rows)
+    rows.extend(_run_http_rows(engine, labels, classes, qps_levels,
+                               duration, n))
     if verbose:
         emit(rows, "serve_load")
         emit_json(rows, out_json)
@@ -188,10 +333,13 @@ if __name__ == "__main__":
                     default=[5.0, 20.0, 60.0])
     ap.add_argument("--duration", type=float, default=2.0)
     ap.add_argument("--n", type=int, default=5_000)
+    ap.add_argument("--http", action="store_true",
+                    help="run only the over-the-wire cells")
     ap.add_argument("--check-json", action="store_true",
                     help="validate BENCH_serve.json keys (CI gate)")
     args = ap.parse_args()
     if args.check_json:
         validate_bench_json(OUT_JSON, SERVE_REQUIRED_KEYS)
     else:
-        run(qps_levels=tuple(args.qps), duration=args.duration, n=args.n)
+        run(qps_levels=tuple(args.qps), duration=args.duration, n=args.n,
+            http_only=args.http)

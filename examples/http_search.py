@@ -1,0 +1,114 @@
+"""HTTP serving demo: the wire-facing search application (DESIGN.md §16).
+
+    PYTHONPATH=src python examples/http_search.py
+
+Builds the engine once (offline phase), starts the threaded QueryServer
+behind the asyncio HTTP front end on an ephemeral port, and drives it
+the way the paper's web client would — plain JSON over HTTP:
+
+  * a search for each object class, then the SAME searches again to
+    show the epoch-keyed result cache answering without device time;
+  * an append through ``POST /ingest``, proving the repeat query now
+    misses (the catalog epoch moved — cached answers are never stale);
+  * a deliberately tiny ``timeout_ms`` surfacing as HTTP 504;
+  * the ``/stats`` ledger an operator would scrape.
+
+Run ``python -m repro.serve.http --port 8080`` instead for a server
+that stays up for manual curl experiments.
+"""
+import json
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+
+from repro.core.engine import SearchEngine
+from repro.data.synthetic import (CLASS_IDS, PatchDatasetConfig,
+                                  generate_patches, handcrafted_features)
+from repro.serve.cache import ResultCache
+from repro.serve.engine import QueryServer
+from repro.serve.http import HttpFrontEnd
+
+
+def _post(base, path, body):
+    req = urllib.request.Request(
+        base + path, data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"}, method="POST")
+    try:
+        with urllib.request.urlopen(req, timeout=600) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def main():
+    data = generate_patches(PatchDatasetConfig(n_patches=30_000, seed=2))
+    feats = handcrafted_features(data["images"])
+    labels = data["labels"]
+    engine = SearchEngine(feats, n_subsets=24, subset_dim=6, seed=2,
+                          live=True)
+    print(f"[offline] {engine.index_stats()}")
+
+    server = QueryServer(engine, max_results=100, max_batch=4,
+                         queue_depth=64, default_deadline_s=60.0,
+                         cache=ResultCache())
+    server.start()
+    fe = HttpFrontEnd(server)
+    host, port = fe.start()
+    base = f"http://{host}:{port}"
+    print(f"[http] listening on {base}")
+
+    rng = np.random.default_rng(0)
+    queries = {}
+    for cls_name in ("forest", "water", "solar_panel"):
+        cls = CLASS_IDS[cls_name]
+        pos = rng.choice(np.nonzero(labels == cls)[0], 15, replace=False)
+        neg = rng.choice(np.nonzero(labels != cls)[0], 100, replace=False)
+        queries[cls_name] = {"pos_ids": [int(i) for i in pos],
+                             "neg_ids": [int(i) for i in neg],
+                             "timeout_ms": 60_000}
+
+    for round_name in ("cold", "cached"):
+        print(f"[{round_name}]")
+        for cls_name, body in queries.items():
+            status, resp = _post(base, "/query", body)
+            cls = CLASS_IDS[cls_name]
+            ids = np.asarray(resp["ids"], dtype=np.int64)
+            prec = (labels[ids] == cls).mean() if len(ids) else 0.0
+            print(f"  {cls_name:12s} HTTP {status}  "
+                  f"{resp['n_found']:6d} found  "
+                  f"{resp['e2e_ms']:8.1f} ms e2e  "
+                  f"cache={resp['cache']:4s}  precision {prec:.2f}")
+
+    # a live append moves the catalog epoch: every cached entry becomes
+    # unreachable, so the repeat query recomputes on the new catalog
+    status, resp = _post(base, "/ingest",
+                         {"op": "append",
+                          "features": feats[:8].tolist()})
+    print(f"[ingest] HTTP {status}  {resp['info']}")
+    status, resp = _post(base, "/query", queries["forest"])
+    print(f"[post-ingest] forest HTTP {status}  cache={resp['cache']} "
+          "(epoch moved; never served stale)")
+
+    # a budget too small to finish comes back typed on the wire
+    status, resp = _post(base, "/query",
+                         {**queries["water"], "timeout_ms": 0.001})
+    print(f"[deadline] HTTP {status}  error_type={resp['error_type']}")
+
+    status, stats = _post(base, "/query", queries["water"])  # warm again
+    with urllib.request.urlopen(base + "/stats", timeout=60) as r:
+        summary = json.loads(r.read())
+    print(f"[stats] served={summary['served']} "
+          f"cache_hits={summary['cache']['hits']} "
+          f"hit_rate={summary['cache']['hit_rate']:.2f} "
+          f"stale_hits={summary['cache']['stale_hits']} "
+          f"http_2xx={summary['http']['http_2xx']}")
+    t0 = time.perf_counter()
+    fe.close()
+    server.close()
+    print(f"[shutdown] drained in {time.perf_counter() - t0:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -528,6 +528,19 @@ class SegmentedCatalog:
     def epoch(self) -> int:
         return self._snap.epoch
 
+    def durability_snapshot(self) -> Optional[dict]:
+        """Consistent durability ledger: (lsn, WAL/checkpoint stats)
+        captured under the mutation lock — appends/deletes assign the
+        LSN and write the WAL record inside that lock, so reading both
+        fields locked can never observe a torn pair (an lsn from after
+        a mutation with stats from before it). None for non-durable
+        catalogs. The serving layer publishes this in ``summary()``."""
+        with self._lock:
+            if self.persist is None:
+                return None
+            return {"sync": self.persist.sync, "lsn": self._lsn,
+                    **dict(self.persist.stats)}
+
     def append(self, features: np.ndarray) -> np.ndarray:
         """Seal ``features`` into a new delta segment; returns the new
         rows' global ids (the tail range — append order IS id order).

@@ -1,18 +1,23 @@
+from repro.serve.cache import ResultCache
 from repro.serve.engine import (IngestRequest, QueryRequest, QueryResponse,
                                 QueryServer, merge_shard_results)
 from repro.serve.faults import FaultInjector, FaultSpec
-from repro.serve.policy import (AdmissionQueue, CompactionFailed,
-                                DeadlineExceeded, EngineError, Overloaded,
-                                PersistenceError, RateLimited, RecoveryError,
-                                RetryPolicy, ServerClosed, TokenBucket,
+from repro.serve.http import HttpFrontEnd
+from repro.serve.policy import (ERROR_STATUS, AdmissionQueue,
+                                CompactionFailed, DeadlineExceeded,
+                                EngineError, Overloaded, PersistenceError,
+                                RateLimited, RecoveryError, RetryPolicy,
+                                ServerClosed, TokenBucket,
                                 TransientDeviceError, deadline_after,
-                                deadline_remaining)
+                                deadline_remaining, http_status_for)
 
 __all__ = ["QueryRequest", "QueryResponse", "IngestRequest", "QueryServer",
            "merge_shard_results",
+           "ResultCache", "HttpFrontEnd",
            "FaultInjector", "FaultSpec",
            "AdmissionQueue", "RetryPolicy", "TokenBucket",
            "EngineError", "DeadlineExceeded", "TransientDeviceError",
            "CompactionFailed", "PersistenceError", "RecoveryError",
            "Overloaded", "RateLimited", "ServerClosed",
+           "ERROR_STATUS", "http_status_for",
            "deadline_after", "deadline_remaining"]

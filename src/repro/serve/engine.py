@@ -40,6 +40,7 @@ import numpy as np
 from repro.core.engine import MODELS, QueryResult, SearchEngine
 from repro.core.errors import (DeadlineExceeded, check_deadline,
                                deadline_after)
+from repro.serve.cache import ResultCache, request_key
 from repro.serve.policy import (AdmissionQueue, Overloaded, RateLimited,
                                 RetryPolicy, ServerClosed, TokenBucket)
 
@@ -127,6 +128,11 @@ class QueryServer:
         (core seams take theirs via ``SearchEngine(faults=...)``);
         defaults to the engine's injector so ``close`` can release
         parked hangs.
+      * ``cache`` — a ``repro.serve.cache.ResultCache``: repeat queries
+        serve from memory, bitwise-equal to the uncached answer, keyed
+        on (sorted labels, model, effective kwargs, catalog epoch,
+        compaction generation) so any ingest makes prior entries
+        unreachable — never served stale (DESIGN.md §16).
     """
 
     def __init__(self, engine: SearchEngine, *, max_batch: int = 8,
@@ -140,8 +146,10 @@ class QueryServer:
                  compaction_retry: Optional[RetryPolicy] = None,
                  degraded_max_results: Optional[int] = None,
                  soft_depth_frac: float = 0.75,
-                 faults=None):
+                 faults=None,
+                 cache: Optional[ResultCache] = None):
         self.engine = engine
+        self.cache = cache
         self.max_batch = max_batch
         self.batch_window_s = batch_window_s
         self.max_results = max_results
@@ -197,7 +205,8 @@ class QueryServer:
                       "retries": 0, "batch_fallbacks": 0,
                       "compaction_errors": 0, "compaction_retries": 0,
                       "degraded_windows": 0,
-                      "checkpoints": 0, "checkpoint_errors": 0}
+                      "checkpoints": 0, "checkpoint_errors": 0,
+                      "cache_served": 0}
 
     def _bump(self, key: str, v=1) -> None:
         """Locked stats increment — submit runs on caller threads and the
@@ -206,6 +215,17 @@ class QueryServer:
         with self._stats_lock:
             self.stats[key] += v
 
+    def _bump_many(self, updates: Dict) -> None:
+        """Locked batch update for the serving hot loop: one lock
+        acquisition applies a whole request's (or window's) ledger
+        delta. Every stats mutation routes through here or ``_bump`` —
+        dict ``+=`` is read-modify-write, and unlocked bumps on the
+        serving thread racing ``submit``/``_compact_worker`` silently
+        drift the DESIGN.md §14 ledger invariant."""
+        with self._stats_lock:
+            for k, v in updates.items():
+                self.stats[k] += v
+
     def _fault(self, site: str) -> None:
         if self.faults is not None:
             self.faults.check(site)
@@ -213,15 +233,17 @@ class QueryServer:
     def _note_score_memory(self, st: Dict) -> None:
         """Fold one result's device score-memory figures into the
         server-wide high-water marks (batch_* or plain namespacing —
-        whichever the result carries)."""
+        whichever the result carries). Locked: a max-merge is a
+        read-modify-write like any other stats mutation."""
         peak = st.get("batch_score_buffer_bytes_peak",
                       st.get("score_buffer_bytes_peak", 0))
-        self.stats["score_buffer_bytes_peak"] = max(
-            self.stats["score_buffer_bytes_peak"], int(peak))
         eq = st.get("batch_dense_score_bytes_equiv",
                     st.get("dense_score_bytes_equiv", 0))
-        self.stats["dense_score_bytes_equiv"] = max(
-            self.stats["dense_score_bytes_equiv"], int(eq))
+        with self._stats_lock:
+            self.stats["score_buffer_bytes_peak"] = max(
+                self.stats["score_buffer_bytes_peak"], int(peak))
+            self.stats["dense_score_bytes_equiv"] = max(
+                self.stats["dense_score_bytes_equiv"], int(eq))
 
     def _query_kwargs(self, req: QueryRequest) -> Dict:
         kw = dict(req.kwargs)
@@ -236,21 +258,79 @@ class QueryServer:
         return kw
 
     # ------------------------------------------------------------------
+    # result cache (DESIGN.md §16)
+    # ------------------------------------------------------------------
+    def _epoch_geom(self) -> Tuple[int, int]:
+        """The catalog-state tail of every cache key: (mutation epoch,
+        compaction generation). Static engines are permanently (0, 0) —
+        their catalog never changes, so their entries never go stale."""
+        cat = getattr(self.engine, "_catalog", None)
+        if cat is None:
+            return 0, 0
+        s = cat.snapshot()
+        return int(s.epoch), int(getattr(s, "geom", 0))
+
+    def _cache_key(self, req: QueryRequest, kw: Dict):
+        """Full cache key for ``req`` under the CURRENT catalog state,
+        or None (caching off / uncacheable kwargs). ``kw`` must be the
+        EFFECTIVE kwargs (serving defaults + degraded clamp applied) —
+        two requests that would run differently must key differently."""
+        if self.cache is None:
+            return None
+        rk = request_key(req.pos_ids, req.neg_ids, req.model, kw)
+        if rk is None:
+            self.cache.note_bypass()
+            return None
+        return ResultCache.full_key(rk, *self._epoch_geom())
+
+    def _cache_lookup(self, req: QueryRequest, kw: Dict):
+        """(key, cached QueryResult or None). The key is computed BEFORE
+        the query runs so a store after it can cross-check that no
+        mutation landed in between (``ResultCache.put`` refuses the
+        insert when the epoch moved — never-stale by construction)."""
+        key = self._cache_key(req, kw)
+        if key is None:
+            return None, None
+        return key, self.cache.get(key)
+
+    def _cache_store(self, key, result) -> None:
+        if self.cache is None or key is None:
+            return
+        ep, gm = self._epoch_geom()
+        self.cache.put(key, result, current_epoch=ep, current_geom=gm)
+
+    def _cache_invalidate(self) -> None:
+        """Eagerly reclaim entries stranded by a catalog mutation; the
+        epoch in the key already made them unreachable."""
+        if self.cache is not None:
+            self.cache.invalidate_epoch(*self._epoch_geom())
+
+    def _cache_hit_response(self, req: QueryRequest, cached,
+                            t0: float) -> QueryResponse:
+        resp = QueryResponse(req.request_id, True, cached,
+                             latency_s=time.perf_counter() - t0,
+                             info={"cache": "hit"})
+        self._bump_many({"served": 1, "cache_served": 1,
+                         "latency_sum": resp.latency_s})
+        return resp
+
+    # ------------------------------------------------------------------
     def handle_ingest(self, req: IngestRequest) -> QueryResponse:
         """Apply one live-catalog mutation (engine must be live=True).
         Returns an ack response whose ``info`` carries the op's outcome
         (append -> the new rows' global ids). Per-request error
         isolation: a bad ingest never takes down the server."""
         t0 = time.perf_counter()
+        upd: Dict = {}
         try:
             if req.op == "append":
                 ids = self.engine.append(req.features)
                 info = {"op": "append", "ids": ids, "rows": int(len(ids))}
-                self.stats["rows_appended"] += int(len(ids))
+                upd["rows_appended"] = int(len(ids))
             elif req.op == "delete":
                 nd = self.engine.delete(req.ids)
                 info = {"op": "delete", "rows": nd}
-                self.stats["rows_deleted"] += nd
+                upd["rows_deleted"] = nd
             elif req.op == "compact":
                 # the heavy merge runs OFF the serving loop (the whole
                 # point of background compaction — a synchronous rebuild
@@ -267,7 +347,7 @@ class QueryServer:
                     self._compact_thread = threading.Thread(
                         target=self._compact_worker, daemon=True)
                     self._compact_thread.start()
-                self.stats["compactions"] += 1
+                upd["compactions"] = 1
             elif req.op == "checkpoint":
                 # durable snapshot (DESIGN.md §15): runs synchronously in
                 # the ingest slot — it reads an immutable (snapshot, lsn)
@@ -276,9 +356,14 @@ class QueryServer:
                 # recovery to mutations after this point.
                 ck = self.engine.checkpoint()
                 info = {"op": "checkpoint", **ck}
-                self.stats["checkpoints"] += 1
+                upd["checkpoints"] = 1
             else:
                 raise ValueError(f"unknown ingest op {req.op!r}")
+            if req.op in ("append", "delete", "compact"):
+                # the mutation bumped the catalog epoch (compaction will,
+                # at swap time) — prior cache entries are unreachable by
+                # key; reclaim their bytes eagerly
+                self._cache_invalidate()
             resp = QueryResponse(req.request_id, True, None,
                                  latency_s=time.perf_counter() - t0,
                                  info=info)
@@ -286,11 +371,12 @@ class QueryServer:
             resp = QueryResponse(req.request_id, False, None, f"{e}",
                                  time.perf_counter() - t0,
                                  error_type=_error_type(e))
-            self.stats["ingest_errors"] += 1
+            upd["ingest_errors"] = 1
             if req.op == "checkpoint":
-                self.stats["checkpoint_errors"] += 1
-        self.stats["ingests"] += 1
-        self.stats["ingest_s_sum"] += resp.latency_s
+                upd["checkpoint_errors"] = 1
+        upd["ingests"] = 1
+        upd["ingest_s_sum"] = resp.latency_s
+        self._bump_many(upd)
         return resp
 
     def _compact_worker(self) -> None:
@@ -304,6 +390,9 @@ class QueryServer:
             self.compaction_retry.call(
                 self.engine.compact,
                 on_retry=lambda a, e: self._bump("compaction_retries"))
+            # the swap bumped (epoch, geom): reclaim the stranded
+            # pre-compaction cache entries now that it actually happened
+            self._cache_invalidate()
         except Exception as e:  # noqa: BLE001 — worker must not die loudly
             self._bump("compaction_errors")
             self._last_compaction_error = f"{e}"
@@ -313,9 +402,16 @@ class QueryServer:
 
     def handle(self, req: QueryRequest) -> QueryResponse:
         t0 = time.perf_counter()
+        # per-request ledger delta, applied in ONE locked batch below —
+        # ``submit`` (caller threads) and the compaction worker bump
+        # concurrently, and dict += is read-modify-write
+        upd: Dict = {}
         try:
             check_deadline(req.deadline_s, "window formation")
             kw = self._query_kwargs(req)
+            key, cached = self._cache_lookup(req, kw)
+            if cached is not None:
+                return self._cache_hit_response(req, cached, t0)
 
             def run():
                 return self.engine.query(req.pos_ids, req.neg_ids,
@@ -329,19 +425,20 @@ class QueryServer:
                 res = run()
             resp = QueryResponse(req.request_id, True, res,
                                  latency_s=time.perf_counter() - t0)
-            self.stats["host_bytes"] += res.stats.get(
-                "host_bytes_transferred", 0)
+            upd["host_bytes"] = res.stats.get("host_bytes_transferred", 0)
             self._note_score_memory(res.stats)
-            self.stats["fit_s_sum"] += res.train_time_s
-            self.stats["sharded_queries"] += \
-                1 if res.stats.get("n_shards", 1) > 1 else 0
+            upd["fit_s_sum"] = res.train_time_s
+            if res.stats.get("n_shards", 1) > 1:
+                upd["sharded_queries"] = 1
+            self._cache_store(key, res)
         except Exception as e:  # noqa: BLE001 — per-request isolation
             resp = QueryResponse(req.request_id, False, None, f"{e}",
                                  time.perf_counter() - t0,
                                  error_type=_error_type(e))
-        self.stats["served"] += 1
-        self.stats["errors"] += 0 if resp.ok else 1
-        self.stats["latency_sum"] += resp.latency_s
+        upd["served"] = 1
+        upd["errors"] = 0 if resp.ok else 1
+        upd["latency_sum"] = resp.latency_s
+        self._bump_many(upd)
         return resp
 
     @staticmethod
@@ -358,26 +455,60 @@ class QueryServer:
     def handle_batch(self, reqs: List[QueryRequest]) -> List[QueryResponse]:
         """Answer a batching-window's worth of requests together.
 
-        Multi-request batches go through SearchEngine.query_batch: all
-        concurrent index-path queries share ONE fused device call per
-        feature subset (per-box ownership map de-muxes counts per query),
-        so the batching window buys device efficiency instead of just
-        queueing. Per-request error isolation is preserved — query_batch
-        returns the raised exception for a failed request — and an
-        unexpected batch-wide failure falls back to sequential handling
-        (``batch_fallbacks``), billing the failed attempt's wall time to
-        the requests that paid it instead of dropping it. A batch-wide
-        ``DeadlineExceeded`` short-circuits: every request in the window
-        shares the deadline that expired, so retrying them sequentially
-        would only bill more device time to dead requests.
+        With a result cache, a pre-pass serves every request whose key
+        is resident (the window shrinks to the misses — repeat queries
+        never pay device time); the remainder goes through
+        SearchEngine.query_batch: all concurrent index-path queries
+        share ONE fused device call per feature subset (per-box
+        ownership map de-muxes counts per query), so the batching window
+        buys device efficiency instead of just queueing. Per-request
+        error isolation is preserved — query_batch returns the raised
+        exception for a failed request — and an unexpected batch-wide
+        failure falls back to sequential handling (``batch_fallbacks``),
+        billing the failed attempt's wall time to the requests that paid
+        it instead of dropping it. A batch-wide ``DeadlineExceeded``
+        short-circuits: every request in the window shares the deadline
+        that expired, so retrying them sequentially would only bill more
+        device time to dead requests.
         """
         if len(reqs) == 1:
-            self.stats["batches"] += 1
+            self._bump("batches")
+            return [self.handle(reqs[0])]
+        if self.cache is not None:
+            t0 = time.perf_counter()
+            hits: Dict[int, QueryResponse] = {}
+            misses: List[QueryRequest] = []
+            for i, r in enumerate(reqs):
+                _, cached = self._cache_lookup(r, self._query_kwargs(r))
+                if cached is not None:
+                    hits[i] = self._cache_hit_response(r, cached, t0)
+                else:
+                    misses.append(r)
+            if hits:
+                if not misses:
+                    return [hits[i] for i in range(len(reqs))]
+                sub = iter(self._handle_batch_engine(misses))
+                return [hits[i] if i in hits else next(sub)
+                        for i in range(len(reqs))]
+        return self._handle_batch_engine(reqs)
+
+    def _handle_batch_engine(self, reqs: List[QueryRequest],
+                             ) -> List[QueryResponse]:
+        """The uncached window path: one query_batch device call, stats
+        applied as ONE locked delta per window (the hot loop's batched
+        ledger update — see ``_bump_many``)."""
+        if len(reqs) == 1:
+            self._bump("batches")
             return [self.handle(reqs[0])]
         t0 = time.perf_counter()
         window_dl = self._window_deadline(reqs)
+        kws = [self._query_kwargs(r) for r in reqs]
         batch = [{"pos_ids": r.pos_ids, "neg_ids": r.neg_ids,
-                  "model": r.model, **self._query_kwargs(r)} for r in reqs]
+                  "model": r.model, **kw} for r, kw in zip(reqs, kws)]
+        # cache keys computed BEFORE the device phase: a mutation landing
+        # mid-window moves the epoch and the store-time cross-check in
+        # ResultCache.put refuses the insert (never-stale)
+        keys = [self._cache_key(r, kw) for r, kw in zip(reqs, kws)]
 
         def run():
             return self.engine.query_batch(batch, deadline_s=window_dl)
@@ -390,31 +521,31 @@ class QueryServer:
                 outs = run()
         except DeadlineExceeded as e:
             wall = time.perf_counter() - t0
-            resps = []
-            for r in reqs:
-                resps.append(QueryResponse(r.request_id, False, None,
-                                           f"{e}", wall,
-                                           error_type=_error_type(e)))
-                self.stats["served"] += 1
-                self.stats["errors"] += 1
-                self.stats["latency_sum"] += wall
+            resps = [QueryResponse(r.request_id, False, None, f"{e}",
+                                   wall, error_type=_error_type(e))
+                     for r in reqs]
+            self._bump_many({"served": len(reqs), "errors": len(reqs),
+                             "latency_sum": wall * len(reqs)})
             return resps
         except Exception:  # noqa: BLE001 — never take down the batch
             # sequential fallback: each request retried alone. The failed
             # batch attempt's wall time was REAL latency for every
             # request in the window — bill it, don't drop it.
-            self.stats["batch_fallbacks"] += 1
+            self._bump("batch_fallbacks")
             wasted = time.perf_counter() - t0
             resps = [self.handle(r) for r in reqs]
             for resp in resps:
                 resp.latency_s += wasted
-                self.stats["latency_sum"] += wasted
+            self._bump_many({"latency_sum": wasted * len(resps)})
             return resps
-        self.stats["batches"] += 1
         wall = time.perf_counter() - t0
         resps = []
+        upd: Dict = {"batches": 1, "batched_queries": len(reqs),
+                     "served": len(reqs), "errors": 0, "latency_sum": 0.0,
+                     "fit_s_sum": 0.0, "host_bytes": 0,
+                     "sharded_queries": 0}
         batch_bytes_counted = False
-        for r, out in zip(reqs, outs):
+        for r, key, out in zip(reqs, keys, outs):
             expired = None
             if not isinstance(out, Exception):
                 try:     # per-request deadline re-check at de-mux
@@ -433,26 +564,26 @@ class QueryServer:
                                      latency_s=wall)
                 # per-request fit shares sum to the window's fit wall
                 # (engine bills the shared batched fit evenly)
-                self.stats["fit_s_sum"] += out.train_time_s
+                upd["fit_s_sum"] += out.train_time_s
                 # batch_* aggregates describe the SHARED device phase —
                 # count them once per batch, not once per request
                 if "batch_host_bytes_transferred" in out.stats:
                     if not batch_bytes_counted:
-                        self.stats["host_bytes"] += out.stats[
+                        upd["host_bytes"] += out.stats[
                             "batch_host_bytes_transferred"]
                         batch_bytes_counted = True
                 else:
-                    self.stats["host_bytes"] += out.stats.get(
+                    upd["host_bytes"] += out.stats.get(
                         "host_bytes_transferred", 0)
                 self._note_score_memory(out.stats)
-                self.stats["sharded_queries"] += 1 if out.stats.get(
-                    "batch_n_shards", out.stats.get("n_shards", 1)) > 1 \
-                    else 0
-            self.stats["served"] += 1
-            self.stats["errors"] += 0 if resp.ok else 1
-            self.stats["latency_sum"] += resp.latency_s
+                if out.stats.get("batch_n_shards",
+                                 out.stats.get("n_shards", 1)) > 1:
+                    upd["sharded_queries"] += 1
+                self._cache_store(key, out)
+            upd["errors"] += 0 if resp.ok else 1
+            upd["latency_sum"] += resp.latency_s
             resps.append(resp)
-        self.stats["batched_queries"] += len(reqs)
+        self._bump_many(upd)
         return resps
 
     # ------------------------------------------------------------------
@@ -537,18 +668,26 @@ class QueryServer:
     def _pop_live(self, timeout: float):
         """Next queue item whose deadline hasn't already expired; expired
         requests resolve immediately with a typed response (window
-        formation checkpoint — queue wait burned their budget)."""
-        item = self._next_item(timeout)
-        if item is None:
-            return None
-        req, out = item
-        if isinstance(req, QueryRequest) and req.deadline_s is not None \
-                and time.monotonic() > req.deadline_s:
-            self._bump("expired_in_queue")
-            self._reject(out, req, DeadlineExceeded(
-                "deadline expired while queued"))
-            return self._pop_live(0)   # try the next entry, don't wait
-        return item
+        formation checkpoint — queue wait burned their budget).
+
+        ITERATIVE on purpose: an open-loop overload against an unbounded
+        queue piles up thousands of already-expired entries, and popping
+        them by recursion blew the interpreter stack (RecursionError on
+        the serving thread — every caller stranded). The loop drains an
+        arbitrarily deep expired backlog in constant stack."""
+        while True:
+            item = self._next_item(timeout)
+            if item is None:
+                return None
+            req, out = item
+            if isinstance(req, QueryRequest) and req.deadline_s is not None \
+                    and time.monotonic() > req.deadline_s:
+                self._bump("expired_in_queue")
+                self._reject(out, req, DeadlineExceeded(
+                    "deadline expired while queued"))
+                timeout = 0     # try the next entry, don't wait
+                continue
+            return item
 
     def _update_health(self) -> None:
         """Degraded when the queue is above the soft-depth watermark —
@@ -561,7 +700,7 @@ class QueryServer:
         self._degraded = len(self._q) >= max(
             1, int(qd * self.soft_depth_frac))
         if self._degraded:
-            self.stats["degraded_windows"] += 1
+            self._bump("degraded_windows")
 
     def _loop(self):
         """Batching loop with ingest interleaving: ingests apply BETWEEN
@@ -614,6 +753,18 @@ class QueryServer:
             # a fast close must not wait out injected hangs
             self.faults.release()
         if self._thread is not None:
+            if drain and self.faults is not None:
+                # drain promises a REAL answer to everything queued, but
+                # an injected hang parks the serving thread mid-request;
+                # once the queue is empty the only thing between us and
+                # the join is that sleep — release it (a hang is a delay
+                # seam, not a failure: the parked request still gets its
+                # real answer) instead of eating the full join timeout.
+                dl = time.monotonic() + 30.0
+                while time.monotonic() < dl and (
+                        len(self._q) > 0 or self._held is not None):
+                    time.sleep(0.002)
+                self.faults.release()
             self._thread.join(timeout=30.0 if drain else 2.0)
             if self._thread.is_alive():
                 self._stop.set()
@@ -648,36 +799,44 @@ class QueryServer:
         return "ok"
 
     def summary(self) -> Dict:
-        served = max(self.stats["served"], 1)
-        out = {**self.stats,
+        # one locked copy: summary readers race the serving thread's
+        # batched updates, and a dict comprehension over a mutating dict
+        # can tear mid-ledger
+        with self._stats_lock:
+            stats = dict(self.stats)
+        served = max(stats["served"], 1)
+        out = {**stats,
                "health": self.health,
                "queue_depth_peak": self._q.depth_peak,
                "last_compaction_error": self._last_compaction_error,
                "n_shards": getattr(self.engine, "n_shards", 1),
                "live": getattr(self.engine, "live", False),
-               "mean_latency_s": self.stats["latency_sum"] / served,
-               "mean_fit_s": self.stats["fit_s_sum"] / served,
-               "mean_ingest_s": (self.stats["ingest_s_sum"]
-                                 / max(self.stats["ingests"], 1)),
+               "mean_latency_s": stats["latency_sum"] / served,
+               "mean_fit_s": stats["fit_s_sum"] / served,
+               "mean_ingest_s": (stats["ingest_s_sum"]
+                                 / max(stats["ingests"], 1)),
                # sparse serving headroom: peak device score bytes as a
                # fraction of what the dense [N, Q] buffer would need
                "score_buffer_frac_of_dense": (
-                   self.stats["score_buffer_bytes_peak"]
-                   / max(self.stats["dense_score_bytes_equiv"], 1))}
+                   stats["score_buffer_bytes_peak"]
+                   / max(stats["dense_score_bytes_equiv"], 1))}
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
         cat = getattr(self.engine, "_catalog", None)
         if cat is not None:
-            out["epoch"] = cat.epoch
             snap = cat.snapshot()
+            out["epoch"] = snap.epoch
             out["n_segments"] = len(snap.segments)
             out["rows_live"] = snap.live_rows
             out["rows_tombstoned"] = snap.n - snap.live_rows
             # durability ledger (DESIGN.md §15): WAL records/bytes/fsyncs
             # this process has billed, so an operator can see the per-
-            # append durability overhead next to the serving latencies
-            persist = getattr(cat, "persist", None)
-            if persist is not None:
-                out["durable"] = {"sync": persist.sync,
-                                  "lsn": cat._lsn, **persist.stats}
+            # append durability overhead next to the serving latencies —
+            # read as ONE locked pair (lsn, stats): a concurrent append
+            # must not yield an lsn from after it with stats from before
+            dur = cat.durability_snapshot()
+            if dur is not None:
+                out["durable"] = dur
         rec = getattr(self.engine, "recovery", None)
         if rec is not None:
             out["recovery"] = {

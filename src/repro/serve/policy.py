@@ -37,7 +37,8 @@ __all__ = ["EngineError", "DeadlineExceeded", "TransientDeviceError",
            "CompactionFailed", "PersistenceError", "RecoveryError",
            "Overloaded", "RateLimited", "ServerClosed",
            "check_deadline", "deadline_after", "deadline_remaining",
-           "RetryPolicy", "TokenBucket", "AdmissionQueue", "SHED_POLICIES"]
+           "RetryPolicy", "TokenBucket", "AdmissionQueue", "SHED_POLICIES",
+           "ERROR_STATUS", "http_status_for"]
 
 
 class Overloaded(EngineError):
@@ -57,6 +58,33 @@ class ServerClosed(EngineError):
     """The server is draining or closed: queued work is being resolved,
     new work is refused."""
     code = "shutdown"
+
+
+# ----------------------------------------------------------------------
+# error-type -> HTTP status mapping (DESIGN.md §16)
+# ----------------------------------------------------------------------
+# The wire contract the HTTP front end translates the typed taxonomy
+# through. Policy lives HERE (with the taxonomy) so serve/http.py stays
+# pure transport and a future multi-host front end maps identically:
+#   rate_limited      -> 429  the client is over ITS budget; back off
+#   overloaded        -> 503  the SERVER is over budget; retry later
+#   shutdown          -> 503  draining — same client action as overload
+#   deadline_exceeded -> 504  the request's own budget expired upstream
+# Everything else (bad labels, internal faults) is a 500: the request
+# was accepted and failed, not shed.
+ERROR_STATUS = {
+    "rate_limited": 429,
+    "overloaded": 503,
+    "shutdown": 503,
+    "deadline_exceeded": 504,
+}
+
+
+def http_status_for(error_type: str, default: int = 500) -> int:
+    """HTTP status for a ``QueryResponse.error_type`` tag ('' -> 200)."""
+    if not error_type:
+        return 200
+    return ERROR_STATUS.get(error_type, default)
 
 
 # ----------------------------------------------------------------------

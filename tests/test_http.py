@@ -1,0 +1,302 @@
+"""HTTP front end (ISSUE 9 / DESIGN.md §16): real-socket end-to-end.
+
+Contracts pinned here:
+  * ``POST /query`` over a real TCP socket returns the SAME answer as a
+    direct ``engine.query`` call — ids and scores bitwise-equal through
+    the JSON round trip;
+  * the typed error taxonomy maps to the wire contract: rate_limited ->
+    429, overloaded/shutdown -> 503 (+ Retry-After), deadline_exceeded
+    -> 504, transport errors -> 400/404/405;
+  * ``timeout_ms`` becomes an absolute monotonic deadline AT ADMISSION;
+  * a repeated query serves from the cache (flagged, bitwise-equal) and
+    ``POST /ingest`` invalidates — ``stale_hits`` stays 0 on the wire;
+  * ``GET /healthz`` flips to 503 when draining; ``GET /stats`` carries
+    the server summary plus cache and HTTP ledgers, JSON-clean;
+  * HTTP/1.1 keep-alive serves several requests per connection.
+"""
+import contextlib
+import json
+import socket
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.engine import SearchEngine
+from repro.serve.cache import ResultCache
+from repro.serve.engine import QueryServer
+from repro.serve.http import HttpFrontEnd, jsonable
+
+ENG = dict(n_subsets=4, subset_dim=4, block=64)
+
+
+def _data(n=500, d=16, seed=0):
+    return np.random.default_rng(seed).normal(
+        0, 1, (n, d)).astype(np.float32)
+
+
+def _labels():
+    return list(range(10)), list(range(100, 150))
+
+
+@pytest.fixture(scope="module")
+def base_x():
+    return _data()
+
+
+@contextlib.contextmanager
+def _serving(srv, start_engine=True):
+    """Front end over ``srv`` on an ephemeral port -> base URL."""
+    if start_engine:
+        srv.start()
+    fe = HttpFrontEnd(srv)
+    host, port = fe.start()
+    try:
+        yield f"http://{host}:{port}", fe
+    finally:
+        fe.close()
+        srv.close(drain=False)
+
+
+def _post(base, path, body, timeout=120):
+    req = urllib.request.Request(
+        base + path, data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"}, method="POST")
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, json.loads(r.read()), dict(r.headers)
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read()), dict(e.headers)
+
+
+def _get(base, path, timeout=30):
+    try:
+        with urllib.request.urlopen(base + path, timeout=timeout) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+# ----------------------------------------------------------------------
+# end-to-end correctness
+# ----------------------------------------------------------------------
+
+def test_query_bitwise_matches_direct_engine(base_x):
+    eng = SearchEngine(base_x, **ENG, live=True)
+    pos, neg = _labels()
+    want = eng.query(pos, neg, model="dbranch", max_results=30)
+    with _serving(QueryServer(eng, max_results=30)) as (base, _):
+        status, body, _ = _post(base, "/query",
+                                {"pos_ids": pos, "neg_ids": neg})
+        assert status == 200 and body["ok"]
+        # bitwise through the JSON round trip: float64 carries every
+        # float32 exactly, so casting back reproduces the device answer
+        np.testing.assert_array_equal(
+            np.asarray(body["ids"], dtype=want.ids.dtype), want.ids)
+        np.testing.assert_array_equal(
+            np.asarray(body["scores"], dtype=want.scores.dtype),
+            want.scores)
+        assert body["n_found"] == want.n_found
+        assert body["model"] == "dbranch"
+        assert body["e2e_ms"] >= body["latency_ms"] >= 0
+
+
+def test_cached_repeat_bitwise_and_ingest_invalidates(base_x):
+    eng = SearchEngine(base_x, **ENG, live=True)
+    srv = QueryServer(eng, max_results=30, cache=ResultCache())
+    pos, neg = _labels()
+    q = {"pos_ids": pos, "neg_ids": neg}
+    with _serving(srv) as (base, _):
+        s1, b1, _ = _post(base, "/query", q)
+        s2, b2, _ = _post(base, "/query", q)
+        assert (s1, s2) == (200, 200)
+        assert b1["cache"] == "miss" and b2["cache"] == "hit"
+        assert b2["ids"] == b1["ids"] and b2["scores"] == b1["scores"]
+        si, bi, _ = _post(base, "/ingest",
+                          {"op": "append",
+                           "features": _data(4, seed=7).tolist()})
+        assert si == 200 and bi["info"]["rows"] == 4
+        assert bi["info"]["ids"] == [500, 501, 502, 503]
+        s3, b3, _ = _post(base, "/query", q)
+        assert s3 == 200 and b3["cache"] == "miss"   # epoch moved
+        st, summary = _get(base, "/stats")
+        assert st == 200
+        assert summary["cache"]["stale_hits"] == 0   # never served stale
+        assert summary["cache"]["hits"] == 1
+        assert summary["cache_served"] == 1
+
+
+def test_delete_and_compact_over_http(base_x):
+    eng = SearchEngine(base_x, **ENG, live=True)
+    srv = QueryServer(eng, max_results=10, cache=ResultCache())
+    with _serving(srv) as (base, _):
+        s, b, _ = _post(base, "/ingest", {"op": "delete", "ids": [5, 6]})
+        assert s == 200 and b["info"]["rows"] == 2
+        s, b, _ = _post(base, "/ingest", {"op": "compact"})
+        assert s == 200 and b["info"]["background"]
+        s, b, _ = _post(base, "/query",
+                        {"pos_ids": [0, 1, 2], "neg_ids": [100, 101]})
+        assert s == 200
+        assert 5 not in b["ids"] and 6 not in b["ids"]
+
+
+# ----------------------------------------------------------------------
+# typed rejections -> HTTP statuses
+# ----------------------------------------------------------------------
+
+def test_deadline_maps_to_504(base_x):
+    eng = SearchEngine(base_x, **ENG)
+    with _serving(QueryServer(eng)) as (base, _):
+        pos, neg = _labels()
+        status, body, _ = _post(base, "/query",
+                                {"pos_ids": pos, "neg_ids": neg,
+                                 "timeout_ms": 0.001})
+        assert status == 504
+        assert body["error_type"] == "deadline_exceeded"
+        assert not body["ok"]
+
+
+def test_overloaded_maps_to_503_with_retry_after(base_x):
+    eng = SearchEngine(base_x, **ENG)
+    srv = QueryServer(eng, queue_depth=1)
+    # fill the admission queue OUT OF BAND (server not started, so the
+    # queued request just sits there); the HTTP request is then shed
+    parked = srv.submit(_req(0))
+    with _serving(srv, start_engine=False) as (base, _):
+        status, body, headers = _post(base, "/query",
+                                      {"pos_ids": [0], "neg_ids": [100]})
+        assert status == 503
+        assert body["error_type"] == "overloaded"
+        assert headers.get("Retry-After") == "1"
+    assert parked.get(timeout=5).error_type == "shutdown"
+
+
+def test_rate_limited_maps_to_429(base_x):
+    eng = SearchEngine(base_x, **ENG)
+    srv = QueryServer(eng, rate_limit=(0.001, 1))  # one-shot bucket
+    with _serving(srv) as (base, _):
+        q = {"pos_ids": [0, 1], "neg_ids": [100, 101]}
+        s1, _, _ = _post(base, "/query", q)
+        s2, body, headers = _post(base, "/query", q)
+        assert s1 == 200 and s2 == 429
+        assert body["error_type"] == "rate_limited"
+        assert headers.get("Retry-After") == "1"
+        # a different source has its own bucket
+        s3, _, _ = _post(base, "/query", {**q, "source": "other"})
+        assert s3 == 200
+
+
+def test_shutdown_maps_to_503_and_healthz_drains(base_x):
+    eng = SearchEngine(base_x, **ENG)
+    srv = QueryServer(eng)
+    with _serving(srv) as (base, _):
+        assert _get(base, "/healthz") == (200, {"ok": True,
+                                                "health": "ok"})
+        srv.close()
+        status, body, _ = _post(base, "/query",
+                                {"pos_ids": [0], "neg_ids": [100]})
+        assert status == 503 and body["error_type"] == "shutdown"
+        hs, hb = _get(base, "/healthz")
+        assert hs == 503 and hb["health"] == "draining"
+
+
+def _req(i):
+    from repro.serve.engine import QueryRequest
+    return QueryRequest(i, *_labels())
+
+
+# ----------------------------------------------------------------------
+# transport errors
+# ----------------------------------------------------------------------
+
+def test_transport_rejections(base_x):
+    eng = SearchEngine(base_x, **ENG)
+    with _serving(QueryServer(eng)) as (base, _):
+        assert _get(base, "/nope")[0] == 404
+        assert _get(base, "/query")[0] == 405      # GET on a POST route
+        s, b, _ = _post(base, "/healthz", {})
+        assert s == 405
+        s, b, _ = _post(base, "/query", {"pos_ids": [0],
+                                         "neg_ids": [1], "bogus": 2})
+        assert s == 400 and "bogus" in b["error"]
+        s, b, _ = _post(base, "/query", {"pos_ids": "zero",
+                                         "neg_ids": [1]})
+        assert s == 400 and b["error_type"] == "bad_request"
+        s, b, _ = _post(base, "/query", {"pos_ids": [0], "neg_ids": [1],
+                                         "timeout_ms": -5})
+        assert s == 400
+        s, b, _ = _post(base, "/ingest", {"op": "explode"})
+        assert s == 400
+        # malformed JSON via a raw socket (urllib insists on bytes anyway)
+        host, port = base[7:].split(":")
+        with socket.create_connection((host, int(port)), timeout=10) as c:
+            c.sendall(b"POST /query HTTP/1.1\r\nContent-Length: 9\r\n"
+                      b"Connection: close\r\n\r\nnot json!")
+            reply = c.recv(65536).decode()
+        assert reply.startswith("HTTP/1.1 400")
+
+
+def test_keep_alive_serves_multiple_requests(base_x):
+    eng = SearchEngine(base_x, **ENG)
+    with _serving(QueryServer(eng)) as (base, fe):
+        host, port = base[7:].split(":")
+        body = json.dumps({"pos_ids": [0, 1], "neg_ids": [100]}).encode()
+        head = (f"POST /query HTTP/1.1\r\nHost: x\r\n"
+                f"Content-Length: {len(body)}\r\n\r\n").encode()
+        with socket.create_connection((host, int(port)), timeout=120) as c:
+            f = c.makefile("rb")
+            for _ in range(3):             # same connection, 3 requests
+                c.sendall(head + body)
+                status_line = f.readline().decode()
+                assert status_line.startswith("HTTP/1.1 200")
+                clen = 0
+                while True:
+                    line = f.readline()
+                    if line in (b"\r\n", b""):
+                        break
+                    k, _, v = line.decode().partition(":")
+                    if k.strip().lower() == "content-length":
+                        clen = int(v)
+                payload = json.loads(f.read(clen))
+                assert payload["ok"]
+        stats = fe.http_stats()
+        assert stats["by_route"]["/query"] == 3
+        assert stats["http_2xx"] == 3
+
+
+def test_stats_route_is_json_clean(base_x):
+    eng = SearchEngine(base_x, **ENG, live=True)
+    srv = QueryServer(eng, max_results=10, cache=ResultCache())
+    with _serving(srv) as (base, _):
+        _post(base, "/query", {"pos_ids": [0, 1], "neg_ids": [100, 101]})
+        status, s = _get(base, "/stats")   # json.loads already proved it
+        assert status == 200
+        assert s["served"] == 1 and s["epoch"] == 0
+        assert s["http"]["http_requests"] >= 1
+        assert s["cache"]["entries"] == 1
+        # the admitted ledger holds over the wire too
+        assert s["admitted"] == s["served"] + s["ingests"] + \
+            s["expired_in_queue"] + s["evicted"] + s["shutdown_unserved"]
+
+
+def test_jsonable_sanitises_numpy():
+    blob = {"a": np.arange(3, dtype=np.int32),
+            "b": np.float32(1.5), "c": (np.int64(2), [np.bool_(True)]),
+            "d": {"nested": np.float64(0.25)}, "e": None}
+    out = json.loads(json.dumps(jsonable(blob)))
+    assert out == {"a": [0, 1, 2], "b": 1.5, "c": [2, [True]],
+                   "d": {"nested": 0.25}, "e": None}
+
+
+def test_front_end_close_is_idempotent(base_x):
+    eng = SearchEngine(base_x, **ENG)
+    srv = QueryServer(eng)
+    srv.start()
+    fe = HttpFrontEnd(srv)
+    fe.start()
+    fe.close()
+    fe.close()                             # double close is a no-op
+    srv.close()
+    with pytest.raises(RuntimeError):
+        fe.start()                         # a front end is single-use

@@ -1,0 +1,288 @@
+"""Epoch-keyed result cache (ISSUE 9 / DESIGN.md §16).
+
+Contracts pinned here:
+  * a cache hit is BITWISE the uncached result — same ids, same scores,
+    same dtypes — and the response is flagged so callers can tell;
+  * any catalog mutation (append / delete / compact) makes every prior
+    entry unreachable: the next identical query misses, recomputes on
+    the new state, and ``stale_hits`` stays 0 — never served stale;
+  * a mutation landing between key computation and the query finishing
+    refuses the insert (``stale_skips``) instead of caching a new-state
+    result under an old-state key;
+  * LRU eviction enforces both the entry bound and the byte bound on
+    every insert;
+  * uncacheable kwargs bypass the cache instead of poisoning it.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import SearchEngine
+from repro.serve.cache import ResultCache, request_key, result_nbytes
+from repro.serve.engine import IngestRequest, QueryRequest, QueryServer
+
+ENG = dict(n_subsets=4, subset_dim=4, block=64)
+
+
+def _data(n=500, d=16, seed=0):
+    return np.random.default_rng(seed).normal(
+        0, 1, (n, d)).astype(np.float32)
+
+
+def _labels():
+    return list(range(10)), list(range(100, 150))
+
+
+class _FakeResult:
+    """Minimal stand-in carrying the byte-accounted arrays."""
+
+    def __init__(self, n=8, seed=0):
+        rng = np.random.default_rng(seed)
+        self.ids = rng.integers(0, 1000, n).astype(np.int32)
+        self.scores = rng.random(n).astype(np.float32)
+
+
+# ----------------------------------------------------------------------
+# key canonicalisation
+# ----------------------------------------------------------------------
+
+def test_request_key_is_order_insensitive():
+    a = request_key([3, 1, 2], [9, 7], "dbranch", {"max_results": 10})
+    b = request_key([1, 2, 3], [7, 9], "dbranch", {"max_results": 10})
+    assert a == b
+    # numpy ids canonicalise to the same ints
+    c = request_key(np.array([2, 3, 1]), np.array([7, 9]), "dbranch",
+                    {"max_results": np.int64(10)})
+    assert c == a
+
+
+def test_request_key_distinguishes_what_matters():
+    base = request_key([1], [2], "dbranch", {"max_results": 10})
+    assert request_key([1], [2], "rf", {"max_results": 10}) != base
+    assert request_key([1], [2], "dbranch", {"max_results": 20}) != base
+    assert request_key([1, 3], [2], "dbranch", {"max_results": 10}) != base
+    # kwarg ORDER does not matter, presence/value does
+    assert request_key([1], [2], "dbranch",
+                       {"seed": 0, "max_results": 10}) == \
+        request_key([1], [2], "dbranch",
+                    {"max_results": 10, "seed": 0})
+
+
+def test_request_key_bypasses_uncacheable_kwargs():
+    assert request_key([1], [2], "dbranch",
+                       {"callback": lambda: None}) is None
+    # lists/tuples/numpy scalars ARE cacheable
+    assert request_key([1], [2], "dbranch",
+                       {"opts": [1, 2, (3, "x")]}) is not None
+
+
+def test_full_key_tail_and_nbytes():
+    rk = request_key([1], [2], "dbranch", {})
+    k = ResultCache.full_key(rk, 7, 3)
+    assert k[-2:] == (7, 3) and k[:-2] == rk
+    r = _FakeResult(n=16)
+    assert result_nbytes(r) == r.ids.nbytes + r.scores.nbytes + 256
+
+
+# ----------------------------------------------------------------------
+# LRU + byte accounting
+# ----------------------------------------------------------------------
+
+def test_lru_evicts_by_entry_count():
+    c = ResultCache(max_entries=2)
+    rks = [ResultCache.full_key(request_key([i], [], "m", {}), 0, 0)
+           for i in range(3)]
+    results = [_FakeResult(seed=i) for i in range(3)]
+    c.put(rks[0], results[0])
+    c.put(rks[1], results[1])
+    assert c.get(rks[0]) is results[0]     # touch 0: 1 becomes LRU tail
+    c.put(rks[2], results[2])
+    assert c.get(rks[1]) is None           # evicted
+    assert c.get(rks[0]) is results[0]
+    assert c.get(rks[2]) is results[2]
+    assert c.counters["evictions"] == 1
+    assert len(c) == 2
+
+
+def test_lru_evicts_by_bytes():
+    one = result_nbytes(_FakeResult())
+    c = ResultCache(max_bytes=2 * one)     # room for exactly two
+    for i in range(3):
+        c.put(ResultCache.full_key(request_key([i], [], "m", {}), 0, 0),
+              _FakeResult(seed=i))
+    assert len(c) == 2
+    assert c.nbytes == 2 * one
+    assert c.counters["evictions"] == 1
+    st = c.stats()
+    assert st["bytes"] == 2 * one and st["entries"] == 2
+
+
+def test_put_replaces_without_double_billing():
+    c = ResultCache()
+    k = ResultCache.full_key(request_key([1], [], "m", {}), 0, 0)
+    c.put(k, _FakeResult(seed=0))
+    nb = c.nbytes
+    c.put(k, _FakeResult(seed=1))          # same key, new payload
+    assert c.nbytes == nb and len(c) == 1
+
+
+# ----------------------------------------------------------------------
+# staleness defence-in-depth
+# ----------------------------------------------------------------------
+
+def test_put_refuses_insert_after_epoch_moved():
+    c = ResultCache()
+    k = ResultCache.full_key(request_key([1], [], "m", {}), 5, 0)
+    # the catalog moved to epoch 6 while the query ran
+    assert not c.put(k, _FakeResult(), current_epoch=6, current_geom=0)
+    assert len(c) == 0 and c.counters["stale_skips"] == 1
+    # matching state inserts fine
+    assert c.put(k, _FakeResult(), current_epoch=5, current_geom=0)
+
+
+def test_invalidate_epoch_reclaims_dead_entries():
+    c = ResultCache()
+    old = ResultCache.full_key(request_key([1], [], "m", {}), 1, 0)
+    new = ResultCache.full_key(request_key([2], [], "m", {}), 2, 0)
+    c.put(old, _FakeResult(seed=0))
+    c.put(new, _FakeResult(seed=1))
+    assert c.invalidate_epoch(2, 0) == 1
+    assert len(c) == 1 and c.get(new) is not None
+    assert c.counters["stale_evictions"] == 1
+    assert c.nbytes == result_nbytes(_FakeResult(seed=1))
+
+
+def test_get_cross_checks_stored_tail():
+    c = ResultCache()
+    k = ResultCache.full_key(request_key([1], [], "m", {}), 3, 0)
+    r = _FakeResult()
+    c.put(k, r)
+    r._cache_tail = (2, 0)                 # simulate a keying bug
+    assert c.get(k) is None
+    assert c.counters["stale_hits"] == 1
+
+
+# ----------------------------------------------------------------------
+# server integration: bitwise hits, never-stale across mutations
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def base_x():
+    return _data()
+
+
+def _cached_server(x):
+    eng = SearchEngine(x, **ENG, live=True)
+    return eng, QueryServer(eng, max_results=30, cache=ResultCache())
+
+
+def test_cache_hit_is_bitwise_uncached(base_x):
+    eng, srv = _cached_server(base_x)
+    pos, neg = _labels()
+    miss = srv.handle(QueryRequest(0, pos, neg))
+    hit = srv.handle(QueryRequest(1, pos, neg))
+    assert miss.ok and hit.ok
+    assert miss.info.get("cache") != "hit"
+    assert hit.info.get("cache") == "hit"
+    np.testing.assert_array_equal(miss.result.ids, hit.result.ids)
+    np.testing.assert_array_equal(miss.result.scores, hit.result.scores)
+    assert miss.result.ids.dtype == hit.result.ids.dtype
+    assert miss.result.scores.dtype == hit.result.scores.dtype
+    # ...and bitwise the answer a cache-free server computes
+    clean = SearchEngine(base_x, **ENG)
+    want = clean.query(pos, neg, model="dbranch", max_results=30)
+    np.testing.assert_array_equal(hit.result.ids, want.ids)
+    np.testing.assert_array_equal(hit.result.scores, want.scores)
+    assert srv.stats["cache_served"] == 1
+    assert srv.cache.stats()["stale_hits"] == 0
+
+
+@pytest.mark.parametrize("op,kw", [
+    ("append", dict(features=_data(8, seed=3))),
+    ("delete", dict(ids=[400])),
+    ("compact", dict()),
+])
+def test_every_mutation_invalidates(base_x, op, kw):
+    eng, srv = _cached_server(base_x)
+    if op in ("delete", "compact"):
+        eng.append(_data(8, seed=9))       # something to delete/merge
+        srv._cache_invalidate()
+    pos, neg = _labels()
+    first = srv.handle(QueryRequest(0, pos, neg))
+    assert srv.handle(QueryRequest(1, pos, neg)).info.get("cache") == "hit"
+    rc = srv.handle_ingest(IngestRequest(2, op, **kw))
+    assert rc.ok
+    if op == "compact":
+        srv._compact_thread.join(timeout=30)
+        srv._cache_invalidate()
+    # prior entries are unreachable AND reclaimed; the re-query misses,
+    # recomputes on the new catalog state, and is internally consistent
+    assert len(srv.cache) == 0
+    again = srv.handle(QueryRequest(3, pos, neg))
+    assert again.ok and again.info.get("cache") != "hit"
+    rehit = srv.handle(QueryRequest(4, pos, neg))
+    assert rehit.ok and rehit.info.get("cache") == "hit"
+    np.testing.assert_array_equal(again.result.ids, rehit.result.ids)
+    st = srv.cache.stats()
+    assert st["stale_hits"] == 0           # NEVER served stale
+    assert st["stale_evictions"] >= 1
+
+
+def test_batch_window_serves_hits_and_misses(base_x):
+    eng, srv = _cached_server(base_x)
+    pos, neg = _labels()
+    warm = srv.handle(QueryRequest(0, pos, neg))
+    reqs = [QueryRequest(1, pos, neg),                  # hit
+            QueryRequest(2, list(range(5)), neg),      # miss
+            QueryRequest(3, pos, neg)]                  # hit
+    resps = srv.handle_batch(reqs)
+    assert [r.info.get("cache") == "hit" for r in resps] == \
+        [True, False, True]
+    np.testing.assert_array_equal(resps[0].result.ids, warm.result.ids)
+    np.testing.assert_array_equal(resps[2].result.ids, warm.result.ids)
+    assert all(r.ok for r in resps)
+    # the all-hits window never touches the engine
+    resps2 = srv.handle_batch([QueryRequest(4, pos, neg),
+                               QueryRequest(5, list(range(5)), neg)])
+    assert all(r.info.get("cache") == "hit" for r in resps2)
+
+
+def test_degraded_clamp_keys_differently(base_x):
+    """Effective kwargs are in the key: a degraded window's clamped
+    answer must not serve a full-width request later (and vice versa)."""
+    eng = SearchEngine(base_x, **ENG)
+    srv = QueryServer(eng, max_results=30, queue_depth=8,
+                      degraded_max_results=5, cache=ResultCache())
+    pos, neg = _labels()
+    full = srv.handle(QueryRequest(0, pos, neg))
+    srv._degraded = True
+    clamped = srv.handle(QueryRequest(1, pos, neg))
+    assert clamped.info.get("cache") != "hit"      # different key
+    assert len(clamped.result.ids) == 5
+    srv._degraded = False
+    again = srv.handle(QueryRequest(2, pos, neg))
+    assert again.info.get("cache") == "hit"
+    assert len(again.result.ids) == len(full.result.ids)
+
+
+def test_uncacheable_kwargs_bypass(base_x):
+    eng, srv = _cached_server(base_x)
+    pos, neg = _labels()
+    r = srv.handle(QueryRequest(0, pos, neg,
+                                kwargs={"max_results": {"bad": 1}}))
+    assert not r.ok                        # engine rejects it anyway...
+    assert srv.cache.stats()["bypassed"] >= 1   # ...but cache never keyed
+    assert len(srv.cache) == 0
+
+
+def test_summary_publishes_cache_block(base_x):
+    eng, srv = _cached_server(base_x)
+    pos, neg = _labels()
+    srv.handle(QueryRequest(0, pos, neg))
+    srv.handle(QueryRequest(1, pos, neg))
+    s = srv.summary()
+    assert s["cache"]["hits"] == 1
+    assert s["cache"]["hit_rate"] == pytest.approx(0.5)
+    assert s["cache_served"] == 1
+    assert "stale_hits" in s["cache"] and s["cache"]["stale_hits"] == 0
+    # a cache-free server publishes no cache block
+    assert "cache" not in QueryServer(eng).summary()

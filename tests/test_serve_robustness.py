@@ -474,3 +474,185 @@ def test_batch_deadline_exceeded_short_circuits(base_x):
     assert all(r.error_type == "deadline_exceeded" for r in resps)
     assert srv.stats["batch_fallbacks"] == 0      # no pointless retry
     assert srv.stats["errors"] == 2
+
+
+# ----------------------------------------------------------------------
+# serving-thread stat races + expired-backlog recursion (ISSUE 9)
+# ----------------------------------------------------------------------
+
+class _InstantResult:
+    """Microsecond stand-in for QueryResult: the hammer and backlog
+    tests exercise the SERVER's bookkeeping, not the device path."""
+
+    def __init__(self):
+        self.ids = np.arange(4, dtype=np.int32)
+        self.scores = np.ones(4, dtype=np.float32)
+        self.train_time_s = 0.0
+        self.query_time_s = 0.0
+        self.stats = {"host_bytes_transferred": 32}
+
+
+class _InstantEngine:
+    """Duck-typed engine answering immediately on the serving thread."""
+    live = True
+
+    def __init__(self):
+        self._next = 1000
+        self._lock = threading.Lock()
+
+    def query(self, pos, neg, model="dbranch", deadline_s=None, **kw):
+        return _InstantResult()
+
+    def query_batch(self, batch, deadline_s=None):
+        return [_InstantResult() for _ in batch]
+
+    def append(self, feats):
+        with self._lock:
+            lo = self._next
+            self._next += len(feats)
+        return np.arange(lo, lo + len(feats))
+
+
+def _ledger_holds(stats):
+    """DESIGN.md §14: every admitted request lands in exactly one
+    terminal bucket. EXACT equality — a race that loses one locked
+    increment breaks this."""
+    return stats["admitted"] == (stats["served"] + stats["ingests"]
+                                 + stats["expired_in_queue"]
+                                 + stats["evicted"]
+                                 + stats["shutdown_unserved"])
+
+
+def test_stats_ledger_exact_under_hammer():
+    """Many submit threads race the serving thread (and each other)
+    across every admission outcome — admitted, overloaded, evicted,
+    rate-limit-free expiry, ingests — for 100 server lifetimes. With
+    any unlocked ``stats[k] += v`` on these paths the exact ledger
+    equality fails within a few iterations."""
+    n_threads, per_thread = 6, 20
+    for it in range(100):
+        srv = QueryServer(_InstantEngine(), max_batch=4,
+                          batch_window_s=0.0005, queue_depth=24,
+                          shed_policy="reject-largest-fit")
+        srv.start()
+        outs, outs_lock = [], threading.Lock()
+
+        def worker(tid, srv=srv, outs=outs, outs_lock=outs_lock):
+            rng = np.random.default_rng(tid)
+            local = []
+            for j in range(per_thread):
+                rid = tid * 1000 + j
+                draw = rng.random()
+                if draw < 0.2:
+                    req = IngestRequest(
+                        rid, "append",
+                        features=np.zeros((2, 4), np.float32))
+                elif draw < 0.4:   # expires at admission or in queue
+                    req = QueryRequest(rid, [0], [1],
+                                       deadline_s=deadline_after(0.001))
+                else:              # varied cost: exercises eviction
+                    n = int(rng.integers(1, 30))
+                    req = QueryRequest(rid, list(range(n)), [100])
+                local.append(srv.submit(req))
+            with outs_lock:
+                outs.extend(local)
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        srv.close(drain=bool(it % 2))     # alternate both close modes
+        resps = [o.get(timeout=10) for o in outs]
+        assert len(resps) == n_threads * per_thread   # all resolved
+        s = srv.summary()
+        assert _ledger_holds(s), f"iteration {it}: ledger drifted: {s}"
+        # and every submit landed in exactly one admission bucket
+        assert len(resps) == (s["admitted"] + s["rejected_overloaded"]
+                              + s["rejected_rate_limited"]
+                              + s["rejected_deadline"]
+                              + s["submit_faults"])
+
+
+def test_expired_backlog_resolves_iteratively():
+    """5,000 already-expired requests queued ahead of a live one: the
+    serving thread must drain them ALL with typed responses in constant
+    stack. The old recursive ``_pop_live`` blew the interpreter's
+    ~1000-frame recursion limit here, killing the serving thread and
+    stranding every later request."""
+    srv = QueryServer(_InstantEngine())
+    dl = deadline_after(2.0)
+    outs = [srv.submit(QueryRequest(i, [0], [1], deadline_s=dl))
+            for i in range(5000)]
+    while time.monotonic() <= dl:
+        time.sleep(0.01)                  # the whole backlog is now dead
+    srv.start()
+    live = srv.submit(QueryRequest(9999, [0], [1]))
+    resps = [o.get(timeout=GET_S) for o in outs]
+    assert all(r.error_type == "deadline_exceeded" for r in resps)
+    assert srv.stats["expired_in_queue"] == 5000
+    # the serving thread survived the drain and still serves
+    assert srv._thread.is_alive()
+    assert live.get(timeout=GET_S).ok
+    assert _ledger_holds(srv.summary())
+    srv.close()
+
+
+def test_close_drain_releases_parked_hang(base_x):
+    """close(drain=True) with a request parked on an injected hang:
+    once the queue is empty the drain path releases the injector, so
+    the parked request resolves with its REAL answer and close returns
+    in query-time, not hang-time (60 s) or join-timeout (30 s)."""
+    SearchEngine(base_x, **ENG).query(*_labels(), model="dbranch")
+    inj = FaultInjector(specs=[FaultSpec("fused_query", action="hang",
+                                         at_calls=(1,), delay_s=60.0)])
+    eng = SearchEngine(base_x, **ENG, faults=inj)
+    srv = QueryServer(eng)                # srv.faults defaults to inj
+    out = srv.submit(QueryRequest(0, *_labels()))
+    srv.start()
+    time.sleep(0.3)                       # let the thread park on the hang
+    t0 = time.monotonic()
+    srv.close(drain=True)
+    elapsed = time.monotonic() - t0
+    r = out.get(timeout=5)
+    assert r.ok                           # a hang is a delay, not a failure
+    assert elapsed < 15.0, f"drain-close took {elapsed:.1f}s"
+    assert srv.stats["served"] == 1
+    assert srv.stats["shutdown_unserved"] == 0
+
+
+def test_durability_snapshot_is_locked_pair(base_x, tmp_path):
+    """summary() reads (lsn, wal stats) as ONE locked pair via
+    ``SegmentedCatalog.durability_snapshot`` — a concurrent append must
+    never yield an lsn from after it with stats from before."""
+    eng = SearchEngine(base_x, **ENG, live=True,
+                       data_dir=str(tmp_path / "cat"))
+    srv = QueryServer(eng)
+    cat = eng._catalog
+    assert cat.durability_snapshot()["lsn"] == cat._lsn
+    stop = threading.Event()
+    torn = []
+
+    def reader():
+        while not stop.is_set():
+            s = srv.summary()["durable"]
+            # wal_records counts every logged mutation; lsn is assigned
+            # from it under the same lock — a torn read shows records
+            # from after an append paired with the lsn from before
+            if s["wal_records"] != s["lsn"]:
+                torn.append(s)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    for i in range(100):
+        eng.append(_data(2, seed=i))
+    stop.set()
+    t.join()
+    assert torn == []
+    assert srv.summary()["durable"]["lsn"] == 100
+    # engines without persistence publish no durable block
+    plain = SearchEngine(base_x, **ENG, live=True)
+    assert plain._catalog.durability_snapshot() is None
+    assert "durable" not in QueryServer(plain).summary()
+    srv.close()
