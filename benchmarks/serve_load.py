@@ -47,6 +47,8 @@ import numpy as np
 from benchmarks.common import emit, emit_json, make_engine, query_sets
 from benchmarks.query_time import validate_bench_json
 from repro.data.synthetic import CLASS_IDS
+from repro.obs import Observability
+from repro.obs import profile as obs_profile
 from repro.serve.cache import ResultCache
 from repro.serve.engine import QueryRequest, QueryServer
 from repro.serve.http import HttpFrontEnd
@@ -55,14 +57,26 @@ OUT_JSON = "BENCH_serve.json"
 
 # keys every serve-load row must carry — the CI chaos/http jobs fail
 # loudly when the artifact drops one (same gate as the query-time
-# artifacts). http / http_p99_ms / cache_hit_rate are zero-filled on
-# in-process rows so the artifact stays one uniform table.
+# artifacts). http / http_p99_ms / cache_hit_rate / stage_frac_* /
+# obs_overhead_ratio are zero-filled on rows that don't measure them so
+# the artifact stays one uniform table.
 SERVE_REQUIRED_KEYS = (
     "name", "us_per_call", "offered_qps", "achieved_qps", "p50_ms",
     "p99_ms", "p999_ms", "served_ok", "errors", "rejected",
     "rejection_rate", "admission", "queue_depth_peak", "knee_qps",
     "http", "http_p99_ms", "cache_hit_rate", "n",
+    "stage_frac_fit", "stage_frac_device", "stage_frac_rank",
+    "stage_frac_other", "obs_overhead_ratio",
 )
+
+# zero-fill for cells that don't run the observability measurements
+OBS_ZERO = {"stage_frac_fit": 0.0, "stage_frac_device": 0.0,
+            "stage_frac_rank": 0.0, "stage_frac_other": 0.0,
+            "obs_overhead_ratio": 0.0}
+
+# the CI gate (DESIGN.md §17): metrics + tracing enabled may not cost
+# more than 10% of over-the-wire p99 next to both disabled
+OBS_OVERHEAD_MAX = 1.1
 
 # the saturation knee: a mode's p99 has left the idle regime when it
 # exceeds KNEE_FACTOR x the p99 of that mode's LOWEST offered-QPS cell
@@ -151,6 +165,106 @@ def _drive_http(base: str, bodies: List[Dict],
     return done
 
 
+def _stage_fracs(obs: Observability) -> Dict[str, float]:
+    """Where traced wall time went, as fractions of total request wall:
+    fit / device rounds / rank from the ``span_seconds`` histograms,
+    'other' the remainder (queue wait, cache, de-mux, wire). Read from
+    the same registry ``GET /metrics`` scrapes — one source of truth."""
+    reg = obs.registry
+    total = sum(v for name, _, _, v in reg.collect()
+                if name == "request_seconds_sum")
+    if total <= 0:
+        return {k: 0.0 for k in OBS_ZERO if k != "obs_overhead_ratio"}
+    fit = reg.value("span_seconds_sum", name="fit")
+    dev = reg.value("span_seconds_sum", name="device_round")
+    rank = reg.value("span_seconds_sum", name="rank")
+    return {"stage_frac_fit": round(fit / total, 4),
+            "stage_frac_device": round(dev / total, 4),
+            "stage_frac_rank": round(rank / total, 4),
+            "stage_frac_other": round(
+                max(0.0, 1.0 - (fit + dev + rank) / total), 4)}
+
+
+def _run_obs_overhead_row(engine, labels, classes, qps: float,
+                          duration: float, n: int) -> Dict:
+    """Price the observability layer itself: the same uncached HTTP
+    workload at the idle-regime QPS, once with metrics + tracing enabled
+    and once with both disabled, best-of-2 p99 per arm (run-to-run jit /
+    scheduler noise mitigation). ``obs_overhead_ratio`` = enabled p99 /
+    disabled p99 — the CI gate asserts it stays <= OBS_OVERHEAD_MAX."""
+    count = max(int(qps * duration), 16)
+    bodies = []
+    for i in range(count):
+        pos, neg = query_sets(labels, classes[i % len(classes)],
+                              12, 60, seed=200 + i % 16)
+        bodies.append({"pos_ids": [int(p) for p in pos],
+                       "neg_ids": [int(g) for g in neg]})
+    p99 = {}
+    fracs = dict(OBS_ZERO)
+    row_stats: Dict = {}
+    for tag, enabled in (("on", True), ("off", False)):
+        best = None
+        for _rep in range(2):
+            obs = Observability(metrics_enabled=enabled,
+                                tracing_enabled=enabled)
+            if not enabled:
+                # the profile flag is process-global and a previously
+                # constructed enabled server leaves it on — the disabled
+                # baseline must really run the null contexts
+                obs_profile.set_enabled(False)
+            server = QueryServer(
+                engine, max_results=100, max_batch=8, queue_depth=16,
+                shed_policy="reject-newest", default_deadline_s=5.0,
+                degraded_max_results=25, soft_depth_frac=0.5, obs=obs)
+            server.start()
+            fe = HttpFrontEnd(server)
+            host, port = fe.start()
+            done = _drive_http(f"http://{host}:{port}", bodies, qps)
+            wall = max(d["e2e_s"] for d in done) if done else 1.0
+            fe.close()
+            server.close()
+            ok_lat = [d["e2e_s"] for d in done if d["ok"]]
+            p = _percentile_ms(ok_lat, 99)
+            if best is None or p < best:
+                best = p
+                if enabled:
+                    st = server.stats
+                    fracs.update(_stage_fracs(obs))
+                    row_stats = {
+                        "us_per_call": round(1e6 * float(
+                            np.median(ok_lat)), 1) if ok_lat else 0.0,
+                        "achieved_qps": round(
+                            sum(1 for d in done if d["ok"]) / wall, 2),
+                        "p50_ms": _percentile_ms(ok_lat, 50),
+                        "p999_ms": _percentile_ms(ok_lat, 99.9),
+                        "served_ok": sum(1 for d in done if d["ok"]),
+                        "errors": st["errors"],
+                        "rejected": sum(st[k] for k in REJECT_KEYS),
+                        "queue_depth_peak":
+                            server.summary()["queue_depth_peak"],
+                    }
+        p99[tag] = best
+    obs_profile.set_enabled(True)      # later cells expect it back on
+    ratio = round(p99["on"] / max(p99["off"], 1e-9), 4)
+    return {
+        "name": "serve_load/obs/overhead",
+        "offered_qps": qps,
+        "p99_ms": p99["on"],
+        "rejection_rate": round(
+            row_stats.get("rejected", 0) / max(len(bodies), 1), 4),
+        "admission": 1,
+        "knee_qps": 0.0,
+        "http": 1,
+        "http_p99_ms": p99["on"],
+        "http_p99_ms_obs_off": p99["off"],
+        "cache_hit_rate": 0.0,
+        "n": n,
+        **row_stats,
+        **fracs,
+        "obs_overhead_ratio": ratio,
+    }
+
+
 def _run_http_rows(engine, labels, classes, qps_levels, duration: float,
                    n: int) -> List[Dict]:
     """The over-the-wire cells: an admission-controlled server behind
@@ -220,6 +334,10 @@ def _run_http_rows(engine, labels, classes, qps_levels, duration: float,
                 "cache_hit_rate": round(cache_stats["hit_rate"], 4),
                 "cache_served": st["cache_served"],
                 "n": n,
+                # device-phase attribution from the server's own
+                # registry (obs is on by default for these cells)
+                **_stage_fracs(server.obs),
+                "obs_overhead_ratio": 0.0,
             })
             if len(done) != count:
                 raise SystemExit(
@@ -235,9 +353,31 @@ def _run_http_rows(engine, labels, classes, qps_levels, duration: float,
     return rows
 
 
+def check_obs_gate(path: str = OUT_JSON) -> None:
+    """The observability-overhead CI gate: every row that measured the
+    enabled/disabled pair must show enabled p99 within OBS_OVERHEAD_MAX
+    of disabled. SystemExit on violation (same loud-failure contract as
+    validate_bench_json)."""
+    with open(path) as f:
+        rows = json.load(f)
+    gated = [r for r in rows if r.get("obs_overhead_ratio", 0.0) > 0.0]
+    if not gated:
+        raise SystemExit(f"{path}: no obs-overhead row — did the "
+                         "benchmark run with the obs cell?")
+    for r in gated:
+        if r["obs_overhead_ratio"] > OBS_OVERHEAD_MAX:
+            raise SystemExit(
+                f"{path}: {r['name']} obs_overhead_ratio "
+                f"{r['obs_overhead_ratio']} > {OBS_OVERHEAD_MAX} — "
+                "metrics+tracing cost too much wire-path p99")
+    print(f"{path}: obs overhead gate ok "
+          f"({[r['obs_overhead_ratio'] for r in gated]} "
+          f"<= {OBS_OVERHEAD_MAX})")
+
+
 def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
         n: int = 5_000, verbose: bool = True, http_only: bool = False,
-        out_json: str = OUT_JSON) -> List[Dict]:
+        obs_only: bool = False, out_json: str = OUT_JSON) -> List[Dict]:
     engine, labels = make_engine(n)
     classes = [CLASS_IDS["forest"], CLASS_IDS["water"]]
 
@@ -259,7 +399,7 @@ def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
     warm.close()
 
     rows = []
-    for admission in (() if http_only else (False, True)):
+    for admission in (() if (http_only or obs_only) else (False, True)):
         mode_rows = []
         for qps in sorted(qps_levels):
             count = max(int(qps * duration), 4)
@@ -300,6 +440,8 @@ def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
                 "http_p99_ms": 0.0,
                 "cache_hit_rate": 0.0,
                 "n": n,
+                **_stage_fracs(server.obs),
+                "obs_overhead_ratio": 0.0,
             })
             # every submit resolved exactly once — the no-strand contract
             # the chaos suite pins, re-checked under real load
@@ -318,12 +460,18 @@ def run(qps_levels=(5.0, 20.0, 60.0), duration: float = 2.0,
         for r in mode_rows:
             r["knee_qps"] = knee
         rows.extend(mode_rows)
-    rows.extend(_run_http_rows(engine, labels, classes, qps_levels,
-                               duration, n))
+    if not obs_only:
+        rows.extend(_run_http_rows(engine, labels, classes, qps_levels,
+                                   duration, n))
+    # the obs-overhead cell runs in every mode: its ratio is a required
+    # artifact column the CI gate reads
+    rows.append(_run_obs_overhead_row(engine, labels, classes,
+                                      min(qps_levels), duration, n))
     if verbose:
         emit(rows, "serve_load")
         emit_json(rows, out_json)
         validate_bench_json(out_json, SERVE_REQUIRED_KEYS)
+        check_obs_gate(out_json)
     return rows
 
 
@@ -335,11 +483,15 @@ if __name__ == "__main__":
     ap.add_argument("--n", type=int, default=5_000)
     ap.add_argument("--http", action="store_true",
                     help="run only the over-the-wire cells")
+    ap.add_argument("--obs", action="store_true",
+                    help="run only the observability-overhead cell")
     ap.add_argument("--check-json", action="store_true",
-                    help="validate BENCH_serve.json keys (CI gate)")
+                    help="validate BENCH_serve.json keys + obs "
+                         "overhead gate (CI)")
     args = ap.parse_args()
     if args.check_json:
         validate_bench_json(OUT_JSON, SERVE_REQUIRED_KEYS)
+        check_obs_gate(OUT_JSON)
     else:
         run(qps_levels=tuple(args.qps), duration=args.duration, n=args.n,
-            http_only=args.http)
+            http_only=args.http, obs_only=args.obs)

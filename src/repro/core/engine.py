@@ -65,6 +65,8 @@ from repro.core.segments import (SegmentedCatalog, SegmentedZoneMapIndex,
 from repro.core.subsets import make_subsets
 from repro.core.trees import fit_decision_tree, fit_random_forest
 from repro.kernels import ops as kops
+from repro.obs import profile as obs_profile
+from repro.obs import trace as obs_trace
 
 MODELS = ("dbranch", "dbens", "dtree", "rforest", "knn")
 
@@ -388,6 +390,9 @@ class SearchEngine:
         gone stops HERE instead of burning another round of device time
         (rounds are the natural cancellation points; in-flight device
         programs are not interruptible)."""
+        # trace seam too: closes the previous device_round span and
+        # opens the next on every ambient trace (no-op untraced)
+        obs_trace.round_mark()
         self._fault("fused_query")
         check_deadline(deadline_s, "device query round")
 
@@ -458,7 +463,8 @@ class SearchEngine:
         return self._compact_now()
 
     def _compact_now(self) -> Dict:
-        st = self._catalog.compact()
+        with obs_profile.profile("compact"):
+            st = self._catalog.compact()
         self._sync_live()
         return st
 
@@ -533,6 +539,7 @@ class SearchEngine:
         (DESIGN.md §14): checked before the fit and between per-subset
         device rounds, raising a typed ``DeadlineExceeded`` instead of
         finishing work nobody is waiting for."""
+        _t_prep = time.perf_counter()
         if model not in MODELS:
             raise ValueError(f"unknown model {model!r}; choose from {MODELS}")
         check_deadline(deadline_s, "fit")
@@ -541,6 +548,10 @@ class SearchEngine:
         pos_ids = np.asarray(list(pos_ids), np.int64)
         neg_ids = np.asarray(list(neg_ids), np.int64)
         xp, xn = view.x[pos_ids], view.x[neg_ids]
+        # snapshot + label-row gather is real pre-fit wall: billed as its
+        # own span so traces account for >=90% of the request
+        obs_trace.add_span_active("prepare", _t_prep,
+                                  time.perf_counter() - _t_prep)
 
         t0 = time.perf_counter()
         if model in ("dbranch", "dbens"):
@@ -569,6 +580,7 @@ class SearchEngine:
             forest = fit_random_forest(xtr, ytr, n_trees=n_models,
                                        max_depth=max_depth, seed=seed)
         t_fit = time.perf_counter() - t0
+        obs_trace.add_span_active("fit", t0, t_fit)
 
         # ---- inference + ranking --------------------------------------
         t0 = time.perf_counter()
@@ -918,6 +930,17 @@ class SearchEngine:
 
     def _device_scores(self, jobs, nq: int, view: _EngineView,
                        deadline_s=None):
+        """Mode dispatch for the score accumulation, under a trace
+        round scope: each ``_round_checkpoint`` inside becomes one
+        ``device_round`` span on every ambient trace (including
+        overflow-retry rounds — the retries are visible per attempt).
+        The scope is a shared no-op when nothing is attached."""
+        with obs_trace.round_scope():
+            return self._device_scores_impl(jobs, nq, view,
+                                            deadline_s=deadline_s)
+
+    def _device_scores_impl(self, jobs, nq: int, view: _EngineView,
+                            deadline_s=None):
         """Answer every subset's boxes and accumulate all counts into ONE
         persistent [n, nq] device score buffer in ORIGINAL row order
         (row-major so each block's scatter update is contiguous).
@@ -957,6 +980,7 @@ class SearchEngine:
         while pending:
             self._round_checkpoint(deadline_s)
             launched = []
+            _t_disp = time.perf_counter()
             for sid, merged, owner, cap in pending:
                 index = view.indexes[sid]
                 rows3, zlo, zhi = index.device_arrays()
@@ -970,8 +994,11 @@ class SearchEngine:
                 launched.append((sid, merged, owner, cap, counts, cand,
                                  n_hit))
             # ONE batched sync covers the whole round's overflow checks
+            obs_profile.record("jit_dispatch",
+                               time.perf_counter() - _t_disp)
             self._fault("device_sync")
-            n_hits = np.asarray(jnp.stack([l[6] for l in launched]))
+            with obs_profile.profile("device_sync"):
+                n_hits = np.asarray(jnp.stack([l[6] for l in launched]))
             agg["n_host_syncs"] += 1
             agg["host_bytes_transferred"] += int(n_hits.nbytes)
             pending = []
@@ -1032,6 +1059,7 @@ class SearchEngine:
         while pending:
             self._round_checkpoint(deadline_s)
             launched = []
+            _t_disp = time.perf_counter()
             for sid, merged, owner, cap in pending:
                 sindex = self.indexes[sid]
                 lo, hi, owner_p = pad_boxes(merged.lo, merged.hi, owner)
@@ -1044,8 +1072,11 @@ class SearchEngine:
                     use_pallas=self.use_pallas)
                 launched.append((sid, merged, owner, cap, st3))
             # ONE batched sync, [3] ints per subset — flat in shard count
+            obs_profile.record("jit_dispatch",
+                               time.perf_counter() - _t_disp)
             self._fault("device_sync")
-            hit_stats = np.asarray(jnp.stack([l[4] for l in launched]))
+            with obs_profile.profile("device_sync"):
+                hit_stats = np.asarray(jnp.stack([l[4] for l in launched]))
             agg["n_host_syncs"] += 1
             agg["host_bytes_transferred"] += int(hit_stats.nbytes)
             pending = []
@@ -1101,6 +1132,7 @@ class SearchEngine:
         while pending:
             self._round_checkpoint(deadline_s)
             launched = []
+            _t_disp = time.perf_counter()
             for sid, merged, owner, cap in pending:
                 segx = view.indexes[sid]
                 lo, hi, owner_p = pad_boxes(merged.lo, merged.hi, owner)
@@ -1113,8 +1145,11 @@ class SearchEngine:
                     use_pallas=self.use_pallas)
                 launched.append((sid, merged, owner, cap, stvec))
             # ONE batched sync: [J, 1 + S] int32 for the whole round
+            obs_profile.record("jit_dispatch",
+                               time.perf_counter() - _t_disp)
             self._fault("device_sync")
-            stvecs = np.asarray(jnp.stack([l[4] for l in launched]))
+            with obs_profile.profile("device_sync"):
+                stvecs = np.asarray(jnp.stack([l[4] for l in launched]))
             agg["n_host_syncs"] += 1
             agg["host_bytes_transferred"] += int(stvecs.nbytes)
             pending = []
@@ -1200,6 +1235,7 @@ class SearchEngine:
         while pending:
             self._round_checkpoint(deadline_s)
             launched, round_parts, round_rcaps = [], [], []
+            _t_disp = time.perf_counter()
             for sid, merged, owner, cap in pending:
                 index = view.indexes[sid]
                 lo, hi, owner_p = pad_boxes(merged.lo, merged.hi, owner)
@@ -1222,8 +1258,11 @@ class SearchEngine:
                 launched.append((sid, merged, owner, cap) + probe)
             # ONE batched sync: a FIXED-width int vector per subset —
             # flat in shard count, exactly the dense cadence
+            obs_profile.record("jit_dispatch",
+                               time.perf_counter() - _t_disp)
             self._fault("device_sync")
-            stvecs = np.asarray(jnp.stack([l[7] for l in launched]))
+            with obs_profile.profile("device_sync"):
+                stvecs = np.asarray(jnp.stack([l[7] for l in launched]))
             agg["n_host_syncs"] += 1
             agg["host_bytes_transferred"] += int(stvecs.nbytes)
             pending = []
@@ -1334,6 +1373,7 @@ class SearchEngine:
         while pending:
             self._round_checkpoint(deadline_s)
             launched = []
+            _t_disp = time.perf_counter()
             for sid, merged, owner, cap in pending:
                 index = view.indexes[sid]
                 lo, hi, owner_p = pad_boxes(merged.lo, merged.hi, owner)
@@ -1345,8 +1385,11 @@ class SearchEngine:
                                                   capacity=cap)
                 launched.append((sid, merged, owner, cap, gids, cmask,
                                  st, lo_d, hi_d, onehot))
+            obs_profile.record("jit_dispatch",
+                               time.perf_counter() - _t_disp)
             self._fault("device_sync")
-            stvecs = np.asarray(jnp.stack([l[6] for l in launched]))
+            with obs_profile.profile("device_sync"):
+                stvecs = np.asarray(jnp.stack([l[6] for l in launched]))
             agg["n_host_syncs"] += 1
             agg["host_bytes_transferred"] += int(stvecs.nbytes)
             pending = []
@@ -1498,14 +1541,22 @@ class SearchEngine:
             ids, scores = self._rank(counts, pos_ids, neg_ids,
                                      include_training)
             return ids, scores, stats    # query() applies the mr cut
+        _t_prep = time.perf_counter()
         if isinstance(boxsets, tuple) and boxsets[0] == "device":
             _, lo_c, hi_c, ent = boxsets
             jobs, bound = self._make_jobs_flat(
                 [(lo_c, hi_c, g, sid, cnt, 0) for g, sid, cnt in ent], 1)
         else:
             jobs, bound = self._make_jobs([(bs, 0) for bs in boxsets], 1)
+        # job assembly (per-subset grouping, device slicing) sits between
+        # fit and the first device round: billed so it never reads as an
+        # unexplained gap in the trace
+        obs_trace.add_span_active("prepare", _t_prep,
+                                  time.perf_counter() - _t_prep,
+                                  {"jobs": len(jobs)})
         scores_dev, stats = self._device_scores(jobs, 1, view,
                                                 deadline_s=deadline_s)
+        _t_rank = time.perf_counter()
         if mr is None:
             counts = self._scores_to_host(scores_dev, view)[:, 0]
             # sparse buffers cross as tiles: price what actually moved
@@ -1520,6 +1571,8 @@ class SearchEngine:
                 bound, view)
             stats["host_bytes_transferred"] += hb
             ids, scores = ranked[0]
+        obs_trace.add_span_active("rank", _t_rank,
+                                  time.perf_counter() - _t_rank)
         return ids, scores, stats
 
     # ------------------------------------------------------------------
@@ -1700,6 +1753,10 @@ class SearchEngine:
                 fitted.append((it[0], it[1], boxsets, it[2], it[3], it[4],
                                it[5], time.perf_counter() - t1))
             fit_wall = time.perf_counter() - t0
+        # the batched fit is one shared device phase: every trace in the
+        # window carries the same fit span (shared-cost attribution)
+        obs_trace.add_span_active("fit", t0, fit_wall,
+                                  {"batch": len(to_fit)})
         if not fitted:
             return results
 
@@ -1724,10 +1781,15 @@ class SearchEngine:
             # a request's boxes live entirely in one form, so per-query
             # score bounds combine by max
             jobs, bound = jobs + j2, max(bound, b2)
+        # shared assembly wall, same attribution rule as the fit span
+        obs_trace.add_span_active("prepare", t0,
+                                  time.perf_counter() - t0,
+                                  {"jobs": len(jobs)})
         scores_dev, agg = self._device_scores(jobs, nq, view,
                                               deadline_s=deadline_s)
 
         # ---- ranking ---------------------------------------------------
+        _t_rank = time.perf_counter()
         mrs = [f[6] for f in fitted]
         if all(m is not None for m in mrs):
             masks = [(pos, neg, incl)
@@ -1752,6 +1814,8 @@ class SearchEngine:
                 if m is not None:
                     ids, sc = ids[:m], sc[:m]
                 ranked.append((ids, sc))
+        obs_trace.add_span_active("rank", _t_rank,
+                                  time.perf_counter() - _t_rank)
         t_query = time.perf_counter() - t0
 
         # ---- de-mux to per-request results -----------------------------

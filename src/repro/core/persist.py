@@ -88,6 +88,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.errors import InjectedCrash, PersistenceError, RecoveryError
+from repro.obs import profile as obs_profile
 
 try:                                  # POSIX record locks (single-writer)
     import fcntl
@@ -495,7 +496,9 @@ class Persistence:
                     self._fault("wal_fsync")
                     os.fsync(f.fileno())
                     self.stats["wal_fsyncs"] += 1
-                    self.stats["wal_sync_s"] += time.perf_counter() - t0
+                    dt = time.perf_counter() - t0
+                    self.stats["wal_sync_s"] += dt
+                    obs_profile.record("wal_fsync", dt)
                 else:
                     self._wal_unsynced = True
             except InjectedCrash:
@@ -531,7 +534,9 @@ class Persistence:
                 os.fsync(self._wal_f.fileno())
                 self._wal_unsynced = False
                 self.stats["wal_fsyncs"] += 1
-                self.stats["wal_sync_s"] += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                self.stats["wal_sync_s"] += dt
+                obs_profile.record("wal_fsync", dt)
 
     def close(self) -> None:
         with self._lock:

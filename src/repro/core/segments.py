@@ -56,6 +56,7 @@ point). The machinery lives in ``core/persist.py``.
 """
 from __future__ import annotations
 
+import copy
 import functools
 import threading
 import time
@@ -538,8 +539,11 @@ class SegmentedCatalog:
         with self._lock:
             if self.persist is None:
                 return None
+            # deep copy under the lock: stats values are scalars today,
+            # but the snapshot contract is "caller owns it" — a future
+            # nested value must not hand out a live reference
             return {"sync": self.persist.sync, "lsn": self._lsn,
-                    **dict(self.persist.stats)}
+                    **copy.deepcopy(self.persist.stats)}
 
     def append(self, features: np.ndarray) -> np.ndarray:
         """Seal ``features`` into a new delta segment; returns the new

@@ -35,8 +35,11 @@ serving thread but ``summary()``/HTTP stats readers do not.
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs.metrics import AGE_BUCKETS_S, Histogram, MetricsRegistry
 
 __all__ = ["ResultCache", "request_key"]
 
@@ -100,14 +103,49 @@ class ResultCache:
         self.max_bytes = int(max_bytes)
         self.max_entries = int(max_entries)
         self._lock = threading.Lock()
-        # key -> (result, nbytes); insertion/access order == LRU order
-        self._entries: "OrderedDict[Tuple, Tuple[object, int]]" = \
-            OrderedDict()
+        # key -> [result, nbytes, inserted_at, hits]; insertion/access
+        # order == LRU order. inserted_at/hits feed the age-at-eviction
+        # histogram and the per-entry hotness report — the evidence for
+        # sizing max_bytes (are we evicting hot young entries, or cold
+        # old ones that earned their eviction?)
+        self._entries: "OrderedDict[Tuple, List]" = OrderedDict()
         self._bytes = 0
         self.counters = {"hits": 0, "misses": 0, "insertions": 0,
                          "evictions": 0, "stale_evictions": 0,
                          "stale_hits": 0, "stale_skips": 0,
                          "bypassed": 0}
+        # owned by the cache so ages are recorded from the first
+        # eviction; attach() merges it into a server's registry
+        self._age_hist = Histogram(
+            "cache_age_at_eviction_seconds",
+            "Resident age of cache entries at eviction",
+            buckets=AGE_BUCKETS_S)
+
+    def attach(self, registry: MetricsRegistry) -> None:
+        """Publish this cache through ``registry``: the counters (plus
+        occupancy and hit rate) as a scrape-time collector and the
+        age-at-eviction histogram as a first-class metric — serve_load's
+        ``cache_hit_rate`` and ``GET /metrics`` both read from here, one
+        source of truth."""
+        merged = registry.register(self._age_hist)
+        if merged is not self._age_hist:
+            # a histogram with this name already lives in the registry
+            # (e.g. two caches attached): record into the shared one
+            self._age_hist = merged
+
+        def _collect():
+            st = self.stats()
+            rate = st.pop("hit_rate")
+            ents = st.pop("entries")
+            nbytes = st.pop("bytes")
+            st.pop("max_bytes"), st.pop("max_entries")
+            for k, v in st.items():
+                yield (f"cache_{k}_total", "counter", {}, v)
+            yield ("cache_entries", "gauge", {}, ents)
+            yield ("cache_bytes", "gauge", {}, nbytes)
+            yield ("cache_hit_rate", "gauge", {}, rate)
+
+        registry.register_collector(_collect)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -126,12 +164,13 @@ class ResultCache:
             if ent is None:
                 self.counters["misses"] += 1
                 return None
-            result, _ = ent
+            result = ent[0]
             stored_tail = getattr(result, "_cache_tail", key[-2:])
             if stored_tail != key[-2:]:
                 self.counters["stale_hits"] += 1
                 return None
             self._entries.move_to_end(key)
+            ent[3] += 1
             self.counters["hits"] += 1
             return result
 
@@ -154,19 +193,24 @@ class ResultCache:
             result._cache_tail = key[-2:]   # get-time cross-check
         except AttributeError:
             pass                            # slots/frozen: key-only check
+        now = time.monotonic()
         with self._lock:
             old = self._entries.pop(key, None)
             if old is not None:
                 self._bytes -= old[1]
-            self._entries[key] = (result, nb)
+            self._entries[key] = [result, nb, now, 0]
             self._bytes += nb
             self.counters["insertions"] += 1
+            ages = []
             while self._entries and (
                     self._bytes > self.max_bytes
                     or len(self._entries) > self.max_entries):
-                _, (_, enb) = self._entries.popitem(last=False)
+                _, (_, enb, t_in, _) = self._entries.popitem(last=False)
                 self._bytes -= enb
                 self.counters["evictions"] += 1
+                ages.append(now - t_in)
+        for age in ages:    # histogram has its own lock; observe outside
+            self._age_hist.observe(age)
         return True
 
     def invalidate_epoch(self, epoch: int, geom: int) -> int:
@@ -176,13 +220,18 @@ class ResultCache:
         instead of waiting for LRU churn. Returns the entry count
         dropped; counted under ``stale_evictions``."""
         tail = (int(epoch), int(geom))
+        now = time.monotonic()
         with self._lock:
             dead = [k for k in self._entries if k[-2:] != tail]
+            ages = []
             for k in dead:
-                _, nb = self._entries.pop(k)
+                _, nb, t_in, _ = self._entries.pop(k)
                 self._bytes -= nb
+                ages.append(now - t_in)
             self.counters["stale_evictions"] += len(dead)
-            return len(dead)
+        for age in ages:
+            self._age_hist.observe(age)
+        return len(dead)
 
     def note_bypass(self) -> None:
         with self._lock:
@@ -215,3 +264,19 @@ class ResultCache:
                     "max_entries": self.max_entries,
                     "hit_rate": (self.counters["hits"] / looked
                                  if looked else 0.0)}
+
+    def entry_report(self, n: int = 10) -> List[Dict]:
+        """The ``n`` hottest resident entries (hits desc) with per-entry
+        hit counts, resident age, and byte charge — the operator view of
+        WHAT the cache is earning its memory with."""
+        now = time.monotonic()
+        with self._lock:
+            rows = [{"hits": ent[3], "age_s": now - ent[2],
+                     "nbytes": ent[1]}
+                    for ent in self._entries.values()]
+        rows.sort(key=lambda r: (-r["hits"], -r["age_s"]))
+        return rows[:max(0, int(n))]
+
+    def age_at_eviction_quantile(self, q: float) -> float:
+        """Quantile of the age-at-eviction histogram (seconds)."""
+        return self._age_hist.quantile(q)

@@ -29,6 +29,7 @@ Production notes:
 """
 from __future__ import annotations
 
+import copy
 import queue
 import threading
 import time
@@ -40,6 +41,9 @@ import numpy as np
 from repro.core.engine import MODELS, QueryResult, SearchEngine
 from repro.core.errors import (DeadlineExceeded, check_deadline,
                                deadline_after)
+from repro.obs import Observability
+from repro.obs import profile as obs_profile
+from repro.obs import trace as obs_trace
 from repro.serve.cache import ResultCache, request_key
 from repro.serve.policy import (AdmissionQueue, Overloaded, RateLimited,
                                 RetryPolicy, ServerClosed, TokenBucket)
@@ -65,6 +69,11 @@ class QueryRequest:
     deadline_s: Optional[float] = None
     # rate-limit key: each distinct source gets its own token bucket
     source: str = "default"
+    # per-query trace (repro.obs.trace.Trace), created at admission by
+    # submit()/the HTTP layer when tracing is enabled; None otherwise.
+    # Rides the request through the queue, the batch window and the
+    # engine so every stage's span lands on the right trace.
+    trace: Optional[object] = None
 
 
 @dataclass
@@ -147,7 +156,8 @@ class QueryServer:
                  degraded_max_results: Optional[int] = None,
                  soft_depth_frac: float = 0.75,
                  faults=None,
-                 cache: Optional[ResultCache] = None):
+                 cache: Optional[ResultCache] = None,
+                 obs: Optional[Observability] = None):
         self.engine = engine
         self.cache = cache
         self.max_batch = max_batch
@@ -207,6 +217,85 @@ class QueryServer:
                       "degraded_windows": 0,
                       "checkpoints": 0, "checkpoint_errors": 0,
                       "cache_served": 0}
+        # observability bundle (DESIGN.md §17): ONE registry + trace
+        # store per server. Default-on — the registry is where every
+        # layer reports; pass Observability(metrics_enabled=False,
+        # tracing_enabled=False) to measure the disabled baseline.
+        self.obs = obs if obs is not None else Observability()
+        self._h_latency = self.obs.registry.histogram(
+            "server_latency_seconds",
+            "End-to-end request latency as served (all paths)")
+        if self.obs.metrics_enabled:
+            self._register_obs_collectors()
+
+    def _register_obs_collectors(self) -> None:
+        """Absorb the existing locked counter dicts into the registry as
+        scrape-time collectors — the serving thread keeps its one-lock
+        batched ledger (``_bump_many``) and pays NOTHING extra per
+        request; ``GET /metrics`` reads the same numbers ``summary()``
+        reports (one source of truth, no mirror to drift)."""
+        reg = self.obs.registry
+        gauges = {"score_buffer_bytes_peak", "dense_score_bytes_equiv"}
+
+        def _server():
+            with self._stats_lock:
+                st = dict(self.stats)
+            for k, v in st.items():
+                yield (f"server_{k}",
+                       "gauge" if k in gauges else "counter", {}, v)
+            yield ("server_queue_depth", "gauge", {}, len(self._q))
+            yield ("server_queue_depth_peak", "gauge", {},
+                   self._q.depth_peak)
+
+        reg.register_collector(_server)
+        if self.cache is not None:
+            self.cache.attach(reg)
+        cat = getattr(self.engine, "_catalog", None)
+        if cat is not None:
+            def _durable():
+                dur = cat.durability_snapshot()
+                if not dur:
+                    return
+                for k, v in dur.items():
+                    if isinstance(v, bool) or not isinstance(
+                            v, (int, float)):
+                        continue
+                    yield (f"persist_{k}",
+                           "gauge" if k == "lsn" else "counter", {}, v)
+
+            reg.register_collector(_durable)
+
+    # ------------------------------------------------------------------
+    # per-query tracing (DESIGN.md §17)
+    # ------------------------------------------------------------------
+    def _trace_of(self, req):
+        return getattr(req, "trace", None)
+
+    def _close_queue_span(self, req) -> None:
+        """End the queue span stamped at admission. It runs from the
+        enqueue mark to HANDLE entry on the serving thread, so batch-
+        window formation wait is inside it (the trace's span sum must
+        account for the full wall — a gap between pop and dispatch
+        would be invisible time)."""
+        tr = self._trace_of(req)
+        if tr is not None:
+            tr.span_from_mark("queued", "queue")
+
+    def _finish_trace(self, req, resp: QueryResponse) -> None:
+        """Stamp the outcome, fold spans into the per-stage histograms,
+        archive in the ring (+ slow-query log), and echo the trace id
+        on the response. Idempotent via Trace.finish."""
+        tr = self._trace_of(req)
+        if tr is None:
+            return
+        tr.attrs.setdefault("request_id", req.request_id)
+        status = "ok" if resp.ok else (resp.error_type or "error")
+        self.obs.observe_trace(tr, status)
+        resp.info.setdefault("trace_id", tr.trace_id)
+
+    def _observe_latency(self, resp: QueryResponse) -> None:
+        if self.obs.metrics_enabled:
+            self._h_latency.observe(resp.latency_s)
 
     def _bump(self, key: str, v=1) -> None:
         """Locked stats increment — submit runs on caller threads and the
@@ -386,6 +475,10 @@ class QueryServer:
         per ``compaction_retry``, and on final failure records the error
         and resets the capacity-hint table — a crash mid-merge says
         nothing about the geometry the engine serves next."""
+        with obs_profile.bind_registry(self.obs.registry):
+            self._compact_worker_body()
+
+    def _compact_worker_body(self) -> None:
         try:
             self.compaction_retry.call(
                 self.engine.compact,
@@ -402,44 +495,67 @@ class QueryServer:
 
     def handle(self, req: QueryRequest) -> QueryResponse:
         t0 = time.perf_counter()
+        self._close_queue_span(req)
+        tr = self._trace_of(req)
         # per-request ledger delta, applied in ONE locked batch below —
         # ``submit`` (caller threads) and the compaction worker bump
         # concurrently, and dict += is read-modify-write
         upd: Dict = {}
-        try:
-            check_deadline(req.deadline_s, "window formation")
-            kw = self._query_kwargs(req)
-            key, cached = self._cache_lookup(req, kw)
-            if cached is not None:
-                return self._cache_hit_response(req, cached, t0)
+        # the trace rides ambient for the WHOLE body — OUTSIDE the retry
+        # wrapper, so a retried request carries fit/device-round spans
+        # for every attempt, not just the last
+        with obs_trace.attach([tr] if tr is not None else []):
+            try:
+                check_deadline(req.deadline_s, "window formation")
+                kw = self._query_kwargs(req)
+                with obs_trace.span("cache", {"op": "lookup"}):
+                    key, cached = self._cache_lookup(req, kw)
+                if cached is not None:
+                    resp = self._cache_hit_response(req, cached, t0)
+                    self._observe_latency(resp)
+                    self._finish_trace(req, resp)
+                    return resp
 
-            def run():
-                return self.engine.query(req.pos_ids, req.neg_ids,
-                                         model=req.model,
-                                         deadline_s=req.deadline_s, **kw)
-            if self.retry_policy is not None:
-                res = self.retry_policy.call(
-                    run, deadline_s=req.deadline_s,
-                    on_retry=lambda a, e: self._bump("retries"))
-            else:
-                res = run()
-            resp = QueryResponse(req.request_id, True, res,
-                                 latency_s=time.perf_counter() - t0)
-            upd["host_bytes"] = res.stats.get("host_bytes_transferred", 0)
-            self._note_score_memory(res.stats)
-            upd["fit_s_sum"] = res.train_time_s
-            if res.stats.get("n_shards", 1) > 1:
-                upd["sharded_queries"] = 1
-            self._cache_store(key, res)
-        except Exception as e:  # noqa: BLE001 — per-request isolation
-            resp = QueryResponse(req.request_id, False, None, f"{e}",
-                                 time.perf_counter() - t0,
-                                 error_type=_error_type(e))
+                def run():
+                    return self.engine.query(req.pos_ids, req.neg_ids,
+                                             model=req.model,
+                                             deadline_s=req.deadline_s,
+                                             **kw)
+                if self.retry_policy is not None:
+                    res = self.retry_policy.call(
+                        run, deadline_s=req.deadline_s,
+                        on_retry=lambda a, e: self._note_retry())
+                else:
+                    res = run()
+                resp = QueryResponse(req.request_id, True, res,
+                                     latency_s=time.perf_counter() - t0)
+                upd["host_bytes"] = res.stats.get(
+                    "host_bytes_transferred", 0)
+                self._note_score_memory(res.stats)
+                upd["fit_s_sum"] = res.train_time_s
+                if res.stats.get("n_shards", 1) > 1:
+                    upd["sharded_queries"] = 1
+                with obs_trace.span("cache", {"op": "store"}):
+                    self._cache_store(key, res)
+            except Exception as e:  # noqa: BLE001 — per-request isolation
+                resp = QueryResponse(req.request_id, False, None, f"{e}",
+                                     time.perf_counter() - t0,
+                                     error_type=_error_type(e))
         upd["served"] = 1
         upd["errors"] = 0 if resp.ok else 1
         upd["latency_sum"] = resp.latency_s
         self._bump_many(upd)
+        self._observe_latency(resp)
+        self._finish_trace(req, resp)
         return resp
+
+    def _note_retry(self) -> None:
+        """Ledger + trace marker for one transient-fault retry: the
+        zero-duration ``retry`` span makes each extra attempt visible in
+        the trace (its re-run fit/device rounds follow it)."""
+        self._bump("retries")
+        for t in obs_trace.active():
+            t.add_span("retry", time.perf_counter(), 0.0)
 
     @staticmethod
     def _window_deadline(reqs: List[QueryRequest]) -> Optional[float]:
@@ -479,9 +595,17 @@ class QueryServer:
             hits: Dict[int, QueryResponse] = {}
             misses: List[QueryRequest] = []
             for i, r in enumerate(reqs):
-                _, cached = self._cache_lookup(r, self._query_kwargs(r))
+                self._close_queue_span(r)
+                tr = self._trace_of(r)
+                with obs_trace.attach([tr] if tr is not None else []):
+                    with obs_trace.span("cache", {"op": "lookup"}):
+                        _, cached = self._cache_lookup(
+                            r, self._query_kwargs(r))
                 if cached is not None:
-                    hits[i] = self._cache_hit_response(r, cached, t0)
+                    resp = self._cache_hit_response(r, cached, t0)
+                    self._observe_latency(resp)
+                    self._finish_trace(r, resp)
+                    hits[i] = resp
                 else:
                     misses.append(r)
             if hits:
@@ -501,6 +625,10 @@ class QueryServer:
             self._bump("batches")
             return [self.handle(reqs[0])]
         t0 = time.perf_counter()
+        for r in reqs:
+            self._close_queue_span(r)
+        traces = [t for t in (self._trace_of(r) for r in reqs)
+                  if t is not None]
         window_dl = self._window_deadline(reqs)
         kws = [self._query_kwargs(r) for r in reqs]
         batch = [{"pos_ids": r.pos_ids, "neg_ids": r.neg_ids,
@@ -513,12 +641,21 @@ class QueryServer:
         def run():
             return self.engine.query_batch(batch, deadline_s=window_dl)
         try:
-            if self.retry_policy is not None:
-                outs = self.retry_policy.call(
-                    run, deadline_s=window_dl,
-                    on_retry=lambda a, e: self._bump("retries"))
-            else:
-                outs = run()
+            # every trace in the window rides ambient through the shared
+            # device phase — OUTSIDE the retry wrapper, so each attempt
+            # leaves its own fit/device-round spans on each trace
+            with obs_trace.attach(traces):
+                # window assembly (kwargs, batch dicts, cache keys) is
+                # shared pre-device wall — billed like the fit span
+                obs_trace.add_span_active("window", t0,
+                                          time.perf_counter() - t0,
+                                          {"window": len(reqs)})
+                if self.retry_policy is not None:
+                    outs = self.retry_policy.call(
+                        run, deadline_s=window_dl,
+                        on_retry=lambda a, e: self._note_retry())
+                else:
+                    outs = run()
         except DeadlineExceeded as e:
             wall = time.perf_counter() - t0
             resps = [QueryResponse(r.request_id, False, None, f"{e}",
@@ -526,6 +663,9 @@ class QueryServer:
                      for r in reqs]
             self._bump_many({"served": len(reqs), "errors": len(reqs),
                              "latency_sum": wall * len(reqs)})
+            for r, resp in zip(reqs, resps):
+                self._observe_latency(resp)
+                self._finish_trace(r, resp)
             return resps
         except Exception:  # noqa: BLE001 — never take down the batch
             # sequential fallback: each request retried alone. The failed
@@ -579,9 +719,14 @@ class QueryServer:
                 if out.stats.get("batch_n_shards",
                                  out.stats.get("n_shards", 1)) > 1:
                     upd["sharded_queries"] += 1
-                self._cache_store(key, out)
+                tr = self._trace_of(r)
+                with obs_trace.attach([tr] if tr is not None else []):
+                    with obs_trace.span("cache", {"op": "store"}):
+                        self._cache_store(key, out)
             upd["errors"] += 0 if resp.ok else 1
             upd["latency_sum"] += resp.latency_s
+            self._observe_latency(resp)
+            self._finish_trace(r, resp)
             resps.append(resp)
         self._bump_many(upd)
         return resps
@@ -592,11 +737,15 @@ class QueryServer:
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
-    @staticmethod
-    def _reject(out: "queue.Queue[QueryResponse]", req,
+    def _reject(self, out: "queue.Queue[QueryResponse]", req,
                 exc: BaseException) -> "queue.Queue[QueryResponse]":
-        out.put(QueryResponse(req.request_id, False, None, f"{exc}",
-                              error_type=_error_type(exc)))
+        resp = QueryResponse(req.request_id, False, None, f"{exc}",
+                             error_type=_error_type(exc))
+        # rejected requests get finished traces too: a shed/expired
+        # request's admission + queue spans explain WHERE it died
+        self._close_queue_span(req)
+        self._finish_trace(req, resp)
+        out.put(resp)
         return out
 
     def _request_cost(self, req) -> float:
@@ -617,6 +766,11 @@ class QueryServer:
         """
         if self._closed:
             raise ServerClosed("server is closed; submit refused")
+        t_sub = time.perf_counter()
+        # trace born at ADMISSION (tracing enabled and none attached yet
+        # — the HTTP layer creates its own to honor X-Request-Id)
+        if isinstance(req, QueryRequest) and req.trace is None:
+            req.trace = self.obs.new_trace()
         out: "queue.Queue[QueryResponse]" = queue.Queue(maxsize=1)
         try:
             self._fault("submit")    # serve-layer chaos seam
@@ -644,6 +798,14 @@ class QueryServer:
                 return self._reject(out, req, RateLimited(
                     f"source {src!r} exceeded "
                     f"{self.rate_limit[0]:g} req/s"))
+        tr = self._trace_of(req)
+        if tr is not None:
+            # admission span: deadline stamp + rate limit + shed checks;
+            # the queue span opens here (mark) and closes at handle
+            # entry, so window-formation wait is INSIDE it
+            tr.add_span("admission", t_sub,
+                        time.perf_counter() - t_sub)
+            tr.mark("queued")
         admitted, evicted = self._q.offer((req, out),
                                           cost=self._request_cost(req))
         if not admitted:
@@ -710,6 +872,10 @@ class QueryServer:
         under) and applies before the next window opens. In drain mode
         (close(drain=True)) the loop exits only once the queue is empty
         — every queued request gets a real answer."""
+        with obs_profile.bind_registry(self.obs.registry):
+            self._loop_body()
+
+    def _loop_body(self):
         while not self._stop.is_set():
             first = self._pop_live(0.05)
             if first is None:
@@ -834,6 +1000,10 @@ class QueryServer:
             # append durability overhead next to the serving latencies —
             # read as ONE locked pair (lsn, stats): a concurrent append
             # must not yield an lsn from after it with stats from before
+            # durability_snapshot deep-copies under the catalog lock —
+            # the caller OWNS every nested value in this summary; no
+            # block may alias live server state (a reader iterating a
+            # live dict races the serving thread)
             dur = cat.durability_snapshot()
             if dur is not None:
                 out["durable"] = dur
@@ -845,8 +1015,15 @@ class QueryServer:
                 "replayed_appends": rec.replayed_appends,
                 "replayed_deletes": rec.replayed_deletes,
                 "torn_tail": rec.torn_tail,
-                "quarantined": list(rec.quarantined),
-                "errors": list(rec.errors)}
+                # copy.deepcopy, not list(): RecoveryReport is mutable
+                # and shared with the engine — entries must not alias
+                "quarantined": copy.deepcopy(rec.quarantined),
+                "errors": copy.deepcopy(rec.errors)}
+        out["obs"] = {"metrics_enabled": self.obs.metrics_enabled,
+                      "tracing_enabled": self.obs.tracing_enabled,
+                      "traces_buffered": len(self.obs.traces),
+                      "latency_p50_s": self._h_latency.quantile(0.5),
+                      "latency_p99_s": self._h_latency.quantile(0.99)}
         return out
 
 

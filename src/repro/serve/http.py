@@ -17,6 +17,16 @@ Routes:
                  -> 200 {"ok": true, "info": {...}}
   GET  /healthz  -> 200 {"health": "ok"|"degraded"} | 503 ("draining")
   GET  /stats    -> 200 QueryServer.summary() (JSON-sanitised)
+  GET  /metrics  -> 200 Prometheus text exposition (the server's
+                    unified metrics registry, DESIGN.md §17)
+  GET  /traces?n=K -> 200 {"traces": [...], "slow": [...]} — the K most
+                    recent finished query traces + slow-query log
+
+Request ids: an inbound ``X-Request-Id`` header becomes the trace id
+for that query (tracing enabled), so a caller's correlation id follows
+the request through admission, device rounds, and the slow-query log;
+responses echo it back as ``X-Request-Id`` and as ``trace_id`` in the
+JSON body. Without the header the server mints one.
 
 Error contract: the typed taxonomy maps to HTTP statuses via
 ``repro.serve.policy.http_status_for`` — ``rate_limited`` -> 429,
@@ -218,9 +228,13 @@ class HttpFrontEnd:
                 method, path, headers, body = parsed
                 keep_alive = headers.get("connection", "").lower() \
                     != "close"
+                extra_headers: Optional[Dict[str, str]] = None
                 try:
-                    status, payload = await self._dispatch(method, path,
-                                                           body)
+                    res = await self._dispatch(method, path, headers,
+                                               body)
+                    status, payload = res[0], res[1]
+                    if len(res) > 2:
+                        extra_headers = res[2]
                 except _BadRequest as e:
                     status, payload = e.status, {"ok": False,
                                                  "error": str(e),
@@ -231,7 +245,8 @@ class HttpFrontEnd:
                                             "error_type": "internal"}
                 self._note(path, status)
                 await self._write_response(writer, status, payload,
-                                           keep_alive)
+                                           keep_alive,
+                                           extra_headers=extra_headers)
                 if not keep_alive:
                     break
         except (_BadRequest, asyncio.IncompleteReadError,
@@ -277,16 +292,27 @@ class HttpFrontEnd:
         return method, path, headers, body
 
     async def _write_response(self, writer: asyncio.StreamWriter,
-                              status: int, payload: Dict,
-                              keep_alive: bool) -> None:
-        data = json.dumps(jsonable(payload)).encode()
+                              status: int, payload,
+                              keep_alive: bool, *,
+                              extra_headers: Optional[Dict[str, str]]
+                              = None) -> None:
+        # dict payloads go out as JSON; str payloads (the /metrics
+        # exposition) as text/plain with the Prometheus version tag
+        if isinstance(payload, str):
+            data = payload.encode("utf-8")
+            ctype = "text/plain; version=0.0.4; charset=utf-8"
+        else:
+            data = json.dumps(jsonable(payload)).encode()
+            ctype = "application/json"
         reason = _REASONS.get(status, "Unknown")
         head = [f"HTTP/1.1 {status} {reason}",
-                "Content-Type: application/json",
+                f"Content-Type: {ctype}",
                 f"Content-Length: {len(data)}",
                 f"Connection: {'keep-alive' if keep_alive else 'close'}"]
         if status in (429, 503):
             head.append("Retry-After: 1")     # back-pressure, not failure
+        for k, v in (extra_headers or {}).items():
+            head.append(f"{k}: {v}")
         writer.write(("\r\n".join(head) + "\r\n\r\n").encode() + data)
         await writer.drain()
 
@@ -305,13 +331,16 @@ class HttpFrontEnd:
     # routing
     # ------------------------------------------------------------------
     async def _dispatch(self, method: str, path: str,
-                        body: bytes) -> Tuple[int, Dict]:
-        path = path.split("?", 1)[0]
+                        headers: Dict[str, str], body: bytes):
+        """Route one request. Returns ``(status, payload)`` or
+        ``(status, payload, extra_response_headers)``; a str payload is
+        written as text/plain (the Prometheus exposition)."""
+        path, _, qs = path.partition("?")
         if path == "/query":
             if method != "POST":
                 return 405, {"ok": False, "error": "POST required",
                              "error_type": "method_not_allowed"}
-            return await self._query(self._parse_json(body))
+            return await self._query(self._parse_json(body), headers)
         if path == "/ingest":
             if method != "POST":
                 return 405, {"ok": False, "error": "POST required",
@@ -328,8 +357,31 @@ class HttpFrontEnd:
                              "error_type": "method_not_allowed"}
             return 200, {"ok": True, **self.server.summary(),
                          "http": self.http_stats()}
+        if path == "/metrics":
+            if method != "GET":
+                return 405, {"ok": False, "error": "GET required",
+                             "error_type": "method_not_allowed"}
+            return 200, self.server.obs.render_prometheus()
+        if path == "/traces":
+            if method != "GET":
+                return 405, {"ok": False, "error": "GET required",
+                             "error_type": "method_not_allowed"}
+            return self._traces(qs)
         return 404, {"ok": False, "error": f"no route {path!r}",
                      "error_type": "not_found"}
+
+    def _traces(self, qs: str) -> Tuple[int, Dict]:
+        n = 20
+        for part in qs.split("&"):
+            k, _, v = part.partition("=")
+            if k == "n":
+                try:
+                    n = max(1, min(int(v), 1000))
+                except ValueError:
+                    raise _BadRequest("'n' must be an integer")
+        store = self.server.obs.traces
+        return 200, {"ok": True, "traces": store.recent(n),
+                     "slow": store.slow_log(n)}
 
     @staticmethod
     def _parse_json(body: bytes) -> Dict:
@@ -368,7 +420,7 @@ class HttpFrontEnd:
     # ------------------------------------------------------------------
     # handlers
     # ------------------------------------------------------------------
-    async def _query(self, body: Dict) -> Tuple[int, Dict]:
+    async def _query(self, body: Dict, headers: Dict[str, str]):
         _check_fields(body, _QUERY_FIELDS)
         pos = _require_int_list(body, "pos_ids")
         neg = _require_int_list(body, "neg_ids")
@@ -382,12 +434,25 @@ class HttpFrontEnd:
         deadline_s = None if timeout_ms is None \
             else deadline_after(timeout_ms / 1e3)
         t0 = time.perf_counter()
+        # the trace is born HERE (not in submit) so a caller-supplied
+        # X-Request-Id becomes the trace id end to end (length-capped:
+        # the id lands in logs and the trace ring verbatim)
+        rid = headers.get("x-request-id", "")[:128] or None
+        trace = self.server.obs.new_trace(rid)
         req = QueryRequest(self._next_id(), pos, neg, model,
                            kwargs=kwargs, deadline_s=deadline_s,
-                           source=str(body.get("source", "default")))
+                           source=str(body.get("source", "default")),
+                           trace=trace)
         status, payload, resp = await self._resolve(req)
+        if resp is None and trace is not None:
+            # submit refused (ServerClosed) before the server could own
+            # the trace — finish it here so nothing dangles
+            self.server.obs.observe_trace(
+                trace, status=payload.get("error_type", "shutdown"))
         payload["request_id"] = req.request_id
         payload["e2e_ms"] = round(1e3 * (time.perf_counter() - t0), 3)
+        if trace is not None:
+            payload["trace_id"] = trace.trace_id
         if status == 200:
             res = resp.result
             payload.update({
@@ -400,6 +465,8 @@ class HttpFrontEnd:
                 "latency_ms": round(1e3 * resp.latency_s, 3),
                 "cache": resp.info.get("cache", "miss"),
             })
+        if trace is not None:
+            return status, payload, {"X-Request-Id": trace.trace_id}
         return status, payload
 
     async def _ingest(self, body: Dict) -> Tuple[int, Dict]:

@@ -1,0 +1,367 @@
+"""Observability layer (ISSUE 10 / DESIGN.md §17): metrics registry,
+profiling hooks, cache instrumentation, and summary() aliasing.
+
+Contracts pinned here:
+  * Counter / Gauge / Histogram primitives: typed registration (name
+    collisions across kinds fail loudly; same name+kind returns the
+    shared instance), label children, fixed-bucket quantiles derivable
+    without stored samples;
+  * ``render_prometheus`` emits valid text exposition v0.0.4 — every
+    sample line parses, histograms carry cumulative ``_bucket{le=}`` +
+    ``_sum`` + ``_count``, HELP/TYPE headers come once per family;
+  * scrape-time collectors: one locked counter dict published through
+    ``register_collector`` with no hot-path double bookkeeping, and a
+    collector that throws surfaces as ``obs_collector_errors`` instead
+    of killing the scrape;
+  * ``obs.profile``: thread-bound registry, global enable switch, sites
+    land in ``profile_seconds{site=}``;
+  * ResultCache: per-entry hit counts, age-at-eviction histogram, and
+    ``cache_*`` metrics via ``attach`` — same numbers as ``stats()``;
+  * ``QueryServer.summary()`` returns SNAPSHOTS: mutating a returned
+    nested dict (recovery report, durability block) must not write
+    through to live server state.
+"""
+import re
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import Observability
+from repro.obs import profile as obs_profile
+from repro.obs.metrics import (AGE_BUCKETS_S, Counter, Gauge, Histogram,
+                               LATENCY_BUCKETS_S, MetricsRegistry,
+                               default_registry)
+from repro.serve.cache import ResultCache
+
+
+# ----------------------------------------------------------------------
+# registry primitives
+# ----------------------------------------------------------------------
+
+def test_counter_gauge_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", "requests")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5.0
+    g = reg.gauge("depth", "queue depth")
+    g.set(7)
+    g.inc(2)
+    g.dec()
+    assert g.value == 8.0
+
+
+def test_counter_labels_are_independent_children():
+    reg = MetricsRegistry()
+    c = reg.counter("hits_total", "hits", labelnames=("route",))
+    c.inc(1, route="/query")
+    c.inc(2, route="/stats")
+    assert reg.value("hits_total", route="/query") == 1.0
+    assert reg.value("hits_total", route="/stats") == 2.0
+
+
+def test_register_same_name_same_kind_returns_shared_instance():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "x")
+    b = reg.counter("x_total", "x")
+    assert a is b
+    a.inc()
+    assert b.value == 1.0
+
+
+def test_register_kind_mismatch_fails_loudly():
+    reg = MetricsRegistry()
+    reg.counter("thing", "x")
+    with pytest.raises((TypeError, ValueError)):
+        reg.gauge("thing", "x")
+
+
+def test_histogram_quantiles_without_stored_samples():
+    h = Histogram("lat_seconds", "latency", buckets=LATENCY_BUCKETS_S)
+    rng = np.random.default_rng(0)
+    xs = rng.uniform(0.001, 0.5, size=2000)
+    for x in xs:
+        h.observe(float(x))
+    for q in (0.5, 0.99):
+        est = h.quantile(q)
+        true = float(np.quantile(xs, q))
+        # bucket-interpolated: correct to within the bucket's width
+        lo = max(b for b in LATENCY_BUCKETS_S if b <= true)
+        hi = min(b for b in LATENCY_BUCKETS_S if b >= true)
+        assert lo * 0.99 <= est <= hi * 1.01, (q, est, true)
+    assert h.count == 2000
+    assert h.sum == pytest.approx(float(xs.sum()), rel=1e-6)
+
+
+def test_histogram_empty_and_overflow_bucket():
+    h = Histogram("h_seconds", "h", buckets=(0.01, 0.1))
+    assert h.quantile(0.5) == 0.0
+    h.observe(5.0)              # beyond the last bound -> +Inf bucket
+    # the +Inf bucket has no upper edge; quantiles report its lower bound
+    assert h.quantile(0.99) == pytest.approx(0.1)
+
+
+# ----------------------------------------------------------------------
+# Prometheus text exposition
+# ----------------------------------------------------------------------
+
+# one sample line: name{labels} value  (labels optional)
+_SAMPLE_RE = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*'
+    r'(\{[a-zA-Z_][a-zA-Z0-9_]*="[^"]*"(,[a-zA-Z_][a-zA-Z0-9_]*='
+    r'"[^"]*")*\})? '
+    r'[-+]?([0-9]*\.?[0-9]+([eE][-+]?[0-9]+)?|Inf|NaN)$')
+
+
+def _assert_valid_exposition(text: str) -> None:
+    families = {}
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("# HELP") or line.startswith("# TYPE"):
+            parts = line.split(None, 3)
+            assert len(parts) >= 3, line
+            if parts[1] == "TYPE":
+                # TYPE comes at most once per family
+                assert parts[2] not in families, line
+                families[parts[2]] = parts[3]
+            continue
+        assert _SAMPLE_RE.match(line), f"unparseable sample: {line!r}"
+
+
+def test_render_prometheus_is_valid_and_complete():
+    reg = MetricsRegistry()
+    reg.counter("a_total", "a counter").inc(3)
+    reg.gauge("b_gauge", "a gauge", labelnames=("x",)).set(1.5, x="y")
+    h = reg.histogram("c_seconds", "a histogram", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    text = reg.render_prometheus()
+    _assert_valid_exposition(text)
+    # cumulative buckets: le="0.1" < le="1" < le="+Inf" == count
+    m = {ln.split(" ")[0]: float(ln.split(" ")[1])
+         for ln in text.splitlines()
+         if ln and not ln.startswith("#")}
+    assert m['c_seconds_bucket{le="0.1"}'] == 1
+    assert m['c_seconds_bucket{le="1"}'] == 2
+    assert m['c_seconds_bucket{le="+Inf"}'] == 3
+    assert m["c_seconds_count"] == 3
+    assert m["c_seconds_sum"] == pytest.approx(5.55)
+    assert m["a_total"] == 3
+
+
+def test_collector_publishes_external_counters():
+    reg = MetricsRegistry()
+    ledger = {"served": 0}
+
+    def collect():
+        yield ("srv_served_total", "counter", {}, ledger["served"])
+
+    reg.register_collector(collect)
+    ledger["served"] = 42
+    assert reg.value("srv_served_total") == 42.0
+    assert "srv_served_total 42" in reg.render_prometheus()
+
+
+def test_broken_collector_does_not_kill_scrape():
+    reg = MetricsRegistry()
+    reg.counter("ok_total", "fine").inc()
+
+    def broken():
+        raise RuntimeError("boom")
+        yield  # pragma: no cover
+
+    reg.register_collector(broken)
+    text = reg.render_prometheus()
+    _assert_valid_exposition(text)
+    assert "ok_total 1" in text
+    assert "obs_collector_errors" in text
+
+
+# ----------------------------------------------------------------------
+# profiling hooks
+# ----------------------------------------------------------------------
+
+def test_profile_records_into_bound_registry():
+    reg = MetricsRegistry()
+    prev = obs_profile.enabled()
+    obs_profile.set_enabled(True)
+    try:
+        with obs_profile.bind_registry(reg):
+            with obs_profile.profile("device_sync"):
+                pass
+            obs_profile.record("jit_dispatch", 0.25)
+        assert reg.value("profile_seconds_count", site="device_sync") == 1
+        assert reg.value("profile_seconds_sum",
+                         site="jit_dispatch") == pytest.approx(0.25)
+    finally:
+        obs_profile.set_enabled(prev)
+
+
+def test_profile_disabled_is_noop():
+    reg = MetricsRegistry()
+    prev = obs_profile.enabled()
+    obs_profile.set_enabled(False)
+    try:
+        with obs_profile.bind_registry(reg):
+            with obs_profile.profile("device_sync"):
+                pass
+            obs_profile.record("wal_fsync", 1.0)
+        assert reg.value("profile_seconds_count", site="device_sync") == 0
+        assert reg.value("profile_seconds_sum", site="wal_fsync") == 0.0
+    finally:
+        obs_profile.set_enabled(prev)
+
+
+def test_profile_binding_is_per_thread():
+    reg_a, reg_b = MetricsRegistry(), MetricsRegistry()
+    prev = obs_profile.enabled()
+    obs_profile.set_enabled(True)
+    done = threading.Event()
+
+    def other():
+        with obs_profile.bind_registry(reg_b):
+            obs_profile.record("compact", 1.0)
+        done.set()
+
+    try:
+        with obs_profile.bind_registry(reg_a):
+            t = threading.Thread(target=other)
+            t.start()
+            t.join()
+            obs_profile.record("compact", 2.0)
+        assert done.is_set()
+        assert reg_a.value("profile_seconds_sum",
+                           site="compact") == pytest.approx(2.0)
+        assert reg_b.value("profile_seconds_sum",
+                           site="compact") == pytest.approx(1.0)
+    finally:
+        obs_profile.set_enabled(prev)
+
+
+def test_default_registry_is_a_singleton():
+    assert default_registry() is default_registry()
+
+
+# ----------------------------------------------------------------------
+# cache instrumentation (satellite b)
+# ----------------------------------------------------------------------
+
+class _Res:
+    def __init__(self, nbytes=100):
+        self.ids = np.zeros(nbytes // 8, dtype=np.int64)
+        self.scores = np.zeros(0, dtype=np.float32)
+
+
+def test_cache_per_entry_hits_and_report():
+    c = ResultCache(max_bytes=1 << 20, max_entries=16)
+    k1 = ("a",) + (0, 0)
+    k2 = ("b",) + (0, 0)
+    c.put(k1, _Res())
+    c.put(k2, _Res())
+    for _ in range(3):
+        assert c.get(k1) is not None
+    assert c.get(k2) is not None
+    rep = c.entry_report(10)
+    assert [r["hits"] for r in rep] == [3, 1]
+    assert all(r["age_s"] >= 0 and r["nbytes"] > 0 for r in rep)
+
+
+def test_cache_age_histogram_and_registry_attach():
+    reg = MetricsRegistry()
+    c = ResultCache(max_bytes=1 << 20, max_entries=2)
+    c.attach(reg)
+    c.put(("a",) + (0, 0), _Res())
+    c.put(("b",) + (0, 0), _Res())
+    c.get(("a",) + (0, 0))
+    c.put(("c",) + (0, 0), _Res())   # evicts LRU tail -> one age sample
+    assert reg.value("cache_age_at_eviction_seconds_count") == 1
+    assert c.age_at_eviction_quantile(0.5) >= 0.0
+    # scrape and stats() agree — one source of truth
+    st = c.stats()
+    assert reg.value("cache_hits_total") == st["hits"] == 1
+    assert reg.value("cache_evictions_total") == st["evictions"] == 1
+    assert reg.value("cache_entries") == len(c) == 2
+    assert reg.value("cache_hit_rate") == pytest.approx(st["hit_rate"])
+    _assert_valid_exposition(reg.render_prometheus())
+
+
+def test_cache_stale_invalidation_records_ages():
+    reg = MetricsRegistry()
+    c = ResultCache()
+    c.attach(reg)
+    c.put(("a",) + (0, 0), _Res())
+    c.put(("b",) + (1, 0), _Res())
+    dropped = c.invalidate_epoch(1, 0)
+    assert dropped == 1
+    assert reg.value("cache_age_at_eviction_seconds_count") == 1
+    assert reg.value("cache_stale_evictions_total") == 1
+
+
+# ----------------------------------------------------------------------
+# summary() snapshot isolation (satellite a) + obs block
+# ----------------------------------------------------------------------
+
+ENG = dict(n_subsets=4, subset_dim=4, block=64)
+
+
+def _data(n=300, d=16, seed=0):
+    return np.random.default_rng(seed).normal(
+        0, 1, (n, d)).astype(np.float32)
+
+
+def test_summary_returns_snapshots_not_live_references(tmp_path):
+    from repro.core.engine import SearchEngine
+    from repro.serve.engine import QueryServer
+    eng = SearchEngine(_data(), **ENG, live=True,
+                       data_dir=str(tmp_path / "cat"), wal_sync="always")
+    srv = QueryServer(eng, max_results=10)
+    try:
+        s1 = srv.summary()
+        assert "durable" in s1
+        # mutate everything nested the caller can reach; the server's
+        # next summary must be unaffected
+        for k in list(s1["durable"]):
+            s1["durable"][k] = "poisoned"
+        if "recovery" in s1:
+            for k in list(s1["recovery"]):
+                s1["recovery"][k] = "poisoned"
+        s2 = srv.summary()
+        assert all(v != "poisoned" for v in s2["durable"].values())
+        if "recovery" in s2:
+            assert all(v != "poisoned"
+                       for v in s2["recovery"].values())
+    finally:
+        srv.close()
+
+
+def test_summary_carries_obs_block_and_latency_quantiles():
+    from repro.core.engine import SearchEngine
+    from repro.serve.engine import QueryServer
+    eng = SearchEngine(_data(), **ENG, live=True)
+    srv = QueryServer(eng, max_results=10)
+    try:
+        r = srv.handle(_mk_req(srv))
+        assert r.ok
+        s = srv.summary()
+        assert s["obs"]["metrics_enabled"] is True
+        assert s["obs"]["tracing_enabled"] is True
+        assert s["obs"]["latency_p50_s"] > 0.0
+        assert s["obs"]["traces_buffered"] >= 1
+    finally:
+        srv.close()
+
+
+def _mk_req(srv):
+    from repro.serve.engine import QueryRequest
+    req = QueryRequest(1, list(range(8)), list(range(50, 80)), "dbranch")
+    req.trace = srv.obs.new_trace()
+    return req
+
+
+def test_observability_disabled_creates_no_traces():
+    obs = Observability(metrics_enabled=False, tracing_enabled=False)
+    assert obs.new_trace() is None
+    assert len(obs.traces) == 0

@@ -1,0 +1,307 @@
+"""Per-query tracing (ISSUE 10 / DESIGN.md §17): propagation through
+every serving layer, under faults, over a real socket.
+
+Contracts pinned here:
+  * an HTTP query's trace carries admission, queue, fit, >=1
+    device_round, rank and cache spans, and their durations sum to
+    >=90% of the measured request wall — the trace accounts for where
+    the time went instead of sampling it;
+  * fault-injected retries leave per-attempt evidence: a retry marker
+    plus a second fit/device-round group, so a slow query's trace shows
+    WHICH attempt burned the budget;
+  * overflow-retry rounds (cold capacity hints) appear as extra
+    device_round spans;
+  * a deadline-expired request still finishes its trace with the typed
+    status — rejected work is visible work;
+  * trace ids are unique across concurrent submits, a caller-supplied
+    ``X-Request-Id`` becomes the trace id end-to-end, and ``/metrics``
+    + ``/traces`` expose the whole thing over the wire;
+  * traces slower than the threshold land in the slow-query log as
+    parseable JSON lines.
+"""
+import contextlib
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+
+from repro.core.engine import SearchEngine
+from repro.core.errors import deadline_after
+from repro.obs import Observability
+from repro.obs.trace import Trace
+from repro.serve.cache import ResultCache
+from repro.serve.engine import QueryRequest, QueryServer
+from repro.serve.faults import FaultInjector, FaultSpec
+from repro.serve.http import HttpFrontEnd
+from repro.serve.policy import RetryPolicy
+
+ENG = dict(n_subsets=4, subset_dim=4, block=64)
+
+
+def _data(n=500, d=16, seed=0):
+    return np.random.default_rng(seed).normal(
+        0, 1, (n, d)).astype(np.float32)
+
+
+def _labels():
+    return list(range(10)), list(range(100, 150))
+
+
+@contextlib.contextmanager
+def _serving(srv):
+    srv.start()
+    fe = HttpFrontEnd(srv)
+    host, port = fe.start()
+    try:
+        yield f"http://{host}:{port}"
+    finally:
+        fe.close()
+        srv.close(drain=False)
+
+
+def _post(base, path, body, headers=None, timeout=120):
+    req = urllib.request.Request(
+        base + path, data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json", **(headers or {})},
+        method="POST")
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, json.loads(r.read()), dict(r.headers)
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read()), dict(e.headers)
+
+
+def _get(base, path, timeout=30):
+    with urllib.request.urlopen(base + path, timeout=timeout) as r:
+        return r.status, r.headers.get("Content-Type", ""), r.read()
+
+
+def _span_names(trace_dict):
+    return [s["name"] for s in trace_dict["spans"]]
+
+
+# ----------------------------------------------------------------------
+# Trace primitives
+# ----------------------------------------------------------------------
+
+def test_trace_span_and_mark_arithmetic():
+    tr = Trace("t1")
+    with tr.span("a"):
+        time.sleep(0.01)
+    tr.mark("q")
+    time.sleep(0.01)
+    tr.span_from_mark("q", "queue")
+    tr.span_from_mark("q", "queue")          # consumed mark: no-op
+    tr.finish("ok")
+    tr.finish("late")                        # idempotent: first wins
+    d = tr.to_dict()
+    assert d["status"] == "ok"
+    assert _span_names(d) == ["a", "queue"]
+    assert all(s["dur_s"] >= 0.009 for s in d["spans"])
+    assert tr.wall_s >= 0.02
+
+
+# ----------------------------------------------------------------------
+# the end-to-end acceptance trace (real socket)
+# ----------------------------------------------------------------------
+
+def test_http_trace_covers_90_percent_of_wall():
+    eng = SearchEngine(_data(), **ENG, live=True)
+    srv = QueryServer(eng, max_results=20, cache=ResultCache())
+    pos, neg = _labels()
+    with _serving(srv) as base:
+        st, body, _ = _post(base, "/query",
+                            {"pos_ids": pos, "neg_ids": neg})
+        assert st == 200 and body["ok"]
+        tid = body["trace_id"]
+    tr = srv.obs.traces.get(tid)
+    assert tr is not None and tr["status"] == "ok"
+    names = _span_names(tr)
+    for required in ("admission", "queue", "fit", "device_round",
+                     "rank", "cache"):
+        assert required in names, (required, names)
+    covered = sum(s["dur_s"] for s in tr["spans"])
+    assert covered >= 0.90 * tr["wall_s"], \
+        f"spans cover {covered / tr['wall_s']:.1%} of wall ({names})"
+
+
+def test_cache_hit_trace_has_cache_span_and_fresh_id():
+    eng = SearchEngine(_data(), **ENG, live=True)
+    srv = QueryServer(eng, max_results=20, cache=ResultCache())
+    pos, neg = _labels()
+    q = {"pos_ids": pos, "neg_ids": neg}
+    with _serving(srv) as base:
+        _, b1, _ = _post(base, "/query", q)
+        _, b2, _ = _post(base, "/query", q)
+        assert b2["cache"] == "hit"
+        assert b2["trace_id"] != b1["trace_id"]
+    tr = srv.obs.traces.get(b2["trace_id"])
+    names = _span_names(tr)
+    assert "cache" in names
+    # a hit never touches the device
+    assert "device_round" not in names and "fit" not in names
+
+
+# ----------------------------------------------------------------------
+# traces under fault injection (satellite c)
+# ----------------------------------------------------------------------
+
+def test_retry_attempts_visible_in_trace():
+    inj = FaultInjector(specs=[FaultSpec("fused_query", at_calls=(1,))])
+    eng = SearchEngine(_data(), **ENG, live=True, faults=inj)
+    srv = QueryServer(eng, max_results=20,
+                      retry_policy=RetryPolicy(max_attempts=3,
+                                               backoff_s=0.001))
+    srv.start()
+    try:
+        pos, neg = _labels()
+        req = QueryRequest(1, pos, neg, "dbranch")
+        resp = srv.submit(req).get(timeout=120)
+        assert resp.ok
+        assert srv.stats["retries"] == 1
+        tr = srv.obs.traces.get(resp.info["trace_id"])
+        names = _span_names(tr)
+        assert names.count("retry") == 1
+        # both attempts fitted and reached the device: the failed
+        # attempt's spans survive next to the successful one's
+        assert names.count("fit") == 2
+        assert names.count("device_round") >= 2
+        assert names.index("retry") > names.index("fit")
+    finally:
+        srv.close()
+
+
+def test_overflow_retry_rounds_leave_extra_device_round_spans():
+    # capacity_frac ~0 forces the cold gather capacity to 1 row per
+    # subset: the first round overflows and the engine re-queues at
+    # observed size — the trace must show the extra round(s)
+    eng_tiny = SearchEngine(_data(), **ENG, live=True,
+                            capacity_frac=1e-6)
+    srv = QueryServer(eng_tiny, max_results=20)
+    srv.start()
+    try:
+        pos, neg = _labels()
+        resp = srv.submit(QueryRequest(1, pos, neg,
+                                       "dbranch")).get(timeout=120)
+        assert resp.ok
+        tr = srv.obs.traces.get(resp.info["trace_id"])
+        rounds = [s for s in tr["spans"] if s["name"] == "device_round"]
+        assert len(rounds) >= 2, _span_names(tr)
+    finally:
+        srv.close()
+
+
+def test_deadline_expired_request_still_finishes_its_trace():
+    eng = SearchEngine(_data(), **ENG, live=True)
+    srv = QueryServer(eng, max_results=20)
+    srv.start()
+    try:
+        pos, neg = _labels()
+        req = QueryRequest(1, pos, neg, "dbranch",
+                           deadline_s=deadline_after(-1.0))
+        resp = srv.submit(req).get(timeout=30)
+        assert not resp.ok and resp.error_type == "deadline_exceeded"
+        tr = srv.obs.traces.get(resp.info["trace_id"])
+        assert tr is not None
+        assert tr["status"] == "deadline_exceeded"
+    finally:
+        srv.close()
+
+
+def test_trace_ids_unique_across_concurrent_submits():
+    eng = SearchEngine(_data(), **ENG, live=True)
+    srv = QueryServer(eng, max_results=20, queue_depth=256,
+                      cache=ResultCache())
+    srv.start()
+    ids, lock = [], threading.Lock()
+    pos, neg = _labels()
+
+    def one(i):
+        resp = srv.submit(QueryRequest(i, pos, neg,
+                                       "dbranch")).get(timeout=120)
+        with lock:
+            ids.append(resp.info.get("trace_id"))
+
+    try:
+        threads = [threading.Thread(target=one, args=(i,))
+                   for i in range(100)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert len(ids) == 100
+        assert None not in ids
+        assert len(set(ids)) == 100
+    finally:
+        srv.close()
+
+
+# ----------------------------------------------------------------------
+# wire surface: /metrics, /traces, X-Request-Id
+# ----------------------------------------------------------------------
+
+def test_metrics_endpoint_is_prometheus_text():
+    eng = SearchEngine(_data(), **ENG, live=True)
+    srv = QueryServer(eng, max_results=20, cache=ResultCache())
+    pos, neg = _labels()
+    with _serving(srv) as base:
+        _post(base, "/query", {"pos_ids": pos, "neg_ids": neg})
+        st, ctype, raw = _get(base, "/metrics")
+        assert st == 200
+        assert ctype.startswith("text/plain")
+        assert "version=0.0.4" in ctype
+        text = raw.decode()
+    from test_obs import _assert_valid_exposition
+    _assert_valid_exposition(text)
+    for family in ("server_latency_seconds_bucket", "span_seconds_sum",
+                   "request_seconds_count", "cache_hits_total",
+                   "server_served"):
+        assert family in text, family
+
+
+def test_traces_endpoint_and_x_request_id_honored():
+    eng = SearchEngine(_data(), **ENG, live=True)
+    srv = QueryServer(eng, max_results=20)
+    pos, neg = _labels()
+    with _serving(srv) as base:
+        st, body, hdrs = _post(base, "/query",
+                               {"pos_ids": pos, "neg_ids": neg},
+                               headers={"X-Request-Id": "corr-77"})
+        assert st == 200
+        assert body["trace_id"] == "corr-77"
+        assert hdrs.get("X-Request-Id") == "corr-77"
+        st2, ctype2, raw2 = _get(base, "/traces?n=10")
+        assert st2 == 200 and ctype2.startswith("application/json")
+        payload = json.loads(raw2)
+    ids = [t["trace_id"] for t in payload["traces"]]
+    assert "corr-77" in ids
+    tr = [t for t in payload["traces"] if t["trace_id"] == "corr-77"][0]
+    assert "device_round" in _span_names(tr)
+
+
+def test_slow_query_log_lines_parse(tmp_path):
+    log = tmp_path / "slow.jsonl"
+    obs = Observability(slow_query_s=0.0, slow_log_path=str(log))
+    eng = SearchEngine(_data(), **ENG, live=True)
+    srv = QueryServer(eng, max_results=20, obs=obs)
+    srv.start()
+    try:
+        pos, neg = _labels()
+        resp = srv.submit(QueryRequest(1, pos, neg,
+                                       "dbranch")).get(timeout=120)
+        assert resp.ok
+    finally:
+        srv.close()
+    lines = [json.loads(ln) for ln in
+             log.read_text().strip().splitlines()]
+    assert lines, "no slow-query lines written"
+    entry = lines[0]
+    assert entry["slow_query"] is True
+    assert entry["trace_id"] == resp.info["trace_id"]
+    assert entry["status"] == "ok"
+    assert entry["wall_ms"] > 0
+    assert "fit" in entry["spans"] and "device_round" in entry["spans"]
+    assert obs.traces.slow_log(5)   # in-memory mirror carries it too
